@@ -1,0 +1,35 @@
+"""Shared helpers for the benchmark harness."""
+from __future__ import annotations
+
+import csv
+import os
+import sys
+import time
+
+OUT_DIR = os.environ.get("REPRO_BENCH_OUT", "experiments/bench")
+
+
+def write_csv(name: str, rows: list[dict]) -> str:
+    os.makedirs(OUT_DIR, exist_ok=True)
+    path = os.path.join(OUT_DIR, f"{name}.csv")
+    if rows:
+        with open(path, "w", newline="") as f:
+            w = csv.DictWriter(f, fieldnames=list(rows[0].keys()))
+            w.writeheader()
+            w.writerows(rows)
+    return path
+
+
+def emit(name: str, us_per_call: float, derived: str = "") -> None:
+    """The run.py contract: ``name,us_per_call,derived`` CSV lines on stdout."""
+    print(f"{name},{us_per_call:.3f},{derived}")
+    sys.stdout.flush()
+
+
+class Timer:
+    def __enter__(self):
+        self.t0 = time.perf_counter()
+        return self
+
+    def __exit__(self, *a):
+        self.seconds = time.perf_counter() - self.t0

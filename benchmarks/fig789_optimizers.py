@@ -1,0 +1,41 @@
+"""Paper Figs. 7-9: consensus is optimizer-agnostic (PPO / TRPO / TAC) on the
+'Merge' scenario with the adjacent-vehicle chain topology (mu2 = 0.3820)."""
+from __future__ import annotations
+
+import time
+
+import numpy as np
+
+from benchmarks.common import emit, write_csv
+from benchmarks.fmarl_bench import run_config
+from repro.core import make_strategy
+from repro.core import topology as T
+from repro.rl import MERGE
+
+
+def run(quick: bool = False) -> list[dict]:
+    m, tau = MERGE.n_rl, 10
+    chain = T.chain(m)  # mu2 = 0.3820 at m=5, as in the paper
+    eps = 0.9 / chain.max_degree
+    algos = ["ppo"] if quick else ["ppo", "trpo", "tac"]
+    rows = []
+    for algo in algos:
+        for name, strat in [
+            (f"{algo}/periodic", make_strategy("periodic", tau=tau, m=m)),
+            (f"{algo}/consensus", make_strategy("consensus", tau=tau,
+                                                topo=chain, eps=eps,
+                                                rounds=1, m=m)),
+        ]:
+            t0 = time.perf_counter()
+            row, metrics = run_config(name, strat, env=MERGE, algo=algo)
+            for ep, v in enumerate(np.asarray(metrics["nas"])):
+                rows.append({"config": name, "epoch": ep, "nas": float(v)})
+            emit(f"fig789/{name}", (time.perf_counter() - t0) * 1e6,
+                 f"final_nas={row['final_nas']:.4f};"
+                 f"grad_norm={row['expected_grad_norm']:.4f}")
+    write_csv("fig789_optimizers", rows)
+    return rows
+
+
+if __name__ == "__main__":
+    run()

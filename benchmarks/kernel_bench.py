@@ -1,0 +1,88 @@
+"""Kernel micro-bench: Pallas (interpret) vs jnp oracle wall time + bytes.
+
+Interpret-mode timings do NOT reflect TPU performance (the kernel body runs
+as traced Python); what this bench establishes is (a) correctness at bench
+shapes and (b) the analytic bytes/FLOPs each kernel moves, which feed the
+roofline discussion of the kernel layer.
+"""
+from __future__ import annotations
+
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+import repro.kernels.ops as ops
+import repro.kernels.ref as ref
+from benchmarks.common import emit, write_csv
+from repro.core import topology as T
+from repro.core.topology import mixing_matrix
+
+
+def _time(fn, *args, reps=3):
+    fn(*args)  # compile
+    t0 = time.perf_counter()
+    for _ in range(reps):
+        out = fn(*args)
+    jax.block_until_ready(out)
+    return (time.perf_counter() - t0) / reps * 1e6
+
+
+def run(quick: bool = False) -> list[dict]:
+    rows = []
+    # wkv6: rwkv6-1.6b-like head (B=1, T=256, D=64)
+    b, t, h, d = 1, (64 if quick else 256), 2, 64
+    ks = jax.random.split(jax.random.key(0), 6)
+    r, k, v = (0.3 * jax.random.normal(ks[i], (b, t, h, d)) for i in range(3))
+    w = jax.nn.sigmoid(jax.random.normal(ks[3], (b, t, h, d))) * 0.5 + 0.45
+    u = 0.3 * jax.random.normal(ks[4], (h, d))
+    s0 = jnp.zeros((b, h, d, d))
+    us_ref = _time(lambda: ref.wkv6_ref(r, k, v, w, u, s0))
+    y1, _ = ops.wkv6(r, k, v, w, u, s0, chunk=64)
+    y2, _ = ref.wkv6_ref(r, k, v, w, u, s0)
+    err = float(jnp.abs(y1 - y2).max())
+    bytes_moved = (5 * b * t * h * d + 2 * b * h * d * d) * 4
+    rows.append({"kernel": "wkv6", "shape": f"{b}x{t}x{h}x{d}",
+                 "ref_us": us_ref, "max_err": err, "bytes": bytes_moved})
+    emit("kernels/wkv6", us_ref, f"err={err:.2e};bytes={bytes_moved}")
+
+    # swa attention
+    s = 128 if quick else 256
+    q, kk, vv = (0.5 * jax.random.normal(ks[i], (1, s, 2, 64)) for i in range(3))
+    us_ref = _time(lambda: ref.swa_attention_ref(q, kk, vv, window=64))
+    o1 = ops.swa_attention(q, kk, vv, window=64, block_q=64, block_kv=64)
+    o2 = ref.swa_attention_ref(q, kk, vv, window=64)
+    err = float(jnp.abs(o1 - o2).max())
+    rows.append({"kernel": "swa_attention", "shape": f"1x{s}x2x64",
+                 "ref_us": us_ref, "max_err": err,
+                 "bytes": 4 * s * 2 * 64 * 4})
+    emit("kernels/swa_attention", us_ref, f"err={err:.2e}")
+
+    # consensus step
+    topo = T.ring(8)
+    p = jnp.asarray(mixing_matrix(topo, 0.3), jnp.float32)
+    g = jax.random.normal(ks[5], (8, 1 << (12 if quick else 16)))
+    us_ref = _time(lambda: ref.consensus_step_ref(g, p))
+    err = float(jnp.abs(ops.consensus_step(g, p) - ref.consensus_step_ref(g, p)).max())
+    rows.append({"kernel": "consensus_step", "shape": str(g.shape),
+                 "ref_us": us_ref, "max_err": err, "bytes": g.size * 4 * 2})
+    emit("kernels/consensus_step", us_ref, f"err={err:.2e}")
+
+    # decay accum
+    n = 1 << (12 if quick else 18)
+    acc = jax.random.normal(ks[0], (n,))
+    gg = jax.random.normal(ks[1], (n,))
+    us_ref = _time(lambda: ref.decay_accum_ref(acc, gg, 0.97))
+    err = float(jnp.abs(ops.decay_accum(acc, gg, 0.97)
+                        - ref.decay_accum_ref(acc, gg, 0.97)).max())
+    rows.append({"kernel": "decay_accum", "shape": str(n),
+                 "ref_us": us_ref, "max_err": err, "bytes": n * 4 * 3})
+    emit("kernels/decay_accum", us_ref, f"err={err:.2e}")
+
+    write_csv("kernels", rows)
+    return rows
+
+
+if __name__ == "__main__":
+    run()

@@ -1,0 +1,93 @@
+"""Roofline table from the dry-run artifacts (deliverable g).
+
+Reads experiments/dryrun/*.json and emits the 3-term roofline per
+(arch x shape x mesh): compute / memory / collective seconds, the dominant
+term, MODEL_FLOPS/HLO_FLOPs, and HBM fit. Also writes the markdown table
+consumed by EXPERIMENTS.md §Roofline.
+"""
+from __future__ import annotations
+
+import glob
+import json
+import os
+
+from benchmarks.common import emit, write_csv
+
+DRYRUN_DIR = os.environ.get("REPRO_DRYRUN_DIR", "experiments/dryrun")
+
+
+def load_records(mesh: str | None = "pod16x16") -> list[dict]:
+    recs = []
+    for path in sorted(glob.glob(os.path.join(DRYRUN_DIR, "*.json"))):
+        with open(path) as f:
+            r = json.load(f)
+        if mesh and r.get("mesh") != mesh:
+            continue
+        recs.append(r)
+    return recs
+
+
+def summarize(recs: list[dict]) -> list[dict]:
+    rows = []
+    for r in recs:
+        base = {"arch": r["arch"], "shape": r["shape"], "mesh": r["mesh"]}
+        if "skipped" in r:
+            rows.append({**base, "status": "skip", "note": r["skipped"]})
+            continue
+        if not r.get("ok"):
+            rows.append({**base, "status": "FAIL", "note": r.get("error", "")})
+            continue
+        rf = r["roofline"]
+        prog = r.get("local") or r.get("prefill") or r.get("serve")
+        rows.append({
+            **base,
+            "status": "ok",
+            "t_compute_s": rf["t_compute_s"],
+            "t_memory_s": rf["t_memory_s"],
+            "t_collective_s": rf["t_collective_s"],
+            "dominant": rf["dominant"],
+            "useful_flops_ratio": r.get("useful_flops_ratio", float("nan")),
+            "peak_gib": prog["peak_bytes_est"] / 2**30,
+            "fits_hbm": prog["fits_hbm"],
+            "note": "",
+        })
+    return rows
+
+
+def to_markdown(rows: list[dict]) -> str:
+    hdr = ("| arch | shape | t_comp (s) | t_mem (s) | t_coll (s) | dominant "
+           "| useful/HLO | peak GiB | fits |\n|---|---|---|---|---|---|---|---|---|\n")
+    out = [hdr]
+    for r in rows:
+        if r["status"] != "ok":
+            out.append(f"| {r['arch']} | {r['shape']} | — | — | — | "
+                       f"{r['status']}: {r['note'][:60]} | — | — | — |\n")
+            continue
+        out.append(
+            f"| {r['arch']} | {r['shape']} | {r['t_compute_s']:.3e} | "
+            f"{r['t_memory_s']:.3e} | {r['t_collective_s']:.3e} | "
+            f"**{r['dominant']}** | {r['useful_flops_ratio']:.2f} | "
+            f"{r['peak_gib']:.1f} | {'✓' if r['fits_hbm'] else '✗'} |\n"
+        )
+    return "".join(out)
+
+
+def run(quick: bool = False) -> list[dict]:
+    rows = summarize(load_records("pod16x16"))
+    for r in rows:
+        if r["status"] == "ok":
+            emit(f"roofline/{r['arch']}/{r['shape']}",
+                 max(r["t_compute_s"], r["t_memory_s"], r["t_collective_s"]) * 1e6,
+                 f"dominant={r['dominant']};useful={r['useful_flops_ratio']:.2f};"
+                 f"peak_gib={r['peak_gib']:.1f}")
+        else:
+            emit(f"roofline/{r['arch']}/{r['shape']}", 0.0, r["status"])
+    write_csv("roofline", rows)
+    os.makedirs("experiments", exist_ok=True)
+    with open("experiments/roofline_table.md", "w") as f:
+        f.write(to_markdown(rows))
+    return rows
+
+
+if __name__ == "__main__":
+    run()

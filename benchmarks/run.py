@@ -1,0 +1,57 @@
+"""Benchmark harness entrypoint (deliverable d): one module per paper
+table/figure + the roofline/kernel system benches.
+
+  PYTHONPATH=src python -m benchmarks.run [--quick] [--only NAME]
+
+Prints ``name,us_per_call,derived`` CSV lines; full per-row CSVs land in
+experiments/bench/.
+"""
+from __future__ import annotations
+
+import argparse
+import sys
+import time
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--quick", action="store_true",
+                    help="reduced configs (CI-speed)")
+    ap.add_argument("--only", default=None,
+                    help="run a single bench: table2|fig4|fig5|fig6|fig789|"
+                         "bounds|roofline|kernels")
+    args = ap.parse_args()
+
+    from benchmarks import (  # imported lazily so --only is cheap
+        bounds_bench,
+        fig4_variation,
+        fig5_decay,
+        fig6_consensus,
+        fig789_optimizers,
+        kernel_bench,
+        roofline_bench,
+        table2,
+    )
+
+    benches = {
+        "bounds": bounds_bench.run,          # paper §V analysis
+        "kernels": kernel_bench.run,         # kernel layer
+        "roofline": roofline_bench.run,      # §Roofline from dry-run artifacts
+        "table2": table2.run,                # paper Table II
+        "fig4": fig4_variation.run,          # paper Fig. 4
+        "fig5": fig5_decay.run,              # paper Fig. 5
+        "fig6": fig6_consensus.run,          # paper Fig. 6
+        "fig789": fig789_optimizers.run,     # paper Figs. 7-9
+    }
+    names = [args.only] if args.only else list(benches)
+    t0 = time.time()
+    for name in names:
+        if name not in benches:
+            sys.exit(f"unknown bench {name!r}; have {list(benches)}")
+        print(f"# --- {name} ---", flush=True)
+        benches[name](quick=args.quick)
+    print(f"# all benches done in {time.time() - t0:.0f}s", flush=True)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,30 @@
+"""Paper Table II: expected gradient norm per method, with C1/C2/W1/W2 costs."""
+from __future__ import annotations
+
+import time
+
+from benchmarks.common import emit, write_csv
+from benchmarks.fmarl_bench import run_config, strategies_table2
+
+
+def run(quick: bool = False) -> list[dict]:
+    rows = []
+    configs = strategies_table2()
+    if quick:
+        configs = configs[:4]
+    for name, strat in configs:
+        t0 = time.perf_counter()
+        row, _ = run_config(name, strat)
+        dt = (time.perf_counter() - t0) * 1e6
+        rows.append(row)
+        emit(f"table2/{name}", dt,
+             f"grad_norm={row['expected_grad_norm']:.4f};"
+             f"C1={row['communication_overheads_C1']};"
+             f"C2={row['computation_overheads_C2']};"
+             f"W1={row['inter_communication_W1']}")
+    write_csv("table2", rows)
+    return rows
+
+
+if __name__ == "__main__":
+    run()

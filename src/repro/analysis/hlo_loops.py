@@ -1,0 +1,315 @@
+"""Loop-aware HLO cost analysis.
+
+XLA's HloCostAnalysis (what ``compiled.cost_analysis()`` reports) counts each
+``while`` body ONCE, so any lax.scan — our layer stacks, flash-attention
+chunk loops, chunked CE — is massively under-counted. This module re-derives
+three roofline inputs from the post-SPMD HLO text with trip-count
+multipliers:
+
+  * flops       — from ``dot`` instructions (2 * prod(out) * contraction),
+                  multiplied along the while/fusion call chain;
+  * hbm_bytes   — proxy: per *top-level* instruction, output bytes + operand
+                  bytes (fusion internals excluded: they never hit HBM);
+  * collectives — result bytes and ring-estimate wire bytes, trip-corrected.
+
+Trip counts come from the largest integer constant in each while's condition
+computation (lax.scan conditions compare the counter against the length).
+This is exact for scan-generated loops, which are the only loops we emit.
+"""
+from __future__ import annotations
+
+import dataclasses
+import re
+from collections import defaultdict
+
+_DTYPE_BYTES = {
+    "pred": 1, "s8": 1, "u8": 1, "s16": 2, "u16": 2, "bf16": 2, "f16": 2,
+    "s32": 4, "u32": 4, "f32": 4, "s64": 8, "u64": 8, "f64": 8, "c64": 8,
+    "c128": 16, "s4": 1, "u4": 1, "f8e4m3fn": 1, "f8e5m2": 1,
+}
+
+_COMP_HDR = re.compile(r"^(ENTRY\s+)?%([\w.\-]+)\s*\((.*?)\)\s*->")
+_SHAPE = re.compile(r"([a-z0-9]+)\[([0-9,]*)\]")
+_INSTR = re.compile(r"^\s*(?:ROOT\s+)?%([\w.\-]+)\s*=\s*(.*)$")
+_OPNAME = re.compile(r"^\(?[a-z0-9]+\[[0-9,]*\][^ ]*\s+([a-z\-]+)\(")
+_TUPLE_OP = re.compile(r"^\((.*?)\)\s*([a-z\-]+)\(")
+_CALLS = re.compile(r"(?:calls|to_apply)=%([\w.\-]+)")
+_WHILE = re.compile(r"condition=%([\w.\-]+),\s*body=%([\w.\-]+)")
+_BRANCHES = re.compile(r"branch_computations=\{([^}]*)\}")
+_CONST_INT = re.compile(r"constant\((\d+)\)")
+_OPERANDS = re.compile(r"\(((?:%[\w.\-]+(?:,\s*)?)+)\)")
+_CONTRACT = re.compile(r"lhs_contracting_dims=\{([0-9,]*)\}")
+
+_COLLECTIVES = ("all-reduce", "all-gather", "reduce-scatter", "all-to-all",
+                "collective-permute")
+_SKIP_BYTES_OPS = {
+    "tuple", "get-tuple-element", "parameter", "constant", "bitcast",
+    "while", "conditional", "copy-start", "copy-done", "after-all",
+    "opt-barrier",
+}
+
+_REPLICA_RE = re.compile(r"replica_groups=\{?\{([0-9,]+)\}")
+_REPLICA_V2_RE = re.compile(r"replica_groups=\[(\d+),(\d+)\]")
+
+
+def _shape_bytes(dtype: str, dims: str) -> int:
+    if dtype not in _DTYPE_BYTES:
+        return 0
+    n = 1
+    if dims.strip():
+        for d in dims.split(","):
+            n *= int(d)
+    return n * _DTYPE_BYTES[dtype]
+
+
+def _all_shapes_bytes(text: str) -> int:
+    return sum(_shape_bytes(dt, dims) for dt, dims in _SHAPE.findall(text))
+
+
+def _group_size(line: str) -> int:
+    m = _REPLICA_V2_RE.search(line)
+    if m:
+        return int(m.group(2))
+    m = _REPLICA_RE.search(line)
+    if m:
+        return len(m.group(1).split(","))
+    return 2
+
+
+@dataclasses.dataclass
+class Computation:
+    name: str
+    is_entry: bool
+    lines: list
+    params: dict            # name -> (dtype, dims) of first shape
+    symbols: dict           # instr name -> list[(dtype, dims)]
+
+
+def _parse_computations(text: str) -> dict:
+    comps: dict[str, Computation] = {}
+    cur = None
+    for raw in text.splitlines():
+        line = raw.rstrip()
+        m = _COMP_HDR.match(line.strip())
+        if m and line.rstrip().endswith("{"):
+            params = {}
+            for pm in re.finditer(r"([\w.\-]+):\s*(?:\()?([a-z0-9]+)\[([0-9,]*)\]",
+                                  m.group(3)):
+                params[pm.group(1)] = (pm.group(2), pm.group(3))
+            cur = Computation(m.group(2), bool(m.group(1)), [], params, {})
+            comps[cur.name] = cur
+            continue
+        if cur is None:
+            continue
+        if line.strip() == "}":
+            cur = None
+            continue
+        cur.lines.append(line)
+        im = _INSTR.match(line)
+        if im:
+            shapes = _SHAPE.findall(im.group(2).split(" ", 1)[0] + " "
+                                    + im.group(2))
+            # first shape group(s) before the op name = output shape(s)
+            head = im.group(2)
+            op_split = re.match(r"^\(?(.*?)\)?\s[a-z\-]", head)
+            out_shapes = _SHAPE.findall(head[: head.find("(")]) or shapes[:1]
+            cur.symbols[im.group(1)] = out_shapes
+    return comps
+
+
+def _op_of(line: str) -> str | None:
+    im = _INSTR.match(line)
+    if not im:
+        return None
+    body = im.group(2)
+    m = re.search(r"\s([a-z][a-z0-9\-]*)\(", " " + body)
+    return m.group(1) if m else None
+
+
+def _trip_count(comps: dict, cond_name: str) -> int:
+    seen, stack, best = set(), [cond_name], 1
+    while stack:
+        c = stack.pop()
+        if c in seen or c not in comps:
+            continue
+        seen.add(c)
+        for line in comps[c].lines:
+            for v in _CONST_INT.findall(line):
+                best = max(best, int(v))
+            cm = _CALLS.search(line)
+            if cm:
+                stack.append(cm.group(1))
+    return best
+
+
+def _multipliers(comps: dict) -> dict:
+    """Effective execution count per computation, via DFS from ENTRY."""
+    entry = next((c.name for c in comps.values() if c.is_entry), None)
+    mult = defaultdict(float)
+    if entry is None:
+        return mult
+    mult[entry] = 1.0
+    stack = [entry]
+    visited_edges = set()
+    while stack:
+        name = stack.pop()
+        comp = comps[name]
+        m = mult[name]
+        for line in comp.lines:
+            wm = _WHILE.search(line)
+            if wm:
+                cond, body = wm.group(1), wm.group(2)
+                trips = _trip_count(comps, cond)
+                for child, k in ((body, trips), (cond, trips + 1)):
+                    edge = (name, child, k)
+                    if edge in visited_edges:
+                        continue
+                    visited_edges.add(edge)
+                    mult[child] += m * k
+                    stack.append(child)
+                continue
+            bm = _BRANCHES.search(line)
+            if bm:
+                for child in re.findall(r"%([\w.\-]+)", bm.group(1)):
+                    mult[child] += m
+                    stack.append(child)
+            cm = _CALLS.search(line)
+            if cm:
+                child = cm.group(1)
+                edge = (name, child, 1)
+                if edge in visited_edges:
+                    continue
+                visited_edges.add(edge)
+                mult[child] += m
+                stack.append(child)
+    return mult
+
+
+def _operand_shapes(comp: Computation, names: list):
+    out = []
+    for n in names:
+        if n in comp.symbols and comp.symbols[n]:
+            out.append(comp.symbols[n][0])
+        elif n in comp.params:
+            out.append(comp.params[n])
+        else:
+            out.append(None)
+    return out
+
+
+@dataclasses.dataclass
+class LoopAwareStats:
+    flops: float
+    hbm_bytes: float
+    collective_counts: dict
+    collective_result_bytes: dict
+    wire_bytes: float
+    n_while: int
+
+
+def analyze(text: str) -> LoopAwareStats:
+    comps = _parse_computations(text)
+    mult = _multipliers(comps)
+
+    flops = 0.0
+    hbm = 0.0
+    coll_counts: dict = defaultdict(float)
+    coll_bytes: dict = defaultdict(float)
+    wire = 0.0
+    n_while = 0
+
+    # computations reachable only via fusion calls are "internal": their
+    # instruction outputs never touch HBM. Track which comps are fusion-called.
+    fusion_called = set()
+    for comp in comps.values():
+        for line in comp.lines:
+            if " fusion(" in line or "kind=k" in line:
+                cm = _CALLS.search(line)
+                if cm:
+                    fusion_called.add(cm.group(1))
+
+    for comp in comps.values():
+        m = mult.get(comp.name, 0.0)
+        if m == 0.0:
+            continue
+        internal = comp.name in fusion_called
+        for line in comp.lines:
+            im = _INSTR.match(line)
+            if not im:
+                continue
+            op = _op_of(line)
+            if op is None:
+                continue
+            if op == "while":
+                n_while += 1
+
+            # ---- dot flops (counted even inside fusions) ----
+            if op == "dot":
+                out_shapes = comp.symbols.get(im.group(1), [])
+                out_elems = 1
+                if out_shapes:
+                    dims = out_shapes[0][1]
+                    for d in dims.split(","):
+                        if d:
+                            out_elems *= int(d)
+                opm = _OPERANDS.search(line[line.find("dot("):])
+                contract = 1
+                cm = _CONTRACT.search(line)
+                if opm and cm is not None:
+                    names = re.findall(r"%([\w.\-]+)", opm.group(1))
+                    shapes = _operand_shapes(comp, names[:1])
+                    if shapes and shapes[0]:
+                        lhs_dims = [int(d) for d in shapes[0][1].split(",") if d]
+                        for idx in cm.group(1).split(","):
+                            if idx and int(idx) < len(lhs_dims):
+                                contract *= lhs_dims[int(idx)]
+                flops += m * 2.0 * out_elems * contract
+
+            # ---- collective traffic ----
+            if any(c == op or op.startswith(c) for c in _COLLECTIVES):
+                kind = next(c for c in _COLLECTIVES
+                            if c == op or op.startswith(c))
+                if op.endswith("-done"):
+                    continue
+                # shapes appear between '=' and the op call; note the
+                # instruction NAME also contains the op string, so slice
+                # from '=' up to the op-call occurrence.
+                eq = line.find("=")
+                call = line.find(kind + "(", eq)
+                if call < 0:
+                    call = len(line)
+                size = _all_shapes_bytes(line[eq:call])
+                if size:
+                    coll_counts[kind] += m
+                    coll_bytes[kind] += m * size
+                    n = max(_group_size(line), 2)
+                    frac = (n - 1) / n
+                    if kind == "all-reduce":
+                        wire += m * 2 * size * frac
+                    elif kind == "collective-permute":
+                        wire += m * size
+                    else:
+                        wire += m * size * frac
+
+            # ---- HBM proxy (top-level instructions only) ----
+            if internal or op in _SKIP_BYTES_OPS:
+                continue
+            out_b = sum(_shape_bytes(dt, dims)
+                        for dt, dims in comp.symbols.get(im.group(1), []))
+            opm = _OPERANDS.search(line)
+            in_b = 0
+            if opm:
+                names = re.findall(r"%([\w.\-]+)", opm.group(1))[:8]
+                for sh in _operand_shapes(comp, names):
+                    if sh:
+                        in_b += _shape_bytes(*sh)
+            hbm += m * (out_b + in_b)
+
+    return LoopAwareStats(
+        flops=flops,
+        hbm_bytes=hbm,
+        collective_counts=dict(coll_counts),
+        collective_result_bytes=dict(coll_bytes),
+        wire_bytes=wire,
+        n_while=n_while,
+    )

@@ -1,0 +1,114 @@
+"""Parse collective traffic out of post-SPMD HLO text.
+
+cost_analysis() has FLOPs and bytes-accessed but NOT collective bytes; we
+regex the compiled module for all-gather / all-reduce / reduce-scatter /
+all-to-all / collective-permute instructions and sum their result-shape bytes
+(per-device, since post-partitioning shapes are per-device).
+
+Wire-byte estimates per op (ring algorithms, n = participating devices):
+  all-reduce      2 * size * (n-1)/n      (reduce-scatter + all-gather phases)
+  all-gather      size * (n-1)/n          (size = full output)
+  reduce-scatter  size * (n-1)/n          (size = full input ~ output * n)
+  all-to-all      size * (n-1)/n
+  collective-permute  size                (point-to-point)
+"""
+from __future__ import annotations
+
+import dataclasses
+import re
+from collections import defaultdict
+
+_DTYPE_BYTES = {
+    "pred": 1, "s8": 1, "u8": 1, "s16": 2, "u16": 2, "bf16": 2, "f16": 2,
+    "s32": 4, "u32": 4, "f32": 4, "s64": 8, "u64": 8, "f64": 8, "c64": 8,
+    "c128": 16,
+}
+
+_COLLECTIVES = (
+    "all-reduce", "all-gather", "reduce-scatter", "all-to-all",
+    "collective-permute",
+)
+
+# e.g.:  %all-gather.3 = bf16[2,512,1024]{2,1,0} all-gather(...)
+_INSTR_RE = re.compile(
+    r"=\s*(?:\()?([a-z0-9]+)\[([0-9,]*)\][^a-z]*\s*"
+    r"(all-reduce|all-gather|reduce-scatter|all-to-all|collective-permute)"
+    r"(?:-start)?\("
+)
+# tuple-shaped collectives:  = (bf16[..], bf16[..]) all-to-all(
+_TUPLE_RE = re.compile(
+    r"=\s*\(([^)]*)\)\s*"
+    r"(all-reduce|all-gather|reduce-scatter|all-to-all|collective-permute)"
+    r"(?:-start)?\("
+)
+_SHAPE_RE = re.compile(r"([a-z0-9]+)\[([0-9,]*)\]")
+
+_REPLICA_RE = re.compile(r"replica_groups=\{?\{([0-9,]+)\}")
+_REPLICA_V2_RE = re.compile(r"replica_groups=\[(\d+),(\d+)\]")
+
+
+def _shape_bytes(dtype: str, dims: str) -> int:
+    if dtype not in _DTYPE_BYTES:
+        return 0
+    n = 1
+    if dims.strip():
+        for d in dims.split(","):
+            n *= int(d)
+    return n * _DTYPE_BYTES[dtype]
+
+
+def _group_size(line: str) -> int:
+    m = _REPLICA_V2_RE.search(line)
+    if m:
+        return int(m.group(2))
+    m = _REPLICA_RE.search(line)
+    if m:
+        return len(m.group(1).split(","))
+    return 2
+
+
+@dataclasses.dataclass
+class CollectiveStats:
+    counts: dict
+    result_bytes: dict       # per collective kind, per-device result bytes
+    wire_bytes: float        # ring-estimate bytes on the wire per device
+
+    @property
+    def total_result_bytes(self) -> float:
+        return float(sum(self.result_bytes.values()))
+
+
+def collective_stats(hlo_text: str) -> CollectiveStats:
+    counts = defaultdict(int)
+    result_bytes = defaultdict(float)
+    wire = 0.0
+    for line in hlo_text.splitlines():
+        if not any(c in line for c in _COLLECTIVES):
+            continue
+        m = _INSTR_RE.search(line)
+        shapes = []
+        kind = None
+        if m:
+            kind = m.group(3)
+            shapes = [(m.group(1), m.group(2))]
+        else:
+            mt = _TUPLE_RE.search(line)
+            if mt:
+                kind = mt.group(2)
+                shapes = _SHAPE_RE.findall(mt.group(1))
+        if not kind or "-done" in line:
+            continue
+        size = sum(_shape_bytes(dt, dims) for dt, dims in shapes)
+        if size == 0:
+            continue
+        counts[kind] += 1
+        result_bytes[kind] += size
+        n = max(_group_size(line), 2)
+        frac = (n - 1) / n
+        if kind == "all-reduce":
+            wire += 2 * size * frac
+        elif kind == "collective-permute":
+            wire += size
+        else:
+            wire += size * frac
+    return CollectiveStats(dict(counts), dict(result_bytes), wire)

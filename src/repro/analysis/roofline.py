@@ -1,0 +1,101 @@
+"""Three-term roofline model from dry-run compiled artifacts (TPU v5e target).
+
+  compute term    = HLO_FLOPs / peak_FLOPs            (per device)
+  memory term     = HLO_bytes / HBM_bw                (per device)
+  collective term = wire_bytes / ICI_bw               (per device)
+
+cost_analysis() reports *per-device* FLOPs/bytes for SPMD modules; collective
+wire bytes come from analysis.hlo_stats. MODEL_FLOPS uses 6*N*D (train) /
+2*N*D (inference) with N = active params — the useful-compute yardstick.
+"""
+from __future__ import annotations
+
+import dataclasses
+
+# TPU v5e per-chip constants (from the assignment):
+PEAK_FLOPS = 197e12          # bf16 FLOP/s
+HBM_BW = 819e9               # bytes/s
+ICI_BW = 50e9                # bytes/s per link (we assume 1 effective link;
+                             # a 2D-torus axis would double this — noted)
+HBM_PER_CHIP = 16 * 1024**3  # v5e: 16 GiB
+
+
+@dataclasses.dataclass
+class RooflineTerms:
+    flops: float                 # per-device HLO flops for the program
+    hbm_bytes: float             # per-device bytes accessed
+    wire_bytes: float            # per-device collective bytes (ring estimate)
+    t_compute: float
+    t_memory: float
+    t_collective: float
+
+    @property
+    def dominant(self) -> str:
+        terms = {
+            "compute": self.t_compute,
+            "memory": self.t_memory,
+            "collective": self.t_collective,
+        }
+        return max(terms, key=terms.get)
+
+    @property
+    def total(self) -> float:
+        # no-overlap upper bound on step time
+        return self.t_compute + self.t_memory + self.t_collective
+
+    @property
+    def bound(self) -> float:
+        # perfect-overlap lower bound
+        return max(self.t_compute, self.t_memory, self.t_collective)
+
+    def as_dict(self) -> dict:
+        return {
+            "flops": self.flops,
+            "hbm_bytes": self.hbm_bytes,
+            "wire_bytes": self.wire_bytes,
+            "t_compute_s": self.t_compute,
+            "t_memory_s": self.t_memory,
+            "t_collective_s": self.t_collective,
+            "dominant": self.dominant,
+        }
+
+
+def roofline(flops: float, hbm_bytes: float, wire_bytes: float) -> RooflineTerms:
+    return RooflineTerms(
+        flops=flops,
+        hbm_bytes=hbm_bytes,
+        wire_bytes=wire_bytes,
+        t_compute=flops / PEAK_FLOPS,
+        t_memory=hbm_bytes / HBM_BW,
+        t_collective=wire_bytes / ICI_BW,
+    )
+
+
+def model_flops(cfg, shape, n_chips: int) -> float:
+    """Useful FLOPs per device per step: 6ND train, 2ND decode/prefill."""
+    n_active = cfg.n_active_params()
+    if shape.kind == "train":
+        tokens = shape.tokens
+        per_token = 6 * n_active
+    elif shape.kind == "prefill":
+        tokens = shape.tokens
+        per_token = 2 * n_active
+    else:  # decode: one token per sequence
+        tokens = shape.global_batch
+        per_token = 2 * n_active
+    return per_token * tokens / n_chips
+
+
+def amortized_period(local: RooflineTerms, sync: RooflineTerms, tau: int) -> dict:
+    """Per-step averages over a period: (tau-1) local + 1 sync (the paper's
+    communication amortization, eq. 7 instantiated with measured bytes)."""
+    def avg(a, b):
+        return ((tau - 1) * a + b) / tau
+
+    return {
+        "t_compute_s": avg(local.t_compute, sync.t_compute),
+        "t_memory_s": avg(local.t_memory, sync.t_memory),
+        "t_collective_s": avg(local.t_collective, sync.t_collective),
+        "sync_wire_bytes": sync.wire_bytes,
+        "local_wire_bytes": local.wire_bytes,
+    }

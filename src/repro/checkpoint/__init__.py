@@ -1,0 +1,3 @@
+from repro.checkpoint.io import latest_step, restore, save
+
+__all__ = ["latest_step", "restore", "save"]

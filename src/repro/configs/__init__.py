@@ -1,0 +1,42 @@
+"""Architecture configs: the 10 assigned architectures + the paper's own MARL setup.
+
+Each module defines ``CONFIG`` (exact assigned spec) and registers it; every
+config also provides ``.reduced()`` — the CPU-smoke variant (<=2 layers,
+d_model<=512, <=4 experts) exercised by tests. Full configs are only ever
+lowered via launch/dryrun.py (ShapeDtypeStruct, no allocation).
+"""
+from repro.configs.base import (
+    ARCH_REGISTRY,
+    InputShape,
+    ModelConfig,
+    SHAPE_REGISTRY,
+    get_arch,
+    get_shape,
+    list_archs,
+    register_arch,
+)
+
+# Import for registration side effects.
+from repro.configs import (  # noqa: F401
+    arctic_480b,
+    gemma_7b,
+    h2o_danube3_4b,
+    internvl2_26b,
+    kimi_k2_1t,
+    phi4_mini_3_8b,
+    qwen2_72b,
+    recurrentgemma_9b,
+    rwkv6_1_6b,
+    whisper_small,
+)
+
+__all__ = [
+    "ARCH_REGISTRY",
+    "InputShape",
+    "ModelConfig",
+    "SHAPE_REGISTRY",
+    "get_arch",
+    "get_shape",
+    "list_archs",
+    "register_arch",
+]

@@ -1,0 +1,20 @@
+"""Qwen2-72B [arXiv:2407.10671] — dense GQA with QKV bias."""
+from repro.configs.base import ModelConfig, register_arch
+
+CONFIG = register_arch(
+    ModelConfig(
+        name="qwen2-72b",
+        family="dense",
+        n_layers=80,
+        d_model=8192,
+        n_heads=64,
+        n_kv_heads=8,
+        head_dim=128,
+        d_ff=29568,
+        vocab_size=152064,
+        activation="swiglu",
+        qkv_bias=True,
+        rope_theta=1_000_000.0,
+        source="arXiv:2407.10671",
+    )
+)

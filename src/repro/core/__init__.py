@@ -1,0 +1,81 @@
+"""Core: the paper's contribution (FMARL communication-efficient aggregation).
+
+Exports the three aggregation strategies (periodic / decay / consensus) on top
+of variation-aware periodic averaging, the convergence-bound oracles (T1-T5),
+the utility function (eq. 13), and the resource-cost ledger (eqs. 7, 27).
+"""
+from repro.core.decay import (
+    DecayFn,
+    cosine_decay,
+    exponential_decay,
+    linear_decay,
+    no_decay,
+    step_decay,
+)
+from repro.core.topology import Topology, laplacian, mixing_matrix, mu2
+from repro.core.variation import (
+    indicator_mask,
+    tau_schedule,
+    tau_stats,
+    uniform_taus,
+    validate_a2,
+)
+from repro.core.bounds import (
+    consensus_bound_t5,
+    decay_bound_t4,
+    eta_condition,
+    periodic_bound_t1,
+    resource_cost_consensus,
+    resource_cost_periodic,
+    utility,
+    variation_bound_t2,
+)
+from repro.core.consensus import consensus_rounds_dense, consensus_rounds_matrix
+from repro.core.strategies import (
+    AggregationStrategy,
+    ConsensusStrategy,
+    DecayStrategy,
+    PeriodicStrategy,
+    SyncStrategy,
+    make_strategy,
+)
+from repro.core.fmarl import FmarlConfig, FmarlState, run_fmarl
+from repro.core.accounting import CostLedger
+
+__all__ = [
+    "AggregationStrategy",
+    "ConsensusStrategy",
+    "CostLedger",
+    "DecayFn",
+    "DecayStrategy",
+    "FmarlConfig",
+    "FmarlState",
+    "PeriodicStrategy",
+    "SyncStrategy",
+    "Topology",
+    "consensus_bound_t5",
+    "consensus_rounds_dense",
+    "consensus_rounds_matrix",
+    "cosine_decay",
+    "decay_bound_t4",
+    "eta_condition",
+    "exponential_decay",
+    "indicator_mask",
+    "laplacian",
+    "linear_decay",
+    "make_strategy",
+    "mixing_matrix",
+    "mu2",
+    "no_decay",
+    "periodic_bound_t1",
+    "resource_cost_consensus",
+    "resource_cost_periodic",
+    "run_fmarl",
+    "step_decay",
+    "tau_schedule",
+    "tau_stats",
+    "uniform_taus",
+    "utility",
+    "validate_a2",
+    "variation_bound_t2",
+]

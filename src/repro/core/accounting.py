@@ -1,0 +1,45 @@
+"""Resource-cost ledger in units of C1/C2/W1/W2 (paper eqs. 7, 27; Table II).
+
+C1: one agent->server gradient upload.       C2: one local SGD update.
+W1: one neighbor->agent gossip receive.      W2: one gossip combine.
+
+The ledger counts *events*; multiply by measured per-event byte/FLOP costs
+(e.g. from the dry-run HLO) to get physical overheads — this is how the mesh
+runtime instantiates the paper's symbolic costs with real numbers.
+"""
+from __future__ import annotations
+
+import dataclasses
+
+
+@dataclasses.dataclass
+class CostLedger:
+    c1_events: int = 0
+    c2_events: int = 0
+    w1_events: int = 0
+    w2_events: int = 0
+
+    def add_periods(self, strategy, n_periods: int) -> None:
+        per = strategy.comm_events_per_period()
+        self.c1_events += per["c1"] * n_periods
+        self.c2_events += per["c2"] * n_periods
+        self.w1_events += per["w1"] * n_periods
+        self.w2_events += per["w2"] * n_periods
+
+    def psi0(self, c1: float, c2: float, w1: float = 0.0, w2: float = 0.0) -> float:
+        """Total resource cost; equals eq. (7) (or (27) with gossip events)."""
+        return (
+            c1 * self.c1_events
+            + c2 * self.c2_events
+            + w1 * self.w1_events
+            + w2 * self.w2_events
+        )
+
+    def table_row(self) -> dict:
+        """Table II columns (symbolic units)."""
+        return {
+            "communication_overheads_C1": self.c1_events,
+            "computation_overheads_C2": self.c2_events,
+            "inter_communication_W1": self.w1_events,
+            "inter_computation_W2": self.w2_events,
+        }

@@ -1,0 +1,65 @@
+"""Consensus gossip operators (paper Alg. 2, eq. 23).
+
+Two realizations of the same math g <- (I - eps*La) g applied E times:
+
+* ``consensus_rounds_dense`` — exact dense mixing over a leading replica axis
+  (used by the host-level FMARL driver where all m agents live on one device
+  as vmapped replicas). This is the paper-faithful reference.
+* ``consensus_rounds_matrix`` — same, expressed as an einsum with a
+  precomputed mixing matrix P^E (one fused matmul instead of E rounds);
+  a beyond-paper optimization exploiting P being constant within a period.
+
+The mesh-scale (shard_map + collective_permute) form lives in
+``repro.launch.fedtrain`` because it needs a mesh axis; the Pallas-fused
+single-buffer update is ``repro.kernels.consensus_step``.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.topology import Topology, mixing_matrix
+
+
+def _mix_leaf(p: jnp.ndarray, leaf: jnp.ndarray) -> jnp.ndarray:
+    """Apply (m, m) mixing matrix over the leading replica axis of ``leaf``."""
+    flat = leaf.reshape(leaf.shape[0], -1)
+    return (p @ flat).reshape(leaf.shape)
+
+
+def consensus_rounds_dense(grads, topo: Topology, eps: float, rounds: int):
+    """E explicit gossip rounds of eq. (23) on a replicated pytree.
+
+    ``grads``: pytree whose leaves have leading axis m (one slice per agent).
+    Returns the pytree after E rounds; each round is
+    g_i += eps * sum_{l in Omega_i} (g_l - g_i), i.e. g <- (I - eps*La) g.
+    """
+    p = jnp.asarray(mixing_matrix(topo, eps), jnp.float32)
+
+    def one_round(g, _):
+        return jax.tree.map(lambda leaf: _mix_leaf(p, leaf), g), None
+
+    out, _ = jax.lax.scan(one_round, grads, None, length=rounds)
+    return out
+
+
+def consensus_rounds_matrix(grads, topo: Topology, eps: float, rounds: int):
+    """Fused form: apply P^E once. Mathematically identical to E rounds."""
+    p = np.linalg.matrix_power(mixing_matrix(topo, eps), rounds)
+    p = jnp.asarray(p, jnp.float32)
+    return jax.tree.map(lambda leaf: _mix_leaf(p, leaf), grads)
+
+
+def disagreement(grads) -> jnp.ndarray:
+    """Frobenius disagreement ||G (I - J)||_F^2 across the replica axis.
+
+    This is the quantity the T5 proof contracts by (1 - eps*mu2)^{2E}; used in
+    tests to verify the contraction rate empirically.
+    """
+    def leaf_dis(leaf):
+        mean = jnp.mean(leaf, axis=0, keepdims=True)
+        return jnp.sum(jnp.square(leaf - mean))
+
+    leaves = [leaf_dis(l) for l in jax.tree.leaves(grads)]
+    return jnp.sum(jnp.stack(leaves))

@@ -1,0 +1,72 @@
+"""Decay functions D(s) for the decay-based method (paper §V-C, A3, eq. 21).
+
+A3 requires: D is periodic with period tau, D(t0) = 1, and D monotonically
+non-increasing over a period with values in [0, 1]. All families below satisfy
+A3 (asserted in tests/property tests).
+
+D takes the *within-period offset* j = (s - t0) in {0, ..., tau-1}.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Callable
+
+import jax.numpy as jnp
+
+DecayFn = Callable[[jnp.ndarray], jnp.ndarray]
+
+
+@dataclasses.dataclass(frozen=True)
+class _Named:
+    fn: DecayFn
+    name: str
+
+    def __call__(self, j):
+        return self.fn(jnp.asarray(j, jnp.float32))
+
+
+def exponential_decay(lam: float) -> DecayFn:
+    """The paper's eq. (21): D(s) = lambda^{s/2} with s the period offset."""
+    if not (0.0 < lam <= 1.0):
+        raise ValueError(f"decay constant must be in (0, 1], got {lam}")
+    return _Named(lambda j: jnp.power(lam, j / 2.0), f"exp(lam={lam})")
+
+
+def linear_decay(tau: int, floor: float = 0.0) -> DecayFn:
+    """D(j) = 1 - (1 - floor) * j / tau (never reaches floor inside a period)."""
+    if tau < 1:
+        raise ValueError("tau >= 1 required")
+    return _Named(
+        lambda j: jnp.clip(1.0 - (1.0 - floor) * j / float(tau), floor, 1.0),
+        f"linear(tau={tau},floor={floor})",
+    )
+
+
+def cosine_decay(tau: int, floor: float = 0.0) -> DecayFn:
+    """Half-cosine from 1 to floor over a period."""
+    if tau < 1:
+        raise ValueError("tau >= 1 required")
+
+    def fn(j):
+        frac = jnp.clip(j / float(max(tau, 1)), 0.0, 1.0)
+        return floor + (1.0 - floor) * 0.5 * (1.0 + jnp.cos(jnp.pi * frac))
+
+    return _Named(fn, f"cosine(tau={tau},floor={floor})")
+
+
+def step_decay(drop_at: int, low: float = 0.5) -> DecayFn:
+    """D = 1 for j < drop_at else low."""
+    if not (0.0 <= low <= 1.0):
+        raise ValueError("low must be in [0, 1]")
+    return _Named(lambda j: jnp.where(j < drop_at, 1.0, low), f"step({drop_at},{low})")
+
+
+def no_decay() -> DecayFn:
+    """Identity weight (reduces the decay-based method to plain periodic avg)."""
+    return _Named(lambda j: jnp.ones_like(j), "none")
+
+
+def decay_sq_prefix_sum(decay: DecayFn, j: int) -> float:
+    """Z(j) = sum_{s=0}^{j-1} D^2(s)  (used by T4's closed form and tests)."""
+    offs = jnp.arange(j)
+    return float(jnp.sum(jnp.square(decay(offs))))

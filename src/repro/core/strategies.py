@@ -1,0 +1,232 @@
+"""Aggregation strategies: the paper's methods as composable JAX modules.
+
+A strategy owns (a) the within-period gradient transform applied at each local
+update (identity / decay weighting / consensus gossip), (b) the variation
+masks I(tau_i > s - t0), and (c) the period length tau. The server averaging
+step itself (eq. 11) is the same for every strategy: average the replica axis.
+
+All per-step data (masks, decay weights, fused mixing matrices) is precomputed
+into arrays so strategies are jit-stable and can be closed over by lax.scan.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.decay import DecayFn, no_decay
+from repro.core.topology import Topology, mixing_matrix
+from repro.core.variation import validate_a2
+
+
+@dataclasses.dataclass(frozen=True)
+class AggregationStrategy:
+    """Variation-aware periodic averaging (the paper's base method, T2).
+
+    Attributes:
+      tau: local updates per period for the pacing agent (period length).
+      taus: per-agent tau_i (A2); shape (m,).
+      mask: (m, tau) float indicator I(tau_i > j) for period offset j.
+    """
+
+    name: str
+    tau: int
+    taus: np.ndarray
+    mask: np.ndarray
+
+    # --- construction helpers -------------------------------------------------
+    @staticmethod
+    def _build_mask(taus: np.ndarray, tau: int) -> np.ndarray:
+        offs = np.arange(tau)[None, :]
+        return (np.asarray(taus)[:, None] > offs).astype(np.float32)
+
+    @property
+    def m(self) -> int:
+        return len(self.taus)
+
+    # --- hooks -----------------------------------------------------------------
+    def weight(self, offset) -> jnp.ndarray:
+        """Per-agent weight vector at period offset (mask only by default)."""
+        return jnp.asarray(self.mask)[:, offset]
+
+    def transform(self, grads_m, offset):
+        """Apply mask (+ subclass behaviour) to the stacked (m, ...) gradients."""
+        w = self.weight(offset)
+
+        def apply(leaf):
+            return leaf * w.reshape((-1,) + (1,) * (leaf.ndim - 1))
+
+        return jax.tree.map(apply, grads_m)
+
+    def server_average(self, params_m):
+        """Eq. (11): periodic averaging = mean over the replica axis."""
+        avg = jax.tree.map(lambda leaf: jnp.mean(leaf, axis=0), params_m)
+        return avg
+
+    # --- accounting ------------------------------------------------------------
+    def comm_events_per_period(self) -> dict:
+        """Event counts in units of C1/C2/W1/W2 for one period (per eq. 7/27)."""
+        return {
+            "c1": self.m,                      # each agent uploads once per period
+            "c2": int(np.sum(self.taus)),      # tau_i local updates each
+            "w1": 0,
+            "w2": 0,
+        }
+
+
+class SyncStrategy(AggregationStrategy):
+    """tau = 1: classic federated SGD (eq. 4) — the paper's communication-heavy baseline."""
+
+    def __init__(self, m: int):
+        taus = np.ones(m, int)
+        super().__init__(
+            name="sync", tau=1, taus=taus, mask=self._build_mask(taus, 1)
+        )
+
+
+class PeriodicStrategy(AggregationStrategy):
+    """Variation-aware periodic averaging (Alg. 1 / T2). tau_i = tau gives T1."""
+
+    def __init__(self, tau: int, taus: Optional[np.ndarray] = None, m: Optional[int] = None):
+        if taus is None:
+            if m is None:
+                raise ValueError("need taus or m")
+            taus = np.full(m, tau, int)
+        taus = np.asarray(taus, int)
+        validate_a2(taus, tau)
+        super().__init__(
+            name=f"periodic(tau={tau})",
+            tau=tau,
+            taus=taus,
+            mask=self._build_mask(taus, tau),
+        )
+
+
+@dataclasses.dataclass(frozen=True)
+class DecayStrategy(AggregationStrategy):
+    """Decay-based method (T3/T4): weight local grads by D(offset)."""
+
+    decay_weights: np.ndarray = dataclasses.field(default=None)  # (tau,)
+
+    def __init__(self, tau: int, taus=None, m=None, decay: DecayFn = None):
+        if taus is None:
+            if m is None:
+                raise ValueError("need taus or m")
+            taus = np.full(m, tau, int)
+        taus = np.asarray(taus, int)
+        validate_a2(taus, tau)
+        decay = decay or no_decay()
+        w = np.asarray(jax.device_get(decay(jnp.arange(tau))), np.float32)
+        if w[0] != 1.0 or np.any(np.diff(w) > 1e-7) or np.any(w < -1e-7):
+            raise ValueError("decay function violates A3 over this period")
+        object.__setattr__(self, "decay_weights", w)
+        AggregationStrategy.__init__(
+            self,
+            name=f"decay(tau={tau})",
+            tau=tau,
+            taus=taus,
+            mask=self._build_mask(taus, tau),
+        )
+
+    def weight(self, offset):
+        d = jnp.asarray(self.decay_weights)[offset]
+        return jnp.asarray(self.mask)[:, offset] * d
+
+
+@dataclasses.dataclass(frozen=True)
+class ConsensusStrategy(AggregationStrategy):
+    """Consensus-based method (Alg. 2 / T5): E gossip rounds before each update.
+
+    The gossip is fused into a single precomputed mixing matrix P^E (exactly
+    equivalent; P is constant). ``fused=False`` keeps the paper's explicit
+    E-round loop for fidelity checks.
+    """
+
+    p_e: np.ndarray = dataclasses.field(default=None)   # (m, m) = P^E
+    p: np.ndarray = dataclasses.field(default=None)     # (m, m) = P
+    rounds: int = 1
+    fused: bool = True
+    topo: Topology = None
+    eps: float = 0.0
+
+    def __init__(
+        self,
+        tau: int,
+        topo: Topology,
+        eps: float,
+        rounds: int = 1,
+        taus=None,
+        m: Optional[int] = None,
+        fused: bool = True,
+    ):
+        m = m if m is not None else topo.m
+        if taus is None:
+            taus = np.full(m, tau, int)
+        taus = np.asarray(taus, int)
+        validate_a2(taus, tau)
+        if topo.m != m:
+            raise ValueError("topology size must match agent count")
+        p = mixing_matrix(topo, eps)
+        object.__setattr__(self, "p", p.astype(np.float32))
+        object.__setattr__(self, "p_e", np.linalg.matrix_power(p, rounds).astype(np.float32))
+        object.__setattr__(self, "rounds", rounds)
+        object.__setattr__(self, "fused", fused)
+        object.__setattr__(self, "topo", topo)
+        object.__setattr__(self, "eps", eps)
+        AggregationStrategy.__init__(
+            self,
+            name=f"consensus(tau={tau},E={rounds},eps={eps:.3f})",
+            tau=tau,
+            taus=taus,
+            mask=self._build_mask(taus, tau),
+        )
+
+    def transform(self, grads_m, offset):
+        masked = AggregationStrategy.transform(self, grads_m, offset)
+        if self.fused:
+            mix = jnp.asarray(self.p_e)
+            return jax.tree.map(
+                lambda leaf: jnp.tensordot(mix, leaf, axes=1), masked
+            )
+        mix = jnp.asarray(self.p)
+
+        def one_round(g, _):
+            return jax.tree.map(lambda leaf: jnp.tensordot(mix, leaf, axes=1), g), None
+
+        out, _ = jax.lax.scan(one_round, masked, None, length=self.rounds)
+        return out
+
+    def comm_events_per_period(self) -> dict:
+        base = AggregationStrategy.comm_events_per_period(self)
+        # Every local iteration (tau of them, all agents listen even when their
+        # own g is masked to zero — Alg. 2 lines 14-17) costs |Omega_i| receives
+        # per round.
+        gossip = int(self.topo.degrees.sum()) * self.rounds * self.tau
+        base["w1"] = gossip
+        base["w2"] = gossip
+        return base
+
+
+def make_strategy(kind: str, **kw) -> AggregationStrategy:
+    if kind == "sync":
+        return SyncStrategy(m=kw["m"])
+    if kind == "periodic":
+        return PeriodicStrategy(tau=kw["tau"], taus=kw.get("taus"), m=kw.get("m"))
+    if kind == "decay":
+        return DecayStrategy(
+            tau=kw["tau"], taus=kw.get("taus"), m=kw.get("m"), decay=kw.get("decay")
+        )
+    if kind == "consensus":
+        return ConsensusStrategy(
+            tau=kw["tau"],
+            topo=kw["topo"],
+            eps=kw["eps"],
+            rounds=kw.get("rounds", 1),
+            taus=kw.get("taus"),
+            m=kw.get("m"),
+            fused=kw.get("fused", True),
+        )
+    raise ValueError(f"unknown strategy kind: {kind}")

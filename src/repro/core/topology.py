@@ -1,0 +1,174 @@
+"""Agent-network topologies for the consensus-based method (paper §V-D, A4).
+
+The paper requires G strongly connected and undirected (A4). We provide the
+standard families used in its experiments (random k-regular-ish graphs with
+mu2 = 1.4384 / 2.5188 analogues, adjacent-chain for "Merge" with mu2 = 0.3820)
+plus ring / torus / star / fully-connected, the graph Laplacian (eq. 55), its
+algebraic connectivity mu2, and the consensus mixing matrix P = I - eps * La.
+"""
+from __future__ import annotations
+
+import dataclasses
+
+import numpy as np
+
+
+@dataclasses.dataclass(frozen=True)
+class Topology:
+    """Undirected agent graph with adjacency matrix ``adj`` (0/1, zero diag)."""
+
+    name: str
+    adj: np.ndarray  # (m, m) symmetric 0/1
+
+    def __post_init__(self):
+        a = np.asarray(self.adj)
+        if a.ndim != 2 or a.shape[0] != a.shape[1]:
+            raise ValueError("adjacency must be square")
+        if not np.array_equal(a, a.T):
+            raise ValueError("A4 requires an undirected graph (symmetric adj)")
+        if np.any(np.diag(a) != 0):
+            raise ValueError("no self loops")
+
+    @property
+    def m(self) -> int:
+        return self.adj.shape[0]
+
+    @property
+    def degrees(self) -> np.ndarray:
+        return self.adj.sum(axis=1)
+
+    @property
+    def max_degree(self) -> int:
+        """Delta := max_i |Omega_i| + 1 per the paper's step-size bound."""
+        return int(self.degrees.max()) + 1
+
+    @property
+    def n_edges(self) -> int:
+        return int(self.adj.sum()) // 2
+
+    def neighbors(self, i: int) -> np.ndarray:
+        return np.nonzero(self.adj[i])[0]
+
+    def is_connected(self) -> bool:
+        m = self.m
+        seen = np.zeros(m, bool)
+        stack = [0]
+        seen[0] = True
+        while stack:
+            v = stack.pop()
+            for u in np.nonzero(self.adj[v])[0]:
+                if not seen[u]:
+                    seen[u] = True
+                    stack.append(int(u))
+        return bool(seen.all())
+
+
+def laplacian(topo: Topology) -> np.ndarray:
+    """Graph Laplacian La per eq. (55): deg on diag, -1 for edges."""
+    return np.diag(topo.degrees) - topo.adj
+
+
+def mu2(topo: Topology) -> float:
+    """Algebraic connectivity: second-smallest eigenvalue of La."""
+    eig = np.linalg.eigvalsh(laplacian(topo).astype(np.float64))
+    return float(np.sort(eig)[1])
+
+
+def mixing_matrix(topo: Topology, eps: float) -> np.ndarray:
+    """P = I - eps * La; doubly stochastic for undirected G, rows sum to 1.
+
+    Validity: 0 < eps < 1/Delta (paper's condition). We check and raise.
+    """
+    if not (0.0 < eps < 1.0 / topo.max_degree):
+        raise ValueError(
+            f"step size eps={eps} must be in (0, 1/Delta) = (0, {1.0 / topo.max_degree:.4f})"
+        )
+    return np.eye(topo.m) - eps * laplacian(topo)
+
+
+def spectral_gap_factor(topo: Topology, eps: float, rounds: int) -> float:
+    """The T5 contraction factor (1 - eps*mu2(La))^{2E}."""
+    return float((1.0 - eps * mu2(topo)) ** (2 * rounds))
+
+
+# ----------------------------------------------------------------------------
+# Graph families
+# ----------------------------------------------------------------------------
+
+def ring(m: int) -> Topology:
+    if m < 3:
+        raise ValueError("ring needs m >= 3")
+    adj = np.zeros((m, m), int)
+    for i in range(m):
+        adj[i, (i + 1) % m] = adj[(i + 1) % m, i] = 1
+    return Topology(f"ring({m})", adj)
+
+
+def chain(m: int) -> Topology:
+    """Adjacent-vehicle chain — the paper's 'Merge' topology (mu2=0.3820 at m=5)."""
+    if m < 2:
+        raise ValueError("chain needs m >= 2")
+    adj = np.zeros((m, m), int)
+    for i in range(m - 1):
+        adj[i, i + 1] = adj[i + 1, i] = 1
+    return Topology(f"chain({m})", adj)
+
+
+def fully_connected(m: int) -> Topology:
+    adj = np.ones((m, m), int) - np.eye(m, dtype=int)
+    return Topology(f"full({m})", adj)
+
+
+def star(m: int) -> Topology:
+    adj = np.zeros((m, m), int)
+    adj[0, 1:] = adj[1:, 0] = 1
+    return Topology(f"star({m})", adj)
+
+
+def torus2d(rows: int, cols: int) -> Topology:
+    """2-D torus — matches TPU ICI mesh neighborhoods (beyond-paper topology)."""
+    m = rows * cols
+    adj = np.zeros((m, m), int)
+
+    def idx(r, c):
+        return (r % rows) * cols + (c % cols)
+
+    for r in range(rows):
+        for c in range(cols):
+            i = idx(r, c)
+            for j in (idx(r + 1, c), idx(r, c + 1)):
+                if i != j:
+                    adj[i, j] = adj[j, i] = 1
+    return Topology(f"torus({rows}x{cols})", adj)
+
+
+def random_regularish(m: int, k_lo: int, k_hi: int, seed: int = 0) -> Topology:
+    """Random graph with each node wired to ~k in [k_lo, k_hi] others.
+
+    Mirrors the paper's 'constructed by 3~4 (or 4~6) random connections from
+    each learning agent to others' (Fig. 6). Re-draws until connected.
+    """
+    rng = np.random.default_rng(seed)
+    for _attempt in range(1000):
+        adj = np.zeros((m, m), int)
+        for i in range(m):
+            k = int(rng.integers(k_lo, k_hi + 1))
+            need = max(0, k - int(adj[i].sum()))
+            cand = [j for j in range(m) if j != i and adj[i, j] == 0]
+            rng.shuffle(cand)
+            for j in cand[:need]:
+                adj[i, j] = adj[j, i] = 1
+        topo = Topology(f"rand{k_lo}-{k_hi}(m={m},seed={seed})", adj)
+        if topo.is_connected():
+            return topo
+        seed += 1
+        rng = np.random.default_rng(seed)
+    raise RuntimeError("failed to draw a connected graph")
+
+
+REGISTRY = {
+    "ring": ring,
+    "chain": chain,
+    "full": fully_connected,
+    "star": star,
+}

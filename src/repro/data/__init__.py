@@ -1,0 +1,7 @@
+from repro.data.pipeline import (
+    SyntheticLM,
+    MemmapTokens,
+    make_batch_iterator,
+)
+
+__all__ = ["MemmapTokens", "SyntheticLM", "make_batch_iterator"]

@@ -1,0 +1,81 @@
+"""Token data pipeline: synthetic Zipf streams + memmap-backed corpora.
+
+Host-sharded: in a multi-host launch each process reads its slice of the
+global batch (shard = process_index). Deterministic per (seed, step) so
+federated agents resample identical distributions but disjoint streams —
+matching the paper's IID-agents assumption while keeping per-agent data
+independent (each agent's stream is seeded by its agent id).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Iterator, Optional
+
+import numpy as np
+
+
+@dataclasses.dataclass
+class SyntheticLM:
+    """Zipf-distributed token stream with a deterministic Markov flavor:
+    next-token distribution is a mixture of a Zipf prior and a shifted copy of
+    the current token, so models can actually reduce loss on it."""
+
+    vocab_size: int
+    seed: int = 0
+    zipf_a: float = 1.2
+    copy_prob: float = 0.35
+
+    def batch(self, step: int, batch: int, seq: int, agent: int = 0) -> np.ndarray:
+        rng = np.random.default_rng(
+            np.random.SeedSequence([self.seed, agent, step])
+        )
+        base = rng.zipf(self.zipf_a, size=(batch, seq)).astype(np.int64)
+        base = np.minimum(base - 1, self.vocab_size - 1)
+        # Markov copy channel: token_t = token_{t-1} + 1 with prob copy_prob
+        copy = rng.random((batch, seq)) < self.copy_prob
+        for t in range(1, seq):
+            base[:, t] = np.where(
+                copy[:, t], (base[:, t - 1] + 1) % self.vocab_size, base[:, t]
+            )
+        return base.astype(np.int32)
+
+
+@dataclasses.dataclass
+class MemmapTokens:
+    """Flat binary token file (uint16/uint32); random crops per step."""
+
+    path: str
+    vocab_size: int
+    dtype: str = "uint16"
+    seed: int = 0
+
+    def __post_init__(self):
+        self._data = np.memmap(self.path, dtype=self.dtype, mode="r")
+
+    def batch(self, step: int, batch: int, seq: int, agent: int = 0) -> np.ndarray:
+        rng = np.random.default_rng(np.random.SeedSequence([self.seed, agent, step]))
+        n = len(self._data) - seq - 1
+        starts = rng.integers(0, max(n, 1), size=batch)
+        out = np.stack([self._data[s : s + seq] for s in starts])
+        return np.minimum(out.astype(np.int32), self.vocab_size - 1)
+
+
+def make_batch_iterator(
+    source,
+    batch: int,
+    seq: int,
+    *,
+    agent: int = 0,
+    start_step: int = 0,
+    process_index: int = 0,
+    process_count: int = 1,
+) -> Iterator[dict]:
+    """Yields {'tokens': (batch_local, seq)} host shards forever."""
+    if batch % process_count:
+        raise ValueError("global batch must divide process count")
+    local = batch // process_count
+    step = start_step
+    while True:
+        full = source.batch(step, batch, seq, agent=agent)
+        yield {"tokens": full[process_index * local : (process_index + 1) * local]}
+        step += 1

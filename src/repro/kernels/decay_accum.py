@@ -1,0 +1,46 @@
+"""Pallas TPU kernel: fused decay-weighted gradient accumulation (T3/T4 inner loop).
+
+acc <- acc + D(s) * g over flat parameter buffers. A single fused FMA pass
+(instead of scale-then-add, which reads g twice and writes a temp); purely
+bandwidth-bound, tiled 1-D through VMEM. The decay weight is a scalar operand
+in SMEM.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+
+def _decay_accum_kernel(d_ref, acc_ref, g_ref, o_ref):
+    d = d_ref[0]
+    o_ref[...] = acc_ref[...] + d * g_ref[...].astype(acc_ref.dtype)
+
+
+@functools.partial(jax.jit, static_argnames=("block_n", "interpret"))
+def decay_accum_pallas(acc, g, d, *, block_n: int = 4096, interpret: bool = False):
+    """acc, g: (n,) flat buffers; d: scalar decay weight. Returns acc + d*g."""
+    n = acc.shape[0]
+    block_n = min(block_n, n)
+    pad = (-n) % block_n
+    if pad:
+        acc = jnp.pad(acc, (0, pad))
+        g = jnp.pad(g, (0, pad))
+    np_ = acc.shape[0]
+    d_arr = jnp.asarray([d], acc.dtype)
+    out = pl.pallas_call(
+        _decay_accum_kernel,
+        grid=(np_ // block_n,),
+        in_specs=[
+            pl.BlockSpec(memory_space=pltpu.SMEM),
+            pl.BlockSpec((block_n,), lambda i: (i,)),
+            pl.BlockSpec((block_n,), lambda i: (i,)),
+        ],
+        out_specs=pl.BlockSpec((block_n,), lambda i: (i,)),
+        out_shape=jax.ShapeDtypeStruct((np_,), acc.dtype),
+        interpret=interpret,
+    )(d_arr, acc, g)
+    return out[:n] if pad else out

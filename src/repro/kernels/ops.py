@@ -1,0 +1,60 @@
+"""Jit'd public wrappers for the Pallas kernels.
+
+On CPU (this container) the kernels execute in interpret mode — the kernel
+body runs as traced Python, proving correctness; on TPU they compile to
+Mosaic. `interpret=None` auto-detects from the default backend.
+"""
+from __future__ import annotations
+
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels.consensus_step import consensus_step_pallas
+from repro.kernels.decay_accum import decay_accum_pallas
+from repro.kernels.swa_attention import swa_attention_pallas
+from repro.kernels.wkv6 import wkv6_pallas
+
+
+def _auto_interpret(interpret: Optional[bool]) -> bool:
+    if interpret is not None:
+        return interpret
+    return jax.default_backend() != "tpu"
+
+
+def wkv6(r, k, v, w, u, state, *, chunk: int = 256, interpret: Optional[bool] = None):
+    return wkv6_pallas(r, k, v, w, u, state, chunk=chunk,
+                       interpret=_auto_interpret(interpret))
+
+
+def swa_attention(q, k, v, *, window=None, causal=True, block_q=128, block_kv=128,
+                  interpret: Optional[bool] = None):
+    return swa_attention_pallas(
+        q, k, v, window=window, causal=causal, block_q=block_q,
+        block_kv=block_kv, interpret=_auto_interpret(interpret),
+    )
+
+
+def consensus_step(g, mixing, *, block_n=2048, interpret: Optional[bool] = None):
+    return consensus_step_pallas(g, mixing, block_n=block_n,
+                                 interpret=_auto_interpret(interpret))
+
+
+def consensus_step_tree(grads_m, mixing, **kw):
+    """Apply the gossip mix to a pytree whose leaves have leading agent axis."""
+    leaves, treedef = jax.tree.flatten(grads_m)
+    m = leaves[0].shape[0]
+    flat = jnp.concatenate([l.reshape(m, -1) for l in leaves], axis=1)
+    mixed = consensus_step(flat, mixing, **kw)
+    out, off = [], 0
+    for l in leaves:
+        n = l[0].size
+        out.append(mixed[:, off:off + n].reshape(l.shape))
+        off += n
+    return jax.tree.unflatten(treedef, out)
+
+
+def decay_accum(acc, g, d, *, block_n=4096, interpret: Optional[bool] = None):
+    return decay_accum_pallas(acc, g, d, block_n=block_n,
+                              interpret=_auto_interpret(interpret))

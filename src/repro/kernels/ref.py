@@ -1,0 +1,55 @@
+"""Pure-jnp oracles for every Pallas kernel (the allclose targets)."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def wkv6_ref(r, k, v, w, u, state):
+    """WKV6 recurrence oracle. r,k,v,w: (B,T,H,D); u: (H,D); state: (B,H,D,D).
+
+    y_t[j] = sum_i r_t[i] * (S[i,j] + u[i] * k_t[i] * v_t[j])
+    S     <- diag(w_t) S + k_t v_t^T
+    Returns (y (B,T,H,D), final state).
+    """
+    def step(s, inp):
+        r_t, k_t, v_t, w_t = inp
+        kv = k_t[..., :, None] * v_t[..., None, :]
+        y = jnp.einsum("bhi,bhij->bhj", r_t, s + u[None, :, :, None] * kv)
+        s = w_t[..., :, None] * s + kv
+        return s, y
+
+    seq = tuple(jnp.moveaxis(t, 1, 0) for t in (r, k, v, w))
+    state, ys = jax.lax.scan(step, state, seq)
+    return jnp.moveaxis(ys, 0, 1), state
+
+
+def swa_attention_ref(q, k, v, *, window=None, causal=True):
+    """Flash/SWA oracle. q: (B,Sq,H,D), k/v: (B,Sk,H,D) (KV already repeated).
+    Softmax in fp32; sliding window counts strictly greater than (pos - window)."""
+    b, sq, h, d = q.shape
+    sk = k.shape[1]
+    qp = jnp.arange(sq)
+    kp = jnp.arange(sk)
+    scores = jnp.einsum("bshd,bthd->bhst", q, k).astype(jnp.float32) * d**-0.5
+    ok = jnp.ones((sq, sk), bool)
+    if causal:
+        ok &= kp[None, :] <= qp[:, None]
+    if window is not None:
+        ok &= kp[None, :] > qp[:, None] - window
+    scores = jnp.where(ok[None, None], scores, -1e30)
+    p = jax.nn.softmax(scores, axis=-1)
+    return jnp.einsum("bhst,bthd->bshd", p.astype(q.dtype), v)
+
+
+def consensus_step_ref(g, mixing):
+    """One (or fused-E) consensus mix: out[i] = sum_l P[i,l] g[l].
+
+    g: (m, n) flattened per-agent gradient buffers; mixing: (m, m).
+    """
+    return (mixing @ g.astype(jnp.float32)).astype(g.dtype)
+
+
+def decay_accum_ref(acc, g, d):
+    """Decay-weighted gradient accumulation: acc + d * g (d scalar)."""
+    return acc + d * g.astype(acc.dtype)

@@ -1,0 +1,117 @@
+"""Pallas TPU kernel: flash-style causal attention with optional sliding window.
+
+Standard flash schedule adapted to SWA: grid (B, H, n_q_blocks, n_kv_blocks)
+with the kv-block axis minor (sequential), carrying the online-softmax
+running max / denominator / accumulator in VMEM scratch. Out-of-window or
+fully-future kv blocks are skipped entirely with pl.when, which is where the
+sub-quadratic win comes from for long_500k-style shapes: only
+ceil(window / block_kv) + 1 kv blocks are touched per q block.
+
+Block sizes default to (128, 128) to align with the MXU; D (head_dim) rides
+along whole.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+NEG_INF = -1e30
+
+
+def _swa_kernel(q_ref, k_ref, v_ref, o_ref, m_scr, l_scr, acc_scr, *,
+                block_q, block_kv, window, causal, scale):
+    iq = pl.program_id(2)
+    ik = pl.program_id(3)
+    n_k = pl.num_programs(3)
+
+    @pl.when(ik == 0)
+    def _init():
+        m_scr[...] = jnp.full_like(m_scr, NEG_INF)
+        l_scr[...] = jnp.zeros_like(l_scr)
+        acc_scr[...] = jnp.zeros_like(acc_scr)
+
+    q_start = iq * block_q
+    k_start = ik * block_kv
+
+    # Block-level skip: any overlap with [q_pos - window + 1, q_pos]?
+    q_lo, q_hi = q_start, q_start + block_q - 1
+    k_lo = k_start
+    needed = True
+    if causal:
+        needed = k_lo <= q_hi
+    if window is not None:
+        needed = jnp.logical_and(needed, (k_start + block_kv - 1) > q_lo - window)
+
+    @pl.when(needed)
+    def _compute():
+        q = q_ref[0, 0].astype(jnp.float32)           # (bq, D)
+        k = k_ref[0, 0].astype(jnp.float32)           # (bk, D)
+        v = v_ref[0, 0].astype(jnp.float32)
+        s = (q @ k.T) * scale                          # (bq, bk)
+        qp = q_start + jax.lax.broadcasted_iota(jnp.int32, s.shape, 0)
+        kp = k_start + jax.lax.broadcasted_iota(jnp.int32, s.shape, 1)
+        ok = jnp.ones_like(s, dtype=jnp.bool_)
+        if causal:
+            ok &= kp <= qp
+        if window is not None:
+            ok &= kp > qp - window
+        s = jnp.where(ok, s, NEG_INF)
+
+        m_prev = m_scr[...]
+        m_new = jnp.maximum(m_prev, s.max(axis=1, keepdims=True))
+        alpha = jnp.exp(m_prev - m_new)
+        p = jnp.exp(s - m_new)
+        l_scr[...] = l_scr[...] * alpha + p.sum(axis=1, keepdims=True)
+        acc_scr[...] = acc_scr[...] * alpha + p @ v
+        m_scr[...] = m_new
+
+    @pl.when(ik == n_k - 1)
+    def _finish():
+        o_ref[0, 0] = (acc_scr[...] / jnp.maximum(l_scr[...], 1e-30)).astype(o_ref.dtype)
+
+
+@functools.partial(
+    jax.jit, static_argnames=("window", "causal", "block_q", "block_kv", "interpret")
+)
+def swa_attention_pallas(q, k, v, *, window=None, causal=True,
+                         block_q: int = 128, block_kv: int = 128,
+                         interpret: bool = False):
+    """q: (B,Sq,H,D); k/v: (B,Sk,H,D) (KV repeated to H). Returns (B,Sq,H,D)."""
+    b, sq, h, d = q.shape
+    sk = k.shape[1]
+    block_q = min(block_q, sq)
+    block_kv = min(block_kv, sk)
+    if sq % block_q or sk % block_kv:
+        raise ValueError("sequence lengths must divide block sizes")
+
+    def to_bhsd(x):
+        return x.transpose(0, 2, 1, 3)
+
+    qb, kb, vb = to_bhsd(q), to_bhsd(k), to_bhsd(v)
+    grid = (b, h, sq // block_q, sk // block_kv)
+    kern = functools.partial(
+        _swa_kernel, block_q=block_q, block_kv=block_kv,
+        window=window, causal=causal, scale=d**-0.5,
+    )
+    out = pl.pallas_call(
+        kern,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1, 1, block_q, d), lambda bi, hi, qi, ki: (bi, hi, qi, 0)),
+            pl.BlockSpec((1, 1, block_kv, d), lambda bi, hi, qi, ki: (bi, hi, ki, 0)),
+            pl.BlockSpec((1, 1, block_kv, d), lambda bi, hi, qi, ki: (bi, hi, ki, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, 1, block_q, d), lambda bi, hi, qi, ki: (bi, hi, qi, 0)),
+        out_shape=jax.ShapeDtypeStruct((b, h, sq, d), q.dtype),
+        scratch_shapes=[
+            pltpu.VMEM((block_q, 1), jnp.float32),
+            pltpu.VMEM((block_q, 1), jnp.float32),
+            pltpu.VMEM((block_q, d), jnp.float32),
+        ],
+        interpret=interpret,
+    )(qb, kb, vb)
+    return out.transpose(0, 2, 1, 3)

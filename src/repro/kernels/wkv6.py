@@ -1,0 +1,97 @@
+"""Pallas TPU kernel: chunked WKV6 recurrence (RWKV6 time-mix hot loop).
+
+TPU adaptation of the (GPU-targeted) RWKV6 CUDA kernel: instead of one thread
+per channel, we tile (batch*head) over the outer grid and stream the time axis
+through VMEM in chunks, carrying the (D, D) state in a VMEM scratch across the
+sequential chunk iterations (TPU grids execute minor-most-last sequentially,
+so the scratch persists along the T dimension). Within a chunk the recurrence
+is a serial fori_loop over time, but each step is a rank-1 update + matvec on
+(D, D) = (64, 64) tiles that map onto the VPU/MXU.
+
+Memory: per grid step the kernel touches 4 * chunk * D inputs + chunk * D
+outputs + a D*D state — everything fits comfortably in VMEM (chunk=256, D=64:
+~320 KiB fp32).
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+
+def _wkv6_kernel(r_ref, k_ref, v_ref, w_ref, u_ref, s0_ref, y_ref, sT_ref, state):
+    t_idx = pl.program_id(1)
+    n_t = pl.num_programs(1)
+
+    @pl.when(t_idx == 0)
+    def _init():
+        state[...] = s0_ref[0]
+
+    u = u_ref[0]                       # (D,)
+    chunk = r_ref.shape[1]
+
+    def step(i, _):
+        r_t = r_ref[0, i]              # (D,)
+        k_t = k_ref[0, i]
+        v_t = v_ref[0, i]
+        w_t = w_ref[0, i]
+        kv = k_t[:, None] * v_t[None, :]            # (D, D)
+        s = state[...]
+        y = jnp.sum(r_t[:, None] * (s + u[:, None] * kv), axis=0)
+        y_ref[0, i] = y
+        state[...] = w_t[:, None] * s + kv
+        return ()
+
+    jax.lax.fori_loop(0, chunk, step, ())
+
+    @pl.when(t_idx == n_t - 1)
+    def _final():
+        sT_ref[0] = state[...]
+
+
+@functools.partial(jax.jit, static_argnames=("chunk", "interpret"))
+def wkv6_pallas(r, k, v, w, u, state, *, chunk: int = 256, interpret: bool = False):
+    """r,k,v,w: (B,T,H,D) fp32; u: (H,D); state: (B,H,D,D).
+
+    Returns (y (B,T,H,D), final_state (B,H,D,D)).
+    """
+    b, t, h, d = r.shape
+    if t % chunk:
+        chunk = t  # degenerate: single chunk
+    bh = b * h
+
+    def flat(x):  # (B,T,H,D) -> (B*H, T, D)
+        return x.transpose(0, 2, 1, 3).reshape(bh, t, d)
+
+    rf, kf, vf, wf = (flat(x) for x in (r, k, v, w))
+    uf = jnp.broadcast_to(u[None], (b, h, d)).reshape(bh, d)
+    sf = state.reshape(bh, d, d)
+
+    n_chunks = t // chunk
+    grid = (bh, n_chunks)
+    seq_spec = pl.BlockSpec((1, chunk, d), lambda i, j: (i, j, 0))
+    y, s_out = pl.pallas_call(
+        _wkv6_kernel,
+        grid=grid,
+        in_specs=[
+            seq_spec, seq_spec, seq_spec, seq_spec,
+            pl.BlockSpec((1, d), lambda i, j: (i, 0)),
+            pl.BlockSpec((1, d, d), lambda i, j: (i, 0, 0)),
+        ],
+        out_specs=[
+            pl.BlockSpec((1, chunk, d), lambda i, j: (i, j, 0)),
+            pl.BlockSpec((1, d, d), lambda i, j: (i, 0, 0)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((bh, t, d), jnp.float32),
+            jax.ShapeDtypeStruct((bh, d, d), jnp.float32),
+        ],
+        scratch_shapes=[pltpu.VMEM((d, d), jnp.float32)],
+        interpret=interpret,
+    )(rf, kf, vf, wf, uf, sf)
+
+    y = y.reshape(b, h, t, d).transpose(0, 2, 1, 3)
+    return y, s_out.reshape(b, h, d, d)

@@ -1,0 +1,251 @@
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+
+"""Multi-pod dry run: lower + compile every (arch x input-shape x mesh).
+
+For train shapes this lowers BOTH programs of the federated trainer
+(local_step without cross-pod collectives, sync_step with the strategy's
+pod-axis collective); for inference shapes it lowers prefill / serve steps.
+memory_analysis() proves per-device footprint; cost_analysis() + HLO
+collective parsing feed the roofline (EXPERIMENTS.md §Dry-run / §Roofline).
+
+Usage:
+  python -m repro.launch.dryrun --arch qwen2-72b --shape train_4k --multi-pod
+  python -m repro.launch.dryrun --all                 # full 40-pair sweep x 2 meshes
+"""
+import argparse
+import json
+import time
+import traceback
+
+import jax
+
+from repro.analysis.hlo_stats import collective_stats
+from repro.analysis.roofline import HBM_PER_CHIP, model_flops, roofline
+from repro.configs import get_arch, get_shape, list_archs, SHAPE_REGISTRY
+from repro.launch.fedtrain import (
+    FedTrainConfig,
+    init_train_state,
+    make_local_step,
+    make_sync_step,
+    train_state_axes,
+)
+from repro.launch.mesh import make_production_mesh, make_rules, n_agents
+from repro.launch.serve import make_prefill_step, make_serve_step
+from repro.launch.specs import attach, input_specs
+from repro.models import param_logical_axes
+from repro.optim import adamw
+from repro.sharding.rules import use_rules
+
+
+def _eligible(cfg, shape) -> tuple[bool, str]:
+    if shape.name == "long_500k" and not cfg.is_subquadratic:
+        return False, "full-attention arch: long_500k requires sub-quadratic attention (DESIGN.md)"
+    return True, ""
+
+
+def _analyze(name, lowered):
+    from repro.analysis.hlo_loops import analyze as loop_analyze
+
+    t0 = time.time()
+    compiled = lowered.compile()
+    dt = time.time() - t0
+    ma = compiled.memory_analysis()
+    ca = compiled.cost_analysis() or {}
+    txt = compiled.as_text()
+    la = loop_analyze(txt)   # trip-count-corrected (XLA counts whiles once)
+    per_dev_bytes = (
+        ma.argument_size_in_bytes + ma.output_size_in_bytes + ma.temp_size_in_bytes
+        - ma.alias_size_in_bytes
+    )
+    print(f"    [{name}] compile {dt:.1f}s | args {ma.argument_size_in_bytes/2**30:.2f} GiB"
+          f" + temp {ma.temp_size_in_bytes/2**30:.2f} GiB per device"
+          f" | flops {la.flops:.3g} (hlo-once {ca.get('flops', 0):.3g})"
+          f" | colls {la.collective_counts}")
+    return {
+        "compile_s": dt,
+        "argument_bytes": ma.argument_size_in_bytes,
+        "output_bytes": ma.output_size_in_bytes,
+        "temp_bytes": ma.temp_size_in_bytes,
+        "alias_bytes": ma.alias_size_in_bytes,
+        "peak_bytes_est": per_dev_bytes,
+        "fits_hbm": bool(per_dev_bytes <= HBM_PER_CHIP),
+        "flops": la.flops,
+        "bytes_accessed": la.hbm_bytes,
+        "flops_hlo_loop_once": float(ca.get("flops", 0.0)),
+        "bytes_hlo_loop_once": float(ca.get("bytes accessed", 0.0)),
+        "n_while_loops": la.n_while,
+        "collective_counts": la.collective_counts,
+        "collective_result_bytes": la.collective_result_bytes,
+        "wire_bytes": la.wire_bytes,
+    }
+
+
+def run_one(arch: str, shape_name: str, *, multi_pod: bool, fed: FedTrainConfig,
+            out_dir: str = "experiments/dryrun", seq_parallel: bool = True,
+            cfg_overrides: dict | None = None,
+            opt_state_dtype: str = "float32", tag: str = "",
+            rule_overrides: dict | None = None) -> dict:
+    import dataclasses as _dc
+
+    cfg = get_arch(arch)
+    if cfg_overrides:
+        typed = {}
+        for k, v in cfg_overrides.items():
+            field_t = type(getattr(cfg, k))
+            typed[k] = field_t(v) if field_t in (int, float, bool, str) else v
+        cfg = _dc.replace(cfg, **typed)
+    shape = get_shape(shape_name)
+    mesh_name = "pod2x16x16" if multi_pod else "pod16x16"
+    record = {
+        "arch": arch, "shape": shape_name, "mesh": mesh_name,
+        "strategy": fed.strategy, "tau": fed.tau, "ok": False,
+        "seq_parallel": seq_parallel, "tag": tag,
+        "cfg_overrides": cfg_overrides or {},
+        "opt_state_dtype": opt_state_dtype,
+    }
+    ok, why = _eligible(cfg, shape)
+    if not ok:
+        record["skipped"] = why
+        print(f"  SKIP {arch} x {shape_name}: {why}")
+        return record
+
+    mesh = make_production_mesh(multi_pod=multi_pod)
+    overrides = {"seq": ("model",)} if seq_parallel else {}
+    if rule_overrides:
+        overrides.update(rule_overrides)
+    rules = make_rules(mesh, overrides or None)
+    agents = n_agents(mesh)
+    n_chips = mesh.size
+    print(f"  {arch} x {shape_name} on {mesh_name} ({n_chips} chips, {agents} agents)")
+
+    try:
+        if shape.kind == "train":
+            batch_specs = input_specs(cfg, shape, rules, n_agents=agents)
+            axes = train_state_axes(cfg, fed)
+            state_specs = jax.eval_shape(
+                lambda: init_train_state(cfg, jax.random.key(0), agents,
+                                         adamw(state_dtype=opt_state_dtype), fed)
+            )
+            state_specs = attach(state_specs, axes, rules)
+
+            local_step = make_local_step(cfg, adamw(state_dtype=opt_state_dtype),
+                                         fed, rules, agents)
+            sync_step = make_sync_step(cfg, fed, rules, agents)
+            with mesh:
+                lowered_local = jax.jit(local_step).lower(state_specs, batch_specs)
+                record["local"] = _analyze("local_step", lowered_local)
+                lowered_sync = jax.jit(sync_step).lower(state_specs)
+                record["sync"] = _analyze("sync_step", lowered_sync)
+            flops = record["local"]["flops"]
+            hbm = record["local"]["bytes_accessed"]
+            wire = (
+                (fed.tau - 1) * record["local"]["wire_bytes"]
+                + record["sync"]["wire_bytes"]
+            ) / fed.tau
+            record["roofline"] = roofline(flops, hbm, wire).as_dict()
+        else:
+            if shape.kind == "prefill":
+                batch_specs = input_specs(cfg, shape, rules)
+                step = make_prefill_step(cfg, rules)
+                params_specs = attach(
+                    jax.eval_shape(lambda: _init_params_spec(cfg)),
+                    param_logical_axes(cfg), rules,
+                )
+                with mesh:
+                    lowered = jax.jit(step).lower(params_specs, batch_specs)
+                    record["prefill"] = _analyze("prefill", lowered)
+                r = record["prefill"]
+            else:
+                token, states, pos = input_specs(cfg, shape, rules)
+                step = make_serve_step(cfg, rules)
+                params_specs = attach(
+                    jax.eval_shape(lambda: _init_params_spec(cfg)),
+                    param_logical_axes(cfg), rules,
+                )
+                with mesh:
+                    # donate the cache/state buffers: decode updates them in
+                    # place (otherwise every step materializes a second cache)
+                    lowered = jax.jit(step, donate_argnums=(2,)).lower(
+                        params_specs, token, states, pos)
+                    record["serve"] = _analyze("serve_step", lowered)
+                r = record["serve"]
+            record["roofline"] = roofline(
+                r["flops"], r["bytes_accessed"], r["wire_bytes"]
+            ).as_dict()
+
+        record["model_flops_per_device"] = model_flops(cfg, shape, n_chips)
+        if record["roofline"]["flops"]:
+            record["useful_flops_ratio"] = (
+                record["model_flops_per_device"] / record["roofline"]["flops"]
+            )
+        record["ok"] = True
+    except Exception as e:  # noqa: BLE001 - report, keep sweeping
+        record["error"] = f"{type(e).__name__}: {e}"
+        record["traceback"] = traceback.format_exc()[-2000:]
+        print(f"    FAILED: {record['error']}")
+
+    os.makedirs(out_dir, exist_ok=True)
+    suffix = f"_{tag}" if tag else ""
+    path = os.path.join(out_dir, f"{arch}_{shape_name}_{mesh_name}{suffix}.json")
+    with open(path, "w") as f:
+        json.dump(record, f, indent=1, default=str)
+    return record
+
+
+def _init_params_spec(cfg):
+    from repro.models import init_params
+    return init_params(cfg, jax.random.key(0))
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default=None)
+    ap.add_argument("--shape", default=None)
+    ap.add_argument("--multi-pod", action="store_true")
+    ap.add_argument("--both-meshes", action="store_true")
+    ap.add_argument("--all", action="store_true")
+    ap.add_argument("--strategy", default="periodic",
+                    choices=["sync", "periodic", "decay", "consensus"])
+    ap.add_argument("--tau", type=int, default=8)
+    ap.add_argument("--no-seq-parallel", action="store_true",
+                    help="baseline ruleset (no sequence parallelism) for §Perf")
+    ap.add_argument("--set", action="append", default=[],
+                    help="ModelConfig override key=value (repeatable)")
+    ap.add_argument("--opt-dtype", default="float32",
+                    choices=["float32", "bfloat16"])
+    ap.add_argument("--tag", default="", help="artifact filename suffix")
+    ap.add_argument("--rule", action="append", default=[],
+                    help="sharding rule override logical=axis1[,axis2]|none")
+    ap.add_argument("--out", default="experiments/dryrun")
+    args = ap.parse_args()
+
+    fed = FedTrainConfig(strategy=args.strategy, tau=args.tau)
+    archs = list_archs() if (args.all or args.arch is None) else [args.arch]
+    shapes = list(SHAPE_REGISTRY) if (args.all or args.shape is None) else [args.shape]
+    meshes = [False, True] if (args.all or args.both_meshes) else [args.multi_pod]
+
+    results = []
+    for arch in archs:
+        for shape in shapes:
+            for mp in meshes:
+                results.append(
+                    run_one(arch, shape, multi_pod=mp, fed=fed, out_dir=args.out,
+                            seq_parallel=not args.no_seq_parallel,
+                            cfg_overrides=dict(kv.split("=", 1) for kv in args.set),
+                            opt_state_dtype=args.opt_dtype, tag=args.tag,
+                            rule_overrides={
+                                k: (None if v == "none" else tuple(v.split(",")))
+                                for k, v in (kv.split("=", 1) for kv in args.rule)
+                            })
+                )
+    n_ok = sum(r["ok"] for r in results)
+    n_skip = sum("skipped" in r for r in results)
+    n_fail = len(results) - n_ok - n_skip
+    print(f"\ndry-run complete: {n_ok} ok, {n_skip} skipped (documented), {n_fail} FAILED")
+    if n_fail:
+        raise SystemExit(1)
+
+
+if __name__ == "__main__":
+    main()

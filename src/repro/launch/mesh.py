@@ -1,0 +1,35 @@
+"""Production meshes. v5e pod = 16x16 = 256 chips; multi-pod = 2 pods = 512.
+
+IMPORTANT: import-time must never touch jax device state — everything here is
+a function. The dry-run entrypoint sets XLA_FLAGS for 512 host devices BEFORE
+importing jax (see dryrun.py lines 1-2).
+"""
+from __future__ import annotations
+
+import jax
+from jax.sharding import AxisType
+
+from repro.sharding.rules import DEFAULT_RULES, MeshRules
+
+
+def make_production_mesh(*, multi_pod: bool = False):
+    shape = (2, 16, 16) if multi_pod else (16, 16)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    return jax.make_mesh(shape, axes, axis_types=(AxisType.Auto,) * len(axes))
+
+
+def make_test_mesh(shape=(2, 2), axes=("data", "model")):
+    """Small mesh for CPU tests (requires >= prod(shape) local devices)."""
+    return jax.make_mesh(shape, axes, axis_types=(AxisType.Auto,) * len(axes))
+
+
+def make_rules(mesh, overrides: dict | None = None) -> MeshRules:
+    rules = dict(DEFAULT_RULES)
+    if overrides:
+        rules.update(overrides)
+    return MeshRules(mesh=mesh, rules=rules)
+
+
+def n_agents(mesh) -> int:
+    """Federated agents = size of the 'pod' axis (1 on a single pod)."""
+    return mesh.shape["pod"] if "pod" in mesh.axis_names else 1

@@ -1,0 +1,37 @@
+"""Serving steps: prefill (context ingest) and serve_step (one-token decode)."""
+from __future__ import annotations
+
+from typing import Optional
+
+import jax
+
+from repro.models.encdec import encdec_decode_step, encdec_forward
+from repro.models.transformer import decode_step, prefill
+from repro.sharding.rules import MeshRules, use_rules
+
+
+def make_prefill_step(cfg, rules: Optional[MeshRules] = None):
+    def prefill_step(params, batch):
+        with use_rules(rules):
+            if cfg.is_encoder_decoder:
+                logits, states = encdec_forward(
+                    cfg, params, batch["tokens"], batch["frames"], mode="prefill"
+                )
+            else:
+                logits, states = prefill(
+                    cfg, params, batch["tokens"],
+                    embeds=batch.get("patch_embeds"),
+                )
+        return logits[:, -1:], states
+
+    return prefill_step
+
+
+def make_serve_step(cfg, rules: Optional[MeshRules] = None):
+    def serve_step(params, token, states, pos):
+        with use_rules(rules):
+            if cfg.is_encoder_decoder:
+                return encdec_decode_step(cfg, params, token, states, pos)
+            return decode_step(cfg, params, token, states, pos)
+
+    return serve_step

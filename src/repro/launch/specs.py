@@ -1,0 +1,123 @@
+"""ShapeDtypeStruct input specs for every (arch x input-shape x mode).
+
+The specs carry NamedShardings (when rules are given) so jit.lower() picks up
+in_shardings directly from the arguments — no allocation ever happens
+(the shannon/kernels dry-run pattern).
+"""
+from __future__ import annotations
+
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import InputShape, ModelConfig
+from repro.models.transformer import (
+    decode_state_logical_axes,
+    init_decode_state,
+)
+from repro.models.encdec import (
+    encdec_state_logical_axes,
+    init_encdec_decode_state,
+)
+from repro.sharding.rules import MeshRules
+
+
+def attach(specs, axes, rules: Optional[MeshRules]):
+    """Attach NamedShardings from logical-axes trees to a spec pytree."""
+    if rules is None:
+        return specs
+    return jax.tree.map(
+        lambda s, a: jax.ShapeDtypeStruct(
+            s.shape, s.dtype, sharding=rules.named_sharding(tuple(a), s.shape)
+        ),
+        specs,
+        axes,
+        is_leaf=lambda x: isinstance(x, jax.ShapeDtypeStruct),
+    )
+
+
+def _sds(shape, dtype):
+    return jax.ShapeDtypeStruct(shape, dtype)
+
+
+def train_batch_specs(cfg: ModelConfig, shape: InputShape,
+                      rules: Optional[MeshRules], n_agents: int = 1):
+    """Batch pytree with leading agent axis (lm_loss consumes tokens[:, :-1])."""
+    if shape.global_batch % n_agents:
+        raise ValueError("global batch must divide agents")
+    b = shape.global_batch // n_agents
+    s = shape.seq_len
+    emb = jnp.dtype(cfg.compute_dtype)
+    specs, axes = {}, {}
+    if cfg.frontend == "vision":
+        f = cfg.n_frontend_tokens
+        specs["tokens"] = _sds((n_agents, b, s - f + 1), jnp.int32)
+        specs["patch_embeds"] = _sds((n_agents, b, f, cfg.d_model), emb)
+        axes["tokens"] = ("agents", "batch", None)
+        axes["patch_embeds"] = ("agents", "batch", None, "embed")
+    elif cfg.frontend == "audio":
+        specs["tokens"] = _sds((n_agents, b, s + 1), jnp.int32)
+        specs["frames"] = _sds((n_agents, b, cfg.n_frontend_tokens, cfg.d_model), emb)
+        axes["tokens"] = ("agents", "batch", None)
+        axes["frames"] = ("agents", "batch", None, "embed")
+    else:
+        specs["tokens"] = _sds((n_agents, b, s + 1), jnp.int32)
+        axes["tokens"] = ("agents", "batch", None)
+    return attach(specs, axes, rules)
+
+
+def prefill_specs(cfg: ModelConfig, shape: InputShape, rules: Optional[MeshRules]):
+    b, s = shape.global_batch, shape.seq_len
+    emb = jnp.dtype(cfg.compute_dtype)
+    specs, axes = {}, {}
+    if cfg.frontend == "vision":
+        f = cfg.n_frontend_tokens
+        specs["tokens"] = _sds((b, s - f), jnp.int32)
+        specs["patch_embeds"] = _sds((b, f, cfg.d_model), emb)
+        axes["tokens"] = ("batch", None)
+        axes["patch_embeds"] = ("batch", None, "embed")
+    elif cfg.frontend == "audio":
+        specs["tokens"] = _sds((b, s), jnp.int32)
+        specs["frames"] = _sds((b, cfg.n_frontend_tokens, cfg.d_model), emb)
+        axes["tokens"] = ("batch", None)
+        axes["frames"] = ("batch", None, "embed")
+    else:
+        specs["tokens"] = _sds((b, s), jnp.int32)
+        axes["tokens"] = ("batch", None)
+    return attach(specs, axes, rules)
+
+
+def decode_specs(cfg: ModelConfig, shape: InputShape, rules: Optional[MeshRules]):
+    """(token, states, pos) specs for serve_step; cache length = shape.seq_len."""
+    b, s = shape.global_batch, shape.seq_len
+    dtype = jnp.dtype(cfg.compute_dtype)
+    if cfg.is_encoder_decoder:
+        states = jax.eval_shape(
+            lambda: init_encdec_decode_state(
+                cfg, b, max_seq=s, n_frames=cfg.n_frontend_tokens, dtype=dtype
+            )
+        )
+        st_axes = encdec_state_logical_axes(cfg)
+    else:
+        states = jax.eval_shape(
+            lambda: init_decode_state(cfg, b, max_seq=s, dtype=dtype)
+        )
+        st_axes = decode_state_logical_axes(cfg)
+    token = _sds((b, 1), jnp.int32)
+    pos = _sds((b,), jnp.int32)
+    if rules is not None:
+        token = attach(token, ("batch", None), rules)
+        pos = attach(pos, ("batch",), rules)
+        states = attach(states, st_axes, rules)
+    return token, states, pos
+
+
+def input_specs(cfg: ModelConfig, shape: InputShape,
+                rules: Optional[MeshRules] = None, n_agents: int = 1):
+    """Dispatch on the shape kind; returns the spec pytree(s) for the step fn."""
+    if shape.kind == "train":
+        return train_batch_specs(cfg, shape, rules, n_agents)
+    if shape.kind == "prefill":
+        return prefill_specs(cfg, shape, rules)
+    return decode_specs(cfg, shape, rules)

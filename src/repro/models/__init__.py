@@ -1,0 +1,19 @@
+from repro.models.transformer import (
+    decode_step,
+    init_params,
+    lm_loss,
+    forward,
+    init_decode_state,
+    param_logical_axes,
+    prefill,
+)
+
+__all__ = [
+    "decode_step",
+    "forward",
+    "init_decode_state",
+    "init_params",
+    "lm_loss",
+    "param_logical_axes",
+    "prefill",
+]

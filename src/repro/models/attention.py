@@ -1,0 +1,447 @@
+"""Attention: full/causal and sliding-window, train + prefill + decode paths.
+
+Three implementations of the same math (tested against each other):
+  * einsum  — O(S^2) materialized scores; the oracle for small shapes.
+  * chunked — lax.scan over KV chunks with online softmax (flash-style in
+              pure JAX); the production default, memory O(S * chunk).
+  * Pallas  — repro.kernels.swa_attention, TPU target (interpret-tested).
+
+GQA is handled by repeating KV to the full head count in the S^2 paths (the
+repeat is sharded over the 'heads' model axis so per-device memory is
+unchanged); the decode path keeps the cache un-repeated (grouped einsum).
+"""
+from __future__ import annotations
+
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.layers import apply_rope, mk
+from repro.sharding.rules import logical_axis_size, shard
+
+
+def _shard_attn_act(t):
+    """(B,S,H,hd) activation constraint: prefer head (tensor-parallel) sharding,
+    fall back to q-sequence (context-parallel) sharding when the head count
+    does not divide the model axis (e.g. 24 heads on a 16-way axis)."""
+    if t.shape[2] % max(logical_axis_size("heads"), 1) == 0:
+        return shard(t, "batch", None, "heads", "head_dim")
+    return shard(t, "batch", "seq", None, None)
+
+
+def _shard_attn_kv(t):
+    """KV stays head-sharded when divisible; otherwise replicated (the
+    context-parallel fallback needs full KV per device for the chunk scan)."""
+    if t.shape[2] % max(logical_axis_size("heads"), 1) == 0:
+        return shard(t, "batch", None, "heads", "head_dim")
+    return t
+
+NEG_INF = -1e30
+
+
+def init_attention(key, cfg, *, cross: bool = False):
+    d, h, kv, hd = cfg.d_model, cfg.n_heads, cfg.n_kv_heads, cfg.head_dim
+    ks = jax.random.split(key, 4)
+    std = 0.02
+    p = {
+        "wq": mk(ks[0], (d, h * hd), ("embed_fsdp", "heads"), std=std),
+        "wk": mk(ks[1], (d, kv * hd), ("embed_fsdp", "kv_heads"), std=std),
+        "wv": mk(ks[2], (d, kv * hd), ("embed_fsdp", "kv_heads"), std=std),
+        "wo": mk(ks[3], (h * hd, d), ("heads", "embed_fsdp"), std=std / max(cfg.n_layers, 1) ** 0.5),
+    }
+    if cfg.qkv_bias:
+        p["bq"] = mk(ks[0], (h * hd,), ("heads",), zeros=True)
+        p["bk"] = mk(ks[1], (kv * hd,), ("kv_heads",), zeros=True)
+        p["bv"] = mk(ks[2], (kv * hd,), ("kv_heads",), zeros=True)
+    return p
+
+
+def _project_qkv(p, x, cfg, positions, *, rope: bool = True):
+    b, s, _ = x.shape
+    h, kv, hd = cfg.n_heads, cfg.n_kv_heads, cfg.head_dim
+    q = x @ p["wq"]
+    k = x @ p["wk"]
+    v = x @ p["wv"]
+    if "bq" in p:
+        q, k, v = q + p["bq"], k + p["bk"], v + p["bv"]
+    q = q.reshape(b, s, h, hd)
+    k = k.reshape(b, s, kv, hd)
+    v = v.reshape(b, s, kv, hd)
+    if rope and cfg.pos_emb == "rope":
+        q = apply_rope(q, positions, cfg.rope_theta)
+        k = apply_rope(k, positions, cfg.rope_theta)
+    return q, k, v
+
+
+def _repeat_kv(k, n_heads):
+    b, s, kv, hd = k.shape
+    reps = n_heads // kv
+    k = jnp.broadcast_to(k[:, :, :, None, :], (b, s, kv, reps, hd))
+    return k.reshape(b, s, n_heads, hd)
+
+
+def _mask_bias(q_pos, k_pos, *, causal: bool, window: Optional[int]):
+    """(.., Sq, Sk) additive bias from position tensors."""
+    ok = jnp.ones(q_pos.shape[:-1] + (q_pos.shape[-1], k_pos.shape[-1]), bool)
+    if causal:
+        ok &= k_pos[..., None, :] <= q_pos[..., :, None]
+    if window is not None:
+        ok &= k_pos[..., None, :] > q_pos[..., :, None] - window
+    return jnp.where(ok, 0.0, NEG_INF)
+
+
+def attn_einsum(q, k, v, q_pos, k_pos, *, causal=True, window=None):
+    """Oracle: q (B,S,H,hd), k/v (B,T,KV,hd); returns (B,S,H,hd)."""
+    h = q.shape[2]
+    k = _repeat_kv(k, h)
+    v = _repeat_kv(v, h)
+    scale = q.shape[-1] ** -0.5
+    scores = jnp.einsum("bshd,bthd->bhst", q, k).astype(jnp.float32) * scale
+    scores = scores + _mask_bias(q_pos, k_pos, causal=causal, window=window)[:, None]
+    w = jax.nn.softmax(scores, axis=-1).astype(q.dtype)
+    return jnp.einsum("bhst,bthd->bshd", w, v)
+
+
+def attn_chunked(q, k, v, q_pos, k_pos, *, causal=True, window=None, chunk=512):
+    """Online-softmax over KV chunks: memory O(S*chunk) instead of O(S^2)."""
+    b, s, h, hd = q.shape
+    t = k.shape[1]
+    k = _repeat_kv(k, h)
+    v = _repeat_kv(v, h)
+    if t % chunk:
+        pad = chunk - t % chunk
+        k = jnp.pad(k, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        v = jnp.pad(v, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        k_pos = jnp.pad(k_pos, ((0, 0), (0, pad)), constant_values=jnp.iinfo(jnp.int32).max)
+        t += pad
+    n_chunks = t // chunk
+    kc = k.reshape(b, n_chunks, chunk, h, hd).transpose(1, 0, 2, 3, 4)
+    vc = v.reshape(b, n_chunks, chunk, h, hd).transpose(1, 0, 2, 3, 4)
+    pc = k_pos.reshape(b, n_chunks, chunk).transpose(1, 0, 2)
+    scale = hd**-0.5
+
+    def step(carry, inputs):
+        m, l, acc = carry
+        k_i, v_i, p_i = inputs
+        s_i = jnp.einsum("bshd,bthd->bhst", q, k_i).astype(jnp.float32) * scale
+        bias = _mask_bias(q_pos, p_i, causal=causal, window=window)[:, None]
+        s_i = s_i + bias
+        m_new = jnp.maximum(m, s_i.max(axis=-1))
+        alpha = jnp.exp(m - m_new)
+        p = jnp.exp(s_i - m_new[..., None])
+        l_new = l * alpha + p.sum(axis=-1)
+        acc_new = acc * alpha[..., None] + jnp.einsum(
+            "bhst,bthd->bhsd", p.astype(q.dtype), v_i
+        ).astype(jnp.float32)
+        return (m_new, l_new, acc_new), None
+
+    m0 = jnp.full((b, h, s), -jnp.inf, jnp.float32)
+    l0 = jnp.zeros((b, h, s), jnp.float32)
+    a0 = jnp.zeros((b, h, s, hd), jnp.float32)
+    (m, l, acc), _ = jax.lax.scan(step, (m0, l0, a0), (kc, vc, pc))
+    out = acc / jnp.maximum(l, 1e-30)[..., None]
+    return out.transpose(0, 2, 1, 3).astype(q.dtype)
+
+
+# ----------------------------------------------------------------------------
+# Flash attention (pure-JAX, custom VJP): memory O(S * chunk) in fwd AND bwd.
+# The naive chunked scan saves per-chunk score tensors for autodiff; this
+# recomputes them in the backward pass (standard flash backward), which is
+# what makes train_4k/prefill_32k fit HBM.
+# Contiguous positions only (q_pos = q_offset + arange, k_pos = arange).
+# ----------------------------------------------------------------------------
+
+import functools as _ft
+
+
+@_ft.partial(jax.custom_vjp, nondiff_argnums=(3, 4, 5, 6))
+def flash_attention(q, k, v, causal, window, chunk, q_offset):
+    out, _ = _flash_fwd_impl(q, k, v, causal, window, chunk, q_offset)
+    return out
+
+
+def _flash_positions(b, s, t, q_offset):
+    qp = q_offset + jnp.arange(s)
+    kp = jnp.arange(t)
+    return qp, kp
+
+
+def _flash_chunk_bias(qp, kp_c, causal, window):
+    ok = jnp.ones((qp.shape[0], kp_c.shape[0]), bool)
+    if causal:
+        ok &= kp_c[None, :] <= qp[:, None]
+    if window is not None:
+        ok &= kp_c[None, :] > qp[:, None] - window
+    return jnp.where(ok, 0.0, NEG_INF)
+
+
+def _flash_fwd_impl(q, k, v, causal, window, chunk, q_offset):
+    b, s, h, d = q.shape
+    t = k.shape[1]
+    chunk = min(chunk, t)
+    pad = (-t) % chunk
+    if pad:
+        k = jnp.pad(k, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        v = jnp.pad(v, ((0, 0), (0, pad), (0, 0), (0, 0)))
+    qp, kp = _flash_positions(b, s, t + pad, q_offset)
+    kp = jnp.where(jnp.arange(t + pad) < t, kp, jnp.iinfo(jnp.int32).max // 2)
+    n_chunks = (t + pad) // chunk
+    kc = k.reshape(b, n_chunks, chunk, h, d).transpose(1, 0, 2, 3, 4)
+    vc = v.reshape(b, n_chunks, chunk, h, d).transpose(1, 0, 2, 3, 4)
+    pc = kp.reshape(n_chunks, chunk)
+    scale = d**-0.5
+
+    def step(carry, inp):
+        m, l, acc = carry
+        k_i, v_i, p_i = inp
+        s_i = jnp.einsum("bshd,bthd->bhst", q, k_i).astype(jnp.float32) * scale
+        s_i = s_i + _flash_chunk_bias(qp, p_i, causal, window)[None, None]
+        m_new = jnp.maximum(m, s_i.max(axis=-1))
+        alpha = jnp.exp(m - m_new)
+        p = jnp.exp(s_i - m_new[..., None])
+        l_new = l * alpha + p.sum(axis=-1)
+        acc_new = acc * alpha[..., None] + jnp.einsum(
+            "bhst,bthd->bhsd", p.astype(q.dtype), v_i
+        ).astype(jnp.float32)
+        return (m_new, l_new, acc_new), None
+
+    m0 = jnp.full((b, h, s), -jnp.inf, jnp.float32)
+    l0 = jnp.zeros((b, h, s), jnp.float32)
+    a0 = jnp.zeros((b, h, s, d), jnp.float32)
+    (m, l, acc), _ = jax.lax.scan(step, (m0, l0, a0), (kc, vc, pc))
+    l_safe = jnp.maximum(l, 1e-30)
+    out = (acc / l_safe[..., None]).transpose(0, 2, 1, 3).astype(q.dtype)
+    lse = m + jnp.log(l_safe)
+    return out, lse
+
+
+def _flash_fwd(q, k, v, causal, window, chunk, q_offset):
+    out, lse = _flash_fwd_impl(q, k, v, causal, window, chunk, q_offset)
+    return out, (q, k, v, out, lse)
+
+
+def _flash_bwd(causal, window, chunk, q_offset, res, dout):
+    q, k, v, out, lse = res
+    b, s, h, d = q.shape
+    t = k.shape[1]
+    chunk = min(chunk, t)
+    pad = (-t) % chunk
+    kq = jnp.pad(k, ((0, 0), (0, pad), (0, 0), (0, 0))) if pad else k
+    vq = jnp.pad(v, ((0, 0), (0, pad), (0, 0), (0, 0))) if pad else v
+    qp, kp = _flash_positions(b, s, t + pad, q_offset)
+    kp = jnp.where(jnp.arange(t + pad) < t, kp, jnp.iinfo(jnp.int32).max // 2)
+    n_chunks = (t + pad) // chunk
+    kc = kq.reshape(b, n_chunks, chunk, h, d).transpose(1, 0, 2, 3, 4)
+    vc = vq.reshape(b, n_chunks, chunk, h, d).transpose(1, 0, 2, 3, 4)
+    pc = kp.reshape(n_chunks, chunk)
+    scale = d**-0.5
+
+    do32 = dout.astype(jnp.float32)
+    delta = jnp.einsum("bshd,bshd->bhs", do32, out.astype(jnp.float32))
+
+    def step(dq, inp):
+        k_i, v_i, p_i = inp
+        s_i = jnp.einsum("bshd,bthd->bhst", q, k_i).astype(jnp.float32) * scale
+        s_i = s_i + _flash_chunk_bias(qp, p_i, causal, window)[None, None]
+        p = jnp.exp(s_i - lse[..., None])                       # (b,h,s,c)
+        dv_i = jnp.einsum("bhst,bshd->bthd", p, do32)
+        dp = jnp.einsum("bshd,bthd->bhst", do32, v_i.astype(jnp.float32))
+        ds = p * (dp - delta[..., None]) * scale
+        dq = dq + jnp.einsum("bhst,bthd->bshd", ds, k_i.astype(jnp.float32))
+        dk_i = jnp.einsum("bhst,bshd->bthd", ds, q.astype(jnp.float32))
+        return dq, (dk_i, dv_i)
+
+    dq0 = jnp.zeros((b, s, h, d), jnp.float32)
+    dq, (dk_c, dv_c) = jax.lax.scan(step, dq0, (kc, vc, pc))
+    dk = dk_c.transpose(1, 0, 2, 3, 4).reshape(b, t + pad, h, d)[:, :t]
+    dv = dv_c.transpose(1, 0, 2, 3, 4).reshape(b, t + pad, h, d)[:, :t]
+    return dq.astype(q.dtype), dk.astype(k.dtype), dv.astype(v.dtype)
+
+
+flash_attention.defvjp(_flash_fwd, _flash_bwd)
+
+
+def attention(p, x, cfg, *, kind: str, positions, impl: Optional[str] = None):
+    """Full-sequence causal attention (train / prefill). x: (B,S,d)."""
+    b, s, _ = x.shape
+    window = cfg.sliding_window if kind == "local" else None
+    q, k, v = _project_qkv(p, x, cfg, positions)
+    q = shard(q, "batch", "seq", "heads", "head_dim")
+    impl = impl or cfg.attn_impl
+    o = _attn_dispatch(q, k, v, positions, window, impl, cfg)
+    o = o.reshape(b, s, cfg.n_heads * cfg.head_dim)
+    return o @ p["wo"]
+
+
+def _attn_dispatch(q, k, v, positions, window, impl, cfg):
+    if impl == "einsum":
+        return attn_einsum(q, k, v, positions, positions, causal=True, window=window)
+    if impl == "chunked":
+        return attn_chunked(q, k, v, positions, positions, causal=True,
+                            window=window, chunk=cfg.attn_chunk)
+    # flash (default): contiguous positions starting at 0
+    kf = _repeat_kv(k, q.shape[2])
+    vf = _repeat_kv(v, q.shape[2])
+    q = _shard_attn_act(q)
+    kf = _shard_attn_kv(kf)
+    vf = _shard_attn_kv(vf)
+    return _shard_attn_act(flash_attention(q, kf, vf, True, window, cfg.attn_chunk, 0))
+
+
+def build_cache(k, v, positions, cache_len):
+    """Arrange full-sequence K/V (B,S,KV,hd) into a ring-buffer cache of
+    length W=cache_len where token at position p lives at slot p % W."""
+    b, s, kv, hd = k.shape
+    w = cache_len
+    if w >= s:
+        pad = ((0, 0), (0, w - s), (0, 0), (0, 0))
+        return {
+            "k": jnp.pad(k, pad),
+            "v": jnp.pad(v, pad),
+            "pos": jnp.pad(positions, ((0, 0), (0, w - s)), constant_values=-1),
+        }
+    k_t, v_t, p_t = k[:, -w:], v[:, -w:], positions[:, -w:]
+    slots = p_t % w                                       # (B, W)
+    def scatter(buf_last, slot_row):
+        out = jnp.zeros_like(buf_last)
+        return out.at[slot_row].set(buf_last)
+    return {
+        "k": jax.vmap(scatter)(k_t, slots),
+        "v": jax.vmap(scatter)(v_t, slots),
+        "pos": jax.vmap(lambda pr, sr: jnp.full_like(pr, -1).at[sr].set(pr))(p_t, slots),
+    }
+
+
+def attention_prefill(p, x, cfg, *, kind: str, positions, cache_len: int,
+                      impl: Optional[str] = None):
+    """Full-sequence attention that also returns the populated KV cache."""
+    b, s, _ = x.shape
+    window = cfg.sliding_window if kind == "local" else None
+    q, k, v = _project_qkv(p, x, cfg, positions)
+    impl = impl or cfg.attn_impl
+    o = _attn_dispatch(q, k, v, positions, window, impl, cfg)
+    o = o.reshape(b, s, cfg.n_heads * cfg.head_dim) @ p["wo"]
+    w = min(window, cache_len) if window else cache_len
+    cache = build_cache(k, v, positions, w)
+    return o, cache
+
+
+# ----------------------------------------------------------------------------
+# Decode path with (optionally ring-buffered) KV cache
+# ----------------------------------------------------------------------------
+
+def init_kv_cache(cfg, batch, kind: str, max_seq: int, dtype):
+    window = cfg.sliding_window if kind == "local" else None
+    w = min(window, max_seq) if window else max_seq
+    kv, hd = cfg.n_kv_heads, cfg.head_dim
+    return {
+        "k": jnp.zeros((batch, w, kv, hd), dtype),
+        "v": jnp.zeros((batch, w, kv, hd), dtype),
+        "pos": jnp.full((batch, w), -1, jnp.int32),
+    }
+
+
+def cache_logical_axes():
+    return {
+        "k": ("batch", "window", "kv_heads", "head_dim"),
+        "v": ("batch", "window", "kv_heads", "head_dim"),
+        "pos": ("batch", "window"),
+    }
+
+
+def write_cache(cache, k_new, v_new, pos, impl: str = "onehot"):
+    """k_new/v_new: (B,KV,hd); pos: (B,) absolute position. Ring-buffer write.
+
+    impl='onehot' (default) writes via arithmetic masking
+    cache*(1-onehot)+new*onehot, which partitions cleanly when the window
+    axis is model-sharded (a scatter on a sharded axis makes GSPMD gather
+    the whole cache — measured as the decode-peak dominator, §Perf-b).
+    impl='scatter' keeps the dynamic_update_slice baseline for comparison.
+    """
+    w = cache["k"].shape[1]
+    slot = pos % w
+
+    if impl == "onehot":
+        oh = jax.nn.one_hot(slot, w, dtype=cache["k"].dtype)      # (B, W)
+        ohk = oh[:, :, None, None]
+
+        def upd(buf, new):
+            return buf * (1 - ohk) + new[:, None] * ohk
+
+        pos_upd = jnp.where(oh > 0, pos[:, None], cache["pos"]).astype(
+            cache["pos"].dtype)
+        return {
+            "k": upd(cache["k"], k_new),
+            "v": upd(cache["v"], v_new),
+            "pos": pos_upd,
+        }
+
+    def upd(buf, new):
+        return jax.vmap(lambda b_row, n, s_: jax.lax.dynamic_update_slice(
+            b_row, n[None], (s_,) + (0,) * (b_row.ndim - 1)
+        ))(buf, new, slot)
+
+    return {
+        "k": upd(cache["k"], k_new),
+        "v": upd(cache["v"], v_new),
+        "pos": jax.vmap(lambda r, s_, p_: r.at[s_].set(p_))(cache["pos"], slot, pos),
+    }
+
+
+def attention_decode(p, x, cache, cfg, *, kind: str, pos):
+    """One-token decode. x: (B,1,d); pos: (B,) absolute position of the new token."""
+    b = x.shape[0]
+    h, kv, hd = cfg.n_heads, cfg.n_kv_heads, cfg.head_dim
+    g = h // kv
+    window = cfg.sliding_window if kind == "local" else None
+
+    q, k, v = _project_qkv(p, x, cfg, pos[:, None])
+    cache = write_cache(cache, k[:, 0], v[:, 0], pos, impl=cfg.cache_update)
+
+    qh = q[:, 0].reshape(b, kv, g, hd)
+    scale = hd**-0.5
+    scores = jnp.einsum("bngh,btnh->bngt", qh, cache["k"]).astype(jnp.float32) * scale
+    kp = cache["pos"]
+    ok = (kp >= 0) & (kp <= pos[:, None])
+    if window is not None:
+        ok &= kp > (pos[:, None] - window)
+    scores = scores + jnp.where(ok, 0.0, NEG_INF)[:, None, None, :]
+    wgt = jax.nn.softmax(scores, axis=-1).astype(x.dtype)
+    o = jnp.einsum("bngt,btnh->bngh", wgt, cache["v"]).reshape(b, 1, h * hd)
+    return o @ p["wo"], cache
+
+
+# ----------------------------------------------------------------------------
+# Cross-attention (whisper decoder); KV precomputed from encoder output
+# ----------------------------------------------------------------------------
+
+def cross_kv(p, enc_out, cfg):
+    b, t, _ = enc_out.shape
+    kv, hd = cfg.n_kv_heads, cfg.head_dim
+    k = enc_out @ p["wk"]
+    v = enc_out @ p["wv"]
+    if "bk" in p:
+        k, v = k + p["bk"], v + p["bv"]
+    return k.reshape(b, t, kv, hd), v.reshape(b, t, kv, hd)
+
+
+def cross_attention(p, x, k, v, cfg):
+    """x: (B,S,d) queries; k/v: (B,T,KV,hd) precomputed from encoder."""
+    b, s, _ = x.shape
+    h, hd = cfg.n_heads, cfg.head_dim
+    q = x @ p["wq"]
+    if "bq" in p:
+        q = q + p["bq"]
+    q = q.reshape(b, s, h, hd)
+    t = k.shape[1]
+    zeros = jnp.zeros((b, s), jnp.int32)
+    o = attn_einsum(
+        q, k, v,
+        q_pos=zeros, k_pos=jnp.zeros((b, t), jnp.int32),
+        causal=False, window=None,
+    ) if s * t <= 1 << 22 else attn_chunked(
+        q, k, v, q_pos=zeros, k_pos=jnp.zeros((b, t), jnp.int32),
+        causal=False, window=None, chunk=cfg.attn_chunk,
+    )
+    return o.reshape(b, s, h * hd) @ p["wo"]

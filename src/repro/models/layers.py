@@ -1,0 +1,177 @@
+"""Primitive layers shared by every architecture (pure JAX, no flax).
+
+Param convention: nested dicts of Leaf(value, axes) during init; split into
+(params, axes) trees by `split_leaves`. `axes` are logical axis names consumed
+by repro.sharding.rules.
+"""
+from __future__ import annotations
+
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.sharding.rules import shard
+
+
+@jax.tree_util.register_pytree_node_class
+class Leaf:
+    """A parameter leaf carrying static logical axes (pytree aux data), so
+    Leaf trees survive jax.eval_shape / vmap while axes stay metadata."""
+
+    __slots__ = ("value", "axes")
+
+    def __init__(self, value, axes):
+        self.value = value
+        self.axes = tuple(axes)
+
+    def tree_flatten(self):
+        return (self.value,), self.axes
+
+    @classmethod
+    def tree_unflatten(cls, aux, children):
+        return cls(children[0], aux)
+
+    def with_prefix(self, name):
+        return Leaf(self.value, (name,) + self.axes)
+
+
+def mk(key, shape, axes, std: float = 0.02, dtype=jnp.float32, zeros=False, ones=False):
+    if ones:
+        v = jnp.ones(shape, dtype)
+    elif zeros:
+        v = jnp.zeros(shape, dtype)
+    else:
+        v = std * jax.random.normal(key, shape, dtype)
+    return Leaf(v, tuple(axes))
+
+
+def is_leaf(x):
+    return isinstance(x, Leaf)
+
+
+def split_leaves(tree):
+    params = jax.tree.map(lambda l: l.value, tree, is_leaf=is_leaf)
+    axes = jax.tree.map(lambda l: l.axes, tree, is_leaf=is_leaf)
+    return params, axes
+
+
+def cast_tree(tree, dtype):
+    return jax.tree.map(
+        lambda x: x.astype(dtype) if jnp.issubdtype(x.dtype, jnp.floating) else x, tree
+    )
+
+
+# ----------------------------------------------------------------------------
+# Norms
+# ----------------------------------------------------------------------------
+
+def rmsnorm(x, scale, eps: float = 1e-6):
+    dt = x.dtype
+    x = x.astype(jnp.float32)
+    x = x * jax.lax.rsqrt(jnp.mean(jnp.square(x), axis=-1, keepdims=True) + eps)
+    return (x * (1.0 + scale.astype(jnp.float32))).astype(dt)
+
+
+def layernorm(x, scale, bias, eps: float = 1e-5):
+    dt = x.dtype
+    x = x.astype(jnp.float32)
+    mu = jnp.mean(x, axis=-1, keepdims=True)
+    var = jnp.mean(jnp.square(x - mu), axis=-1, keepdims=True)
+    y = (x - mu) * jax.lax.rsqrt(var + eps)
+    return (y * scale.astype(jnp.float32) + bias.astype(jnp.float32)).astype(dt)
+
+
+def init_norm(key, d, kind: str):
+    if kind == "rmsnorm":
+        return {"scale": mk(key, (d,), ("embed",), zeros=True)}
+    return {
+        "scale": mk(key, (d,), ("embed",), ones=True),
+        "bias": mk(key, (d,), ("embed",), zeros=True),
+    }
+
+
+def apply_norm(p, x, kind: str):
+    if kind == "rmsnorm":
+        return rmsnorm(x, p["scale"])
+    return layernorm(x, p["scale"], p["bias"])
+
+
+# ----------------------------------------------------------------------------
+# Rotary embeddings
+# ----------------------------------------------------------------------------
+
+def rope_frequencies(head_dim: int, theta: float):
+    half = head_dim // 2
+    return 1.0 / (theta ** (jnp.arange(half, dtype=jnp.float32) / half))
+
+
+def apply_rope(x, positions, theta: float):
+    """x: (..., S, H, hd) or (..., S, hd); positions: broadcastable to (..., S)."""
+    hd = x.shape[-1]
+    freqs = rope_frequencies(hd, theta)                     # (hd/2,)
+    angles = positions.astype(jnp.float32)[..., None] * freqs  # (..., S, hd/2)
+    if x.ndim == angles.ndim + 1:                           # head axis present
+        angles = angles[..., None, :]
+    cos, sin = jnp.cos(angles), jnp.sin(angles)
+    x1, x2 = jnp.split(x.astype(jnp.float32), 2, axis=-1)
+    out = jnp.concatenate([x1 * cos - x2 * sin, x1 * sin + x2 * cos], axis=-1)
+    return out.astype(x.dtype)
+
+
+def sinusoidal_positions(n_pos: int, d: int):
+    return sinusoidal_for_positions(jnp.arange(n_pos), d)
+
+
+def sinusoidal_for_positions(pos, d: int):
+    """pos: any int array; returns (..., d) sinusoidal embeddings."""
+    pos = pos.astype(jnp.float32)[..., None]
+    dim = jnp.arange(d // 2, dtype=jnp.float32)
+    angle = pos / jnp.power(10000.0, 2.0 * dim / d)
+    return jnp.concatenate([jnp.sin(angle), jnp.cos(angle)], axis=-1)
+
+
+# ----------------------------------------------------------------------------
+# MLP
+# ----------------------------------------------------------------------------
+
+def init_mlp(key, d, d_ff, activation: str):
+    k1, k2, k3 = jax.random.split(key, 3)
+    p = {"w_down": mk(k2, (d_ff, d), ("ff", "embed_fsdp"), std=0.02 / max(1, d_ff) ** 0.5)}
+    if activation in ("swiglu", "geglu"):
+        p["w_gate"] = mk(k1, (d, d_ff), ("embed_fsdp", "ff"))
+        p["w_up"] = mk(k3, (d, d_ff), ("embed_fsdp", "ff"))
+    else:
+        p["w_in"] = mk(k1, (d, d_ff), ("embed_fsdp", "ff"))
+    return p
+
+
+def apply_mlp(p, x, activation: str):
+    if activation in ("swiglu", "geglu"):
+        gate = x @ p["w_gate"]
+        up = x @ p["w_up"]
+        act = jax.nn.silu(gate) if activation == "swiglu" else jax.nn.gelu(gate)
+        h = act * up
+    else:
+        h = jax.nn.gelu(x @ p["w_in"])
+    h = shard(h, "batch", "seq", "ff")
+    return h @ p["w_down"]
+
+
+# ----------------------------------------------------------------------------
+# Embedding / unembedding
+# ----------------------------------------------------------------------------
+
+def init_embedding(key, vocab, d):
+    return {"table": mk(key, (vocab, d), ("vocab", "embed_fsdp"), std=0.02)}
+
+
+def embed(p, tokens, scale: Optional[float] = None):
+    out = jnp.take(p["table"], tokens, axis=0)
+    if scale is not None:
+        out = out * scale
+    return out
+
+
+def unembed(p, x):
+    return x @ p["table"].T

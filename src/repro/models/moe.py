@@ -1,0 +1,125 @@
+"""Mixture-of-Experts FFN: top-k routing with capacity-based GSPMD dispatch.
+
+Switch/GShard-style: tokens are split into groups; within a group each expert
+accepts at most C = top_k * S / E * capacity_factor tokens (overflow drops to
+the residual path). Dispatch/combine are one-hot einsums so GSPMD can lower
+the group->expert exchange to an all-to-all when groups are sharded over
+'data'+'model' and experts over 'model'. Variants:
+
+  * shared experts (kimi-k2): always-on expert(s) added to the routed output.
+  * dense residual (arctic): a parallel dense MLP added to the routed output.
+
+An auxiliary load-balance loss (Switch eq. 4) is returned for training.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.layers import init_mlp, apply_mlp, mk
+from repro.sharding.rules import logical_axis_size, shard
+
+
+def init_moe(key, cfg):
+    d, e, ff = cfg.d_model, cfg.n_experts, cfg.expert_d_ff
+    ks = jax.random.split(key, 6)
+    glu = cfg.activation in ("swiglu", "geglu")
+    p = {
+        "router": mk(ks[0], (d, e), ("embed", "experts"), std=0.02),
+        "w_down": mk(ks[3], (e, ff, d), ("experts", "expert_ff", "embed_fsdp"),
+                     std=0.02 / max(1, ff) ** 0.5),
+    }
+    if glu:
+        p["w_gate"] = mk(ks[1], (e, d, ff), ("experts", "embed_fsdp", "expert_ff"))
+        p["w_up"] = mk(ks[2], (e, d, ff), ("experts", "embed_fsdp", "expert_ff"))
+    else:
+        p["w_in"] = mk(ks[1], (e, d, ff), ("experts", "embed_fsdp", "expert_ff"))
+    if cfg.n_shared_experts:
+        p["shared"] = init_mlp(ks[4], d, ff * cfg.n_shared_experts, cfg.activation)
+    if cfg.dense_residual:
+        p["residual"] = init_mlp(ks[5], d, cfg.d_ff, cfg.activation)
+    return p
+
+
+def _group_tokens(x, group_size):
+    """(B,S,d) -> (G, S_g, d) with S_g <= group_size, padding if needed."""
+    b, s, d = x.shape
+    tokens = b * s
+    g_sz = min(group_size, tokens)
+    pad = (-tokens) % g_sz
+    flat = x.reshape(tokens, d)
+    if pad:
+        flat = jnp.pad(flat, ((0, pad), (0, 0)))
+    return flat.reshape(-1, g_sz, d), tokens, pad
+
+
+def apply_moe(p, x, cfg, group_size: int = 0):
+    """Returns (out (B,S,d), aux_loss scalar)."""
+    b, s, d = x.shape
+    e, k = cfg.n_experts, cfg.top_k
+    group_size = group_size or cfg.moe_group_size
+    # SP compatibility: when the seq axis is model-sharded, cap the group at
+    # the per-shard sequence so the (B,S,d)->(G,Sg,d) reshape never crosses a
+    # shard boundary (otherwise GSPMD gathers the full activation + fp32
+    # cotangent all-reduces per MoE layer — measured dominant for kimi-k2).
+    seq_shards = max(logical_axis_size("seq"), 1)
+    if s % seq_shards == 0 and (s // seq_shards) < group_size:
+        group_size = s // seq_shards
+    xg, tokens, _pad = _group_tokens(x, group_size)
+    g, sg, _ = xg.shape
+    xg = shard(xg, "tokens", None, "embed")
+
+    logits = (xg @ p["router"]).astype(jnp.float32)          # (G,S,E)
+    probs = jax.nn.softmax(logits, axis=-1)
+    top_w, top_i = jax.lax.top_k(probs, k)                   # (G,S,k)
+    top_w = top_w / jnp.maximum(top_w.sum(-1, keepdims=True), 1e-9)
+
+    cap = max(1, int(sg * k / e * cfg.capacity_factor))
+
+    # position-in-expert for each (token, slot): cumulative count of prior
+    # assignments to the same expert within the group.
+    onehot = jax.nn.one_hot(top_i, e, dtype=jnp.float32)     # (G,S,k,E)
+    flat_oh = onehot.reshape(g, sg * k, e)
+    pos_in_e = (jnp.cumsum(flat_oh, axis=1) - flat_oh).reshape(g, sg, k, e)
+    pos = jnp.sum(pos_in_e * onehot, axis=-1)                # (G,S,k)
+    keep = pos < cap
+    w = top_w * keep
+
+    # dispatch: (G,S,E,C) one-hot combine of expert id and capacity slot
+    pos_oh = jax.nn.one_hot(pos, cap, dtype=jnp.float32)     # (G,S,k,C)
+    dispatch = jnp.einsum("gske,gskc->gsec", onehot * keep[..., None], pos_oh)
+    combine = jnp.einsum("gske,gskc,gsk->gsec", onehot, pos_oh, w)
+    # keep the (G,S,E,C) one-hots resident: G on data, E on model — without
+    # this GSPMD reshards the full dispatch tensor across the mesh (measured
+    # as the dominant collective term for kimi-k2, §Perf-a).
+    dispatch = shard(dispatch.astype(xg.dtype), "tokens", None, None, None)
+    combine = shard(combine.astype(xg.dtype), "tokens", None, None, None)
+
+    xe = jnp.einsum("gsec,gsd->gecd", dispatch, xg)          # (G,E,C,d)
+    xe = shard(xe, "batch", "experts", None, "embed")
+
+    glu = cfg.activation in ("swiglu", "geglu")
+    if glu:
+        gate = jnp.einsum("gecd,edf->gecf", xe, p["w_gate"])
+        up = jnp.einsum("gecd,edf->gecf", xe, p["w_up"])
+        act = jax.nn.silu(gate) if cfg.activation == "swiglu" else jax.nn.gelu(gate)
+        h = act * up
+    else:
+        h = jax.nn.gelu(jnp.einsum("gecd,edf->gecf", xe, p["w_in"]))
+    ye = jnp.einsum("gecf,efd->gecd", h, p["w_down"])        # (G,E,C,d)
+    ye = shard(ye, "batch", "experts", None, "embed")
+
+    yg = jnp.einsum("gsec,gecd->gsd", combine, ye)           # (G,S,d)
+    yg = shard(yg, "tokens", None, "embed")
+    out = yg.reshape(-1, d)[:tokens].reshape(b, s, d)
+
+    # Switch-style load-balance aux: E * sum_e f_e * P_e
+    frac_tokens = jnp.mean(onehot[..., 0, :], axis=(0, 1))   # top-1 routing frac
+    frac_probs = jnp.mean(probs.reshape(-1, e), axis=0)
+    aux = e * jnp.sum(frac_tokens * frac_probs)
+
+    if cfg.n_shared_experts:
+        out = out + apply_mlp(p["shared"], x, cfg.activation)
+    if cfg.dense_residual:
+        out = out + apply_mlp(p["residual"], x, cfg.activation)
+    return out, aux

@@ -1,0 +1,97 @@
+"""Griffin recurrent block [arXiv:2402.19427]: conv1d + RG-LRU (RecurrentGemma).
+
+Block: x -> (gate branch: Linear+GeLU) * (rec branch: Linear -> temporal
+Conv1D(width 4) -> RG-LRU) -> Linear out.
+
+RG-LRU: r_t = sigmoid(W_a x_t + b_a)        (recurrence gate)
+        i_t = sigmoid(W_x x_t + b_x)        (input gate)
+        a_t = exp(-c * softplus(Lambda) * r_t)          c = 8
+        h_t = a_t * h_{t-1} + sqrt(1 - a_t^2) * (i_t * x_t)
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.layers import mk
+from repro.sharding.rules import shard
+
+_C = 8.0
+
+
+def init_rglru_block(key, cfg):
+    d, w = cfg.d_model, cfg.lru_dim
+    ks = jax.random.split(key, 8)
+    return {
+        "w_gate": mk(ks[0], (d, w), ("embed_fsdp", "lru"), std=0.02),
+        "w_rec_in": mk(ks[1], (d, w), ("embed_fsdp", "lru"), std=0.02),
+        "conv_w": mk(ks[2], (cfg.conv_width, w), (None, "lru"), std=0.2),
+        "conv_b": mk(ks[2], (w,), ("lru",), zeros=True),
+        "wa": mk(ks[3], (w, w), ("lru", None), std=0.02),
+        "ba": mk(ks[3], (w,), ("lru",), zeros=True),
+        "wx": mk(ks[4], (w, w), ("lru", None), std=0.02),
+        "bx": mk(ks[4], (w,), ("lru",), zeros=True),
+        "lam": mk(ks[5], (w,), ("lru",), std=0.5),
+        "w_out": mk(ks[6], (w, d), ("lru", "embed_fsdp"),
+                    std=0.02 / max(cfg.n_layers, 1) ** 0.5),
+    }
+
+
+def _causal_conv1d(x, w, b, conv_state):
+    """x: (B,S,W); w: (K,W); conv_state: (B,K-1,W) trailing inputs of prev call."""
+    k = w.shape[0]
+    xp = jnp.concatenate([conv_state, x], axis=1)          # (B, S+K-1, W)
+    out = sum(xp[:, i : i + x.shape[1]] * w[i] for i in range(k))
+    new_state = xp[:, x.shape[1] :][:, -(k - 1):] if k > 1 else conv_state
+    return out + b, new_state
+
+
+def rglru_scan(a_log, gate_in, h0):
+    """h_t = a_t h_{t-1} + sqrt(1-a_t^2) (i_t * x_t) via associative scan.
+
+    a_log (log a_t, <=0), gate_in = i_t * x_t: (B,S,W); h0: (B,W).
+    Uses the linear-recurrence associative combine for O(log S) depth.
+    """
+    a = jnp.exp(a_log)
+    inp = jnp.sqrt(jnp.clip(1.0 - jnp.exp(2.0 * a_log), 1e-12, 1.0)) * gate_in
+    # incorporate h0 into the first input
+    inp = inp.at[:, 0].add(a[:, 0] * h0)
+
+    def combine(c1, c2):
+        a1, b1 = c1
+        a2, b2 = c2
+        return a1 * a2, a2 * b1 + b2
+
+    a_c, h = jax.lax.associative_scan(combine, (a, inp), axis=1)
+    return h, h[:, -1]
+
+
+def apply_rglru_block(p, x, cfg, state):
+    """x: (B,S,d); state: {'h': (B,W), 'conv': (B,K-1,W)}."""
+    gate = jax.nn.gelu(x @ p["w_gate"])
+    rec = x @ p["w_rec_in"]
+    rec = shard(rec, "batch", "seq", "lru")
+    rec, conv_state = _causal_conv1d(rec, p["conv_w"], p["conv_b"], state["conv"])
+
+    r = jax.nn.sigmoid(rec @ p["wa"] + p["ba"])
+    i = jax.nn.sigmoid(rec @ p["wx"] + p["bx"])
+    a_log = -_C * jax.nn.softplus(p["lam"]) * r            # log a_t <= 0
+    h, h_last = rglru_scan(
+        a_log.astype(jnp.float32),
+        (i * rec).astype(jnp.float32),
+        state["h"],
+    )
+    out = (gate * h.astype(x.dtype)) @ p["w_out"]
+    return out, {"h": h_last, "conv": conv_state}
+
+
+def init_rglru_state(cfg, batch, dtype=jnp.float32):
+    w = cfg.lru_dim
+    return {
+        "h": jnp.zeros((batch, w), jnp.float32),
+        "conv": jnp.zeros((batch, cfg.conv_width - 1, w), dtype),
+    }
+
+
+def rglru_state_logical_axes():
+    return {"h": ("batch", "lru"), "conv": ("batch", None, "lru")}

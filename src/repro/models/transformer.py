@@ -1,0 +1,536 @@
+"""Unified decoder LM covering every assigned architecture family.
+
+Layer plan: layers are grouped into [head (unrolled)] + [cycles (lax.scan over
+stacked params, one cycle = one repetition of cfg.layer_pattern)] + [tail
+(unrolled remainder)]. Scan-over-layers keeps the HLO small regardless of
+depth; remat wraps the cycle body when cfg.remat.
+
+Modes:
+  * train    — full sequence, recurrent states zero-initialized, caches unused.
+  * prefill  — full sequence; returns populated KV caches / recurrent states.
+  * decode   — one token against caches/states (serve_step).
+
+Encoder-decoder (whisper) and VLM prefix handling live in
+repro.models.encdec / the `embeds` argument here respectively.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import rglru as rg
+from repro.models import rwkv6 as rw
+from repro.models.attention import (
+    attention,
+    attention_decode,
+    attention_prefill,
+    cache_logical_axes,
+    init_attention,
+    init_kv_cache,
+)
+from repro.models.layers import (
+    Leaf,
+    apply_mlp,
+    apply_norm,
+    embed,
+    init_embedding,
+    init_mlp,
+    init_norm,
+    is_leaf,
+    mk,
+    sinusoidal_for_positions,
+    sinusoidal_positions,
+    split_leaves,
+    unembed,
+)
+from repro.models.moe import apply_moe, init_moe
+from repro.sharding.rules import shard
+
+
+# ----------------------------------------------------------------------------
+# Layer plan
+# ----------------------------------------------------------------------------
+
+@dataclasses.dataclass(frozen=True)
+class LayerPlan:
+    head: tuple          # absolute layer indices, unrolled
+    cycle_kinds: tuple   # block kinds within one scanned cycle
+    n_cycles: int
+    tail: tuple          # absolute layer indices, unrolled
+
+
+def layer_plan(cfg) -> LayerPlan:
+    head = tuple(range(cfg.first_k_dense)) if cfg.family == "moe" else ()
+    start = len(head)
+    cyc = len(cfg.layer_pattern)
+    remaining = cfg.n_layers - start
+    n_cycles = remaining // cyc if cfg.scan_layers else 0
+    tail_start = start + n_cycles * cyc
+    tail = tuple(range(tail_start, cfg.n_layers))
+    return LayerPlan(head, cfg.layer_pattern, n_cycles, tail)
+
+
+def _ffn_kind(cfg, layer_idx: int) -> str:
+    if cfg.family == "moe" and layer_idx >= cfg.first_k_dense:
+        return "moe"
+    return "dense"
+
+
+# ----------------------------------------------------------------------------
+# Per-block init / apply
+# ----------------------------------------------------------------------------
+
+def _init_block(key, cfg, kind: str, ffn: str):
+    k1, k2, k3, k4 = jax.random.split(key, 4)
+    d = cfg.d_model
+    p: dict = {"ln1": init_norm(k1, d, cfg.norm)}
+    if kind in ("attn", "local"):
+        p["attn"] = init_attention(k2, cfg)
+    elif kind == "rglru":
+        p["rec"] = rg.init_rglru_block(k2, cfg)
+    elif kind == "wkv":
+        p["tm"] = rw.init_time_mix(k2, cfg)
+        p["ln2"] = init_norm(k3, d, cfg.norm)
+        p["cm"] = rw.init_channel_mix(k4, cfg)
+        return p
+    p["ln2"] = init_norm(k3, d, cfg.norm)
+    if ffn == "moe":
+        p["moe"] = init_moe(k4, cfg)
+    else:
+        p["mlp"] = init_mlp(k4, d, cfg.d_ff, cfg.activation)
+    return p
+
+
+def _init_block_state(cfg, kind: str, batch: int, mode: str, max_seq: int, dtype):
+    if kind in ("attn", "local"):
+        if mode == "train":
+            return {}
+        return {"cache": init_kv_cache(cfg, batch, kind, max_seq, dtype)}
+    if kind == "rglru":
+        return {"rec": rg.init_rglru_state(cfg, batch, dtype)}
+    return {"wkv": rw.init_wkv_state(cfg, batch, dtype)}
+
+
+def _block_state_axes(cfg, kind: str, mode: str):
+    if kind in ("attn", "local"):
+        return {} if mode == "train" else {"cache": cache_logical_axes()}
+    if kind == "rglru":
+        return {"rec": rg.rglru_state_logical_axes()}
+    return {"wkv": rw.wkv_state_logical_axes()}
+
+
+def _apply_block(p, x, cfg, kind: str, ffn: str, *, positions, state, mode, pos):
+    """Returns (x, new_state, aux)."""
+    aux = jnp.zeros((), jnp.float32)
+    xa = apply_norm(p["ln1"], x, cfg.norm)
+    if kind in ("attn", "local"):
+        if mode == "decode":
+            y, cache = attention_decode(p["attn"], xa, state["cache"], cfg,
+                                        kind=kind, pos=pos)
+            new_state = {"cache": cache}
+        elif mode == "prefill":
+            cache_len = state["cache"]["k"].shape[1]
+            y, cache = attention_prefill(p["attn"], xa, cfg, kind=kind,
+                                         positions=positions, cache_len=cache_len)
+            new_state = {"cache": cache}
+        else:
+            y = attention(p["attn"], xa, cfg, kind=kind, positions=positions)
+            new_state = {}
+        x = x + y
+    elif kind == "rglru":
+        y, rec = rg.apply_rglru_block(p["rec"], xa, cfg, state["rec"])
+        new_state = {"rec": rec}
+        x = x + y
+    else:  # wkv: carries its own channel-mix as the FFN
+        st = state["wkv"]
+        impl = None
+        if cfg.wkv_impl == "chunked" and xa.shape[1] > 1:
+            import functools
+            impl = functools.partial(rw.wkv_chunked, chunk=cfg.wkv_chunk)
+        y, tm = rw.time_mix(p["tm"], xa, cfg, st["tm"], wkv_impl=impl)
+        x = x + y
+        xb = apply_norm(p["ln2"], x, cfg.norm)
+        y2, cm_shift = rw.channel_mix(p["cm"], xb, cfg, st["cm_shift"])
+        x = x + y2
+        return x, {"wkv": {"tm": tm, "cm_shift": cm_shift}}, aux
+
+    xb = apply_norm(p["ln2"], x, cfg.norm)
+    if ffn == "moe":
+        y, aux = apply_moe(p["moe"], xb, cfg)
+    else:
+        y = apply_mlp(p["mlp"], xb, cfg.activation)
+    x = x + y
+    x = shard(x, "batch", "seq", "embed")
+    return x, new_state, aux
+
+
+# ----------------------------------------------------------------------------
+# Model init
+# ----------------------------------------------------------------------------
+
+def padded_vocab(cfg) -> int:
+    return -(-cfg.vocab_size // 128) * 128
+
+
+def _build_leaf_tree(cfg, key):
+    if cfg.is_encoder_decoder:
+        from repro.models.encdec import build_encdec_leaf_tree
+        return build_encdec_leaf_tree(cfg, key)
+    plan = layer_plan(cfg)
+    keys = jax.random.split(key, 8)
+    p: dict = {"embed": init_embedding(keys[0], padded_vocab(cfg), cfg.d_model)}
+    p["final_norm"] = init_norm(keys[1], cfg.d_model, cfg.norm)
+    if not cfg.tie_embeddings:
+        p["unembed"] = {
+            "w": mk(keys[2], (cfg.d_model, padded_vocab(cfg)),
+                    ("embed_fsdp", "vocab"), std=0.02)
+        }
+    if cfg.family == "ssm":
+        p["ln0"] = init_norm(keys[3], cfg.d_model, cfg.norm)
+    if cfg.frontend == "vision":
+        # projector stub: identity-shaped linear from frontend embed space
+        p["projector"] = {
+            "w": mk(keys[4], (cfg.d_model, cfg.d_model), ("embed_fsdp", "embed"),
+                    std=0.02)
+        }
+
+    hkeys = jax.random.split(keys[5], max(len(plan.head), 1))
+    p["head_blocks"] = [
+        _init_block(hkeys[i], cfg, cfg.block_kind(li), _ffn_kind(cfg, li))
+        for i, li in enumerate(plan.head)
+    ]
+
+    if plan.n_cycles:
+        ckeys = jax.random.split(keys[6], plan.n_cycles)
+        base = len(plan.head)
+
+        def init_cycle(k):
+            bk = jax.random.split(k, len(plan.cycle_kinds))
+            return [
+                _init_block(bk[j], cfg, kind, _ffn_kind(cfg, base + j))
+                for j, kind in enumerate(plan.cycle_kinds)
+            ]
+
+        stacked = jax.vmap(init_cycle)(ckeys)
+        stacked = jax.tree.map(lambda l: l.with_prefix("layers"), stacked,
+                               is_leaf=is_leaf)
+        p["cycles"] = stacked
+    else:
+        p["cycles"] = []
+
+    tkeys = jax.random.split(keys[7], max(len(plan.tail), 1))
+    p["tail_blocks"] = [
+        _init_block(tkeys[i], cfg, cfg.block_kind(li), _ffn_kind(cfg, li))
+        for i, li in enumerate(plan.tail)
+    ]
+    return p
+
+
+def init_params(cfg, key):
+    leafs = _build_leaf_tree(cfg, key)
+    params, _ = split_leaves(leafs)
+    dtype = jnp.dtype(cfg.param_dtype)
+    return jax.tree.map(
+        lambda x: x.astype(dtype) if jnp.issubdtype(x.dtype, jnp.floating) else x,
+        params,
+    )
+
+
+def param_logical_axes(cfg):
+    leafs = jax.eval_shape(lambda: _build_leaf_tree(cfg, jax.random.key(0)))
+    _, axes = split_leaves(leafs)
+    return axes
+
+
+# ----------------------------------------------------------------------------
+# Stream state (caches + recurrent states)
+# ----------------------------------------------------------------------------
+
+def init_decode_state(cfg, batch: int, max_seq: int, dtype=jnp.bfloat16,
+                      mode: str = "decode"):
+    plan = layer_plan(cfg)
+
+    def blk(kind):
+        return _init_block_state(cfg, kind, batch, mode, max_seq, dtype)
+
+    state = {
+        "head": [blk(cfg.block_kind(i)) for i in plan.head],
+        "tail": [blk(cfg.block_kind(i)) for i in plan.tail],
+    }
+    if plan.n_cycles:
+        cyc = [blk(k) for k in plan.cycle_kinds]
+        state["cycles"] = jax.tree.map(
+            lambda leaf: jnp.broadcast_to(leaf, (plan.n_cycles,) + leaf.shape).copy()
+            if hasattr(leaf, "shape") else leaf,
+            cyc,
+        )
+    else:
+        state["cycles"] = []
+    return state
+
+
+def decode_state_logical_axes(cfg, mode: str = "decode"):
+    plan = layer_plan(cfg)
+
+    def blk(kind):
+        return _block_state_axes(cfg, kind, mode)
+
+    axes = {
+        "head": [blk(cfg.block_kind(i)) for i in plan.head],
+        "tail": [blk(cfg.block_kind(i)) for i in plan.tail],
+    }
+    if plan.n_cycles:
+        cyc = [blk(k) for k in plan.cycle_kinds]
+        axes["cycles"] = jax.tree.map(
+            lambda a: ("layers",) + tuple(a), cyc,
+            is_leaf=lambda x: isinstance(x, tuple),
+        )
+    else:
+        axes["cycles"] = []
+    return axes
+
+
+# ----------------------------------------------------------------------------
+# Forward
+# ----------------------------------------------------------------------------
+
+import functools as _ft
+
+
+@_ft.lru_cache(maxsize=32)
+def _cycle_axes(cfg, base):
+    """Logical axes of one cycle's (unstacked) block params."""
+    plan = layer_plan(cfg)
+
+    def one():
+        k = jax.random.key(0)
+        return [
+            _init_block(k, cfg, kind, _ffn_kind(cfg, base + j))
+            for j, kind in enumerate(plan.cycle_kinds)
+        ]
+
+    leafs = jax.eval_shape(one)
+    _, axes = split_leaves(leafs)
+    return axes
+
+
+def _gather_cycle_params(cfg, p_c, base):
+    """Constrain a sliced cycle's params to their gathered (FSDP axes dropped)
+    sharding so the all-gather stays inside the scan loop."""
+    from repro.sharding.rules import current_rules, shard as _shard
+    if current_rules() is None:
+        return p_c
+    axes = _cycle_axes(cfg, base)
+
+    leaves, treedef = jax.tree.flatten(p_c)
+    axes_leaves = jax.tree.flatten(axes, is_leaf=lambda x: isinstance(x, tuple))[0]
+    out = [
+        _shard(leaf, *(None if a == "embed_fsdp" else a for a in ax))
+        for leaf, ax in zip(leaves, axes_leaves)
+    ]
+    return jax.tree.unflatten(treedef, out)
+
+
+def _run_layers(cfg, params, x, *, positions, states, mode, pos):
+    plan = layer_plan(cfg)
+    aux_total = jnp.zeros((), jnp.float32)
+    new_head, new_tail = [], []
+
+    for i, li in enumerate(plan.head):
+        x, st, aux = _apply_block(
+            params["head_blocks"][i], x, cfg, cfg.block_kind(li),
+            _ffn_kind(cfg, li), positions=positions,
+            state=states["head"][i], mode=mode, pos=pos,
+        )
+        new_head.append(st)
+        aux_total += aux
+
+    if plan.n_cycles:
+        base = len(plan.head)
+
+        def cycle_body(x_c, inputs):
+            p_c, st_c = inputs
+            # FSDP: force the weight all-gather of THIS layer slice inside the
+            # scan body (otherwise GSPMD hoists a whole-stack fp32 all-gather
+            # out of the loop — measured 3 GiB per stacked matrix).
+            p_c = _gather_cycle_params(cfg, p_c, base)
+            aux_c = jnp.zeros((), jnp.float32)
+            new_sts = []
+            for j, kind in enumerate(plan.cycle_kinds):
+                x_c, st, aux = _apply_block(
+                    p_c[j], x_c, cfg, kind, _ffn_kind(cfg, base + j),
+                    positions=positions, state=st_c[j], mode=mode, pos=pos,
+                )
+                new_sts.append(st)
+                aux_c += aux
+            return x_c, (new_sts, aux_c)
+
+        body = cycle_body
+        if cfg.remat and mode == "train":
+            body = jax.checkpoint(cycle_body)
+
+        x, (new_cycle_states, aux_c) = jax.lax.scan(
+            body, x, (params["cycles"], states["cycles"])
+        )
+        aux_total += aux_c.sum()
+    else:
+        new_cycle_states = []
+
+    for i, li in enumerate(plan.tail):
+        x, st, aux = _apply_block(
+            params["tail_blocks"][i], x, cfg, cfg.block_kind(li),
+            _ffn_kind(cfg, li), positions=positions,
+            state=states["tail"][i], mode=mode, pos=pos,
+        )
+        new_tail.append(st)
+        aux_total += aux
+
+    new_states = {"head": new_head, "cycles": new_cycle_states, "tail": new_tail}
+    return x, new_states, aux_total
+
+
+def forward(cfg, params, tokens, *, embeds=None, mode="train", states=None,
+            pos0: int = 0, unembed_out: bool = True):
+    """tokens: (B,S) int32. embeds: optional (B,F,d) prefix (VLM stub).
+
+    Returns (logits (B, S_total, V) — or final hidden states when
+    unembed_out=False — plus new_states, aux_loss).
+    """
+    b, s = tokens.shape
+    dtype = jnp.dtype(cfg.compute_dtype)
+    x = embed(params["embed"], tokens,
+              scale=cfg.d_model**0.5 if cfg.tie_embeddings else None)
+    x = x.astype(dtype)
+    if embeds is not None:
+        prefix = embeds.astype(dtype)
+        if "projector" in params:
+            prefix = prefix @ params["projector"]["w"].astype(dtype)
+        x = jnp.concatenate([prefix, x], axis=1)
+    s_total = x.shape[1]
+    if cfg.pos_emb == "sinusoidal":
+        x = x + sinusoidal_positions(pos0 + s_total, cfg.d_model)[pos0:].astype(dtype)
+    if "ln0" in params:
+        x = apply_norm(params["ln0"], x, cfg.norm)
+    x = shard(x, "batch", "seq", "embed")
+
+    positions = pos0 + jnp.broadcast_to(jnp.arange(s_total), (b, s_total))
+    if states is None:
+        states = init_decode_state(cfg, b, max_seq=s_total, dtype=dtype, mode=mode)
+
+    x, new_states, aux = _run_layers(
+        cfg, params, x, positions=positions, states=states, mode=mode,
+        pos=positions[:, -1],
+    )
+    x = apply_norm(params["final_norm"], x, cfg.norm)
+    if not unembed_out:
+        return x, new_states, aux
+    if cfg.tie_embeddings:
+        logits = unembed(params["embed"], x)
+    else:
+        logits = x @ params["unembed"]["w"]
+    logits = shard(logits, "batch", "seq", "vocab")
+    return logits.astype(jnp.float32), new_states, aux
+
+
+def prefill(cfg, params, tokens, *, embeds=None, cache_len: Optional[int] = None):
+    b, s = tokens.shape
+    total = s + (embeds.shape[1] if embeds is not None else 0)
+    dtype = jnp.dtype(cfg.compute_dtype)
+    states = init_decode_state(cfg, b, max_seq=cache_len or total, dtype=dtype,
+                               mode="prefill")
+    logits, states, _ = forward(cfg, params, tokens, embeds=embeds,
+                                mode="prefill", states=states)
+    return logits, states
+
+
+def decode_step(cfg, params, token, states, pos):
+    """token: (B,1) int32; pos: (B,) absolute positions. One serve step."""
+    b = token.shape[0]
+    dtype = jnp.dtype(cfg.compute_dtype)
+    x = embed(params["embed"], token,
+              scale=cfg.d_model**0.5 if cfg.tie_embeddings else None).astype(dtype)
+    if cfg.pos_emb == "sinusoidal":
+        x = x + sinusoidal_for_positions(pos[:, None], cfg.d_model).astype(dtype)
+    if "ln0" in params:
+        x = apply_norm(params["ln0"], x, cfg.norm)
+
+    positions = pos[:, None]
+    x, new_states, _ = _run_layers(
+        cfg, params, x, positions=positions, states=states, mode="decode", pos=pos,
+    )
+    x = apply_norm(params["final_norm"], x, cfg.norm)
+    if cfg.tie_embeddings:
+        logits = unembed(params["embed"], x)
+    else:
+        logits = x @ params["unembed"]["w"]
+    return logits.astype(jnp.float32), new_states
+
+
+# ----------------------------------------------------------------------------
+# Loss
+# ----------------------------------------------------------------------------
+
+def lm_loss(cfg, params, batch, *, ce_chunks: Optional[int] = None):
+    """Next-token CE. batch: {'tokens': (B,S)} (+ 'patch_embeds' for VLM,
+    'frames' for audio enc-dec)."""
+    if cfg.is_encoder_decoder:
+        from repro.models.encdec import encdec_loss
+        return encdec_loss(cfg, params, batch)
+    tokens = batch["tokens"]
+    inputs, targets = tokens[:, :-1], tokens[:, 1:]
+    embeds = batch.get("patch_embeds")
+    hidden, _, aux = forward(cfg, params, inputs, embeds=embeds, mode="train",
+                             unembed_out=False)
+    if embeds is not None:
+        hidden = hidden[:, embeds.shape[1]:]
+    w = (params["embed"]["table"].T if cfg.tie_embeddings
+         else params["unembed"]["w"])
+    loss = chunked_cross_entropy(hidden, w, targets,
+                                 n_chunks=ce_chunks or cfg.ce_chunks)
+    if cfg.family == "moe":
+        loss = loss + cfg.router_aux_coef * aux
+    return loss
+
+
+def sharded_cross_entropy(logits, targets):
+    """CE that stays sharded over a model-parallel vocab axis.
+
+    take_along_axis on a sharded vocab axis would all-gather the logits; the
+    logsumexp + one-hot contraction both partition cleanly (the one-hot is a
+    fused iota comparison, never materialized at full precision)."""
+    logits = shard(logits.astype(jnp.float32), "batch", "seq", "vocab")
+    lse = jax.nn.logsumexp(logits, axis=-1)
+    onehot = jax.nn.one_hot(targets, logits.shape[-1], dtype=logits.dtype)
+    tgt = jnp.einsum("bsv,bsv->bs", logits, onehot)
+    return (lse - tgt).mean()
+
+
+def chunked_cross_entropy(hidden, w_unembed, targets, n_chunks: int = 0):
+    """CE without ever materializing full (B,S,V) logits: scan over batch
+    chunks with per-chunk remat, so the backward recomputes each chunk's
+    logits instead of saving them (Liger-style, pure JAX).
+
+    n_chunks=0 disables chunking (baseline path for §Perf comparisons)."""
+    w_unembed = shard(w_unembed, "embed", "vocab")
+    if not n_chunks or hidden.shape[0] % n_chunks:
+        logits = hidden @ w_unembed
+        return sharded_cross_entropy(logits, targets)
+    b = hidden.shape[0]
+    hb = hidden.reshape(n_chunks, b // n_chunks, *hidden.shape[1:])
+    tb = targets.reshape(n_chunks, b // n_chunks, *targets.shape[1:])
+
+    @jax.checkpoint
+    def step(acc, inp):
+        h_c, t_c = inp
+        logits = shard((h_c @ w_unembed).astype(jnp.float32),
+                       "batch", "seq", "vocab")
+        lse = jax.nn.logsumexp(logits, axis=-1)
+        onehot = jax.nn.one_hot(t_c, logits.shape[-1], dtype=logits.dtype)
+        tgt = jnp.einsum("bsv,bsv->bs", logits, onehot)
+        return acc + jnp.sum(lse - tgt), None
+
+    total, _ = jax.lax.scan(step, jnp.zeros((), jnp.float32), (hb, tb))
+    return total / (targets.size)

@@ -1,0 +1,19 @@
+from repro.optim.optimizers import (
+    Optimizer,
+    adamw,
+    clip_by_global_norm,
+    sgd,
+    momentum,
+)
+from repro.optim.schedules import constant_lr, cosine_lr, warmup_cosine_lr
+
+__all__ = [
+    "Optimizer",
+    "adamw",
+    "clip_by_global_norm",
+    "constant_lr",
+    "cosine_lr",
+    "momentum",
+    "sgd",
+    "warmup_cosine_lr",
+]

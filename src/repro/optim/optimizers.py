@@ -1,0 +1,93 @@
+"""Pytree optimizers (optax is not available offline; same init/update API).
+
+AdamW keeps fp32 moments regardless of the (possibly bf16) param dtype —
+the dry-run memory analysis accounts for these states.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Callable, NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.utils.pytree import tree_l2_norm
+
+
+@dataclasses.dataclass(frozen=True)
+class Optimizer:
+    init: Callable
+    update: Callable  # (grads, state, params, lr) -> (updates, state)
+
+    def apply(self, grads, state, params, lr):
+        updates, state = self.update(grads, state, params, lr)
+        params = jax.tree.map(
+            lambda p, u: (p.astype(jnp.float32) + u).astype(p.dtype), params, updates
+        )
+        return params, state
+
+
+def sgd() -> Optimizer:
+    return Optimizer(
+        init=lambda params: (),
+        update=lambda g, s, p, lr: (jax.tree.map(lambda gi: -lr * gi.astype(jnp.float32), g), s),
+    )
+
+
+def momentum(beta: float = 0.9, nesterov: bool = False) -> Optimizer:
+    def init(params):
+        return {"m": jax.tree.map(lambda p: jnp.zeros(p.shape, jnp.float32), params)}
+
+    def update(g, s, p, lr):
+        m = jax.tree.map(lambda mi, gi: beta * mi + gi.astype(jnp.float32), s["m"], g)
+        if nesterov:
+            upd = jax.tree.map(lambda mi, gi: -lr * (beta * mi + gi.astype(jnp.float32)), m, g)
+        else:
+            upd = jax.tree.map(lambda mi: -lr * mi, m)
+        return upd, {"m": m}
+
+    return Optimizer(init, update)
+
+
+def adamw(b1: float = 0.9, b2: float = 0.95, eps: float = 1e-8,
+          weight_decay: float = 0.0, state_dtype=jnp.float32) -> Optimizer:
+    """state_dtype=bf16 halves optimizer memory (beyond-paper perf knob);
+    the update math still runs in fp32."""
+    def init(params):
+        z = lambda p: jnp.zeros(p.shape, state_dtype)
+        return {
+            "m": jax.tree.map(z, params),
+            "v": jax.tree.map(z, params),
+            "t": jnp.zeros((), jnp.int32),
+        }
+
+    def update(g, s, p, lr):
+        t = s["t"] + 1
+        m = jax.tree.map(
+            lambda mi, gi: (b1 * mi.astype(jnp.float32)
+                            + (1 - b1) * gi.astype(jnp.float32)).astype(mi.dtype),
+            s["m"], g)
+        v = jax.tree.map(
+            lambda vi, gi: (b2 * vi.astype(jnp.float32)
+                            + (1 - b2) * jnp.square(gi.astype(jnp.float32))
+                            ).astype(vi.dtype),
+            s["v"], g)
+        bc1 = 1 - b1**t.astype(jnp.float32)
+        bc2 = 1 - b2**t.astype(jnp.float32)
+
+        def upd(mi, vi, pi):
+            step = (mi.astype(jnp.float32) / bc1) / (
+                jnp.sqrt(vi.astype(jnp.float32) / bc2) + eps)
+            if weight_decay:
+                step = step + weight_decay * pi.astype(jnp.float32)
+            return -lr * step
+
+        return jax.tree.map(upd, m, v, p), {"m": m, "v": v, "t": t}
+
+    return Optimizer(init, update)
+
+
+def clip_by_global_norm(grads, max_norm: float):
+    norm = tree_l2_norm(grads)
+    scale = jnp.minimum(1.0, max_norm / jnp.maximum(norm, 1e-12))
+    return jax.tree.map(lambda g: g * scale, grads), norm

@@ -1,0 +1,24 @@
+"""Learning-rate schedules (callables step -> lr, jit-friendly)."""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+
+def constant_lr(lr: float):
+    return lambda step: jnp.asarray(lr, jnp.float32)
+
+
+def cosine_lr(lr: float, total_steps: int, final_frac: float = 0.1):
+    def f(step):
+        frac = jnp.clip(step / max(total_steps, 1), 0.0, 1.0)
+        cos = 0.5 * (1.0 + jnp.cos(jnp.pi * frac))
+        return lr * (final_frac + (1 - final_frac) * cos)
+    return f
+
+
+def warmup_cosine_lr(lr: float, warmup: int, total_steps: int, final_frac: float = 0.1):
+    cos = cosine_lr(lr, max(total_steps - warmup, 1), final_frac)
+    def f(step):
+        w = jnp.clip(step / max(warmup, 1), 0.0, 1.0)
+        return jnp.where(step < warmup, lr * w, cos(step - warmup))
+    return f

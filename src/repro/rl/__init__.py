@@ -1,0 +1,22 @@
+from repro.rl.env import EnvConfig, FIGURE_EIGHT, MERGE, env_reset, env_step, get_obs
+from repro.rl.policy import init_policy, policy_apply, policy_value
+from repro.rl.ppo import gae, ppo_loss, trpo_kl_loss, tac_loss
+from repro.rl.fedrl import FedRLConfig, run_fedrl
+
+__all__ = [
+    "EnvConfig",
+    "FIGURE_EIGHT",
+    "FedRLConfig",
+    "MERGE",
+    "env_reset",
+    "env_step",
+    "gae",
+    "get_obs",
+    "init_policy",
+    "policy_apply",
+    "policy_value",
+    "ppo_loss",
+    "run_fedrl",
+    "tac_loss",
+    "trpo_kl_loss",
+]

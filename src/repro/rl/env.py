@@ -1,0 +1,155 @@
+"""Pure-JAX ring-road traffic MARL environments.
+
+SUMO is unavailable offline; these are the jit-able analogs of the paper's
+scenarios (documented in DESIGN.md §3):
+
+* FIGURE_EIGHT — 14 vehicles on a closed loop with an intersection-like
+  bottleneck zone; 7 RL-controlled (every other vehicle). The classic
+  mixed-autonomy stabilization problem: background vehicles follow IDM (which
+  produces stop-and-go waves); RL vehicles control acceleration in [-1, 1] to
+  maximize the normalized average speed (NAS) of the whole team.
+* MERGE — 50 vehicles on a longer ring with a periodic slow zone emulating
+  merge friction; 5 RL-controlled.
+
+Collisions (gap < min_gap) force a brake-slam on the offender and incur a
+penalty, as in the paper's setup.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+OBS_DIM = 6
+
+
+@dataclasses.dataclass(frozen=True)
+class EnvConfig:
+    name: str
+    n_vehicles: int
+    rl_indices: tuple          # which vehicles are RL-controlled
+    length: float              # ring circumference (m)
+    dt: float = 0.1
+    v_max: float = 8.0
+    a_max: float = 1.5         # RL acceleration scale (m/s^2)
+    min_gap: float = 2.0       # collision threshold (m)
+    crash_penalty: float = 1.0
+    # IDM params for background vehicles
+    idm_v0: float = 8.0
+    idm_T: float = 1.0
+    idm_a: float = 1.3
+    idm_b: float = 2.0
+    idm_s0: float = 2.0
+    # bottleneck: [start, end) zone with reduced speed limit
+    zone_start: float = 0.0
+    zone_end: float = 0.0
+    zone_vmax: float = 8.0
+
+    @property
+    def n_rl(self) -> int:
+        return len(self.rl_indices)
+
+
+FIGURE_EIGHT = EnvConfig(
+    name="figure_eight",
+    n_vehicles=14,
+    rl_indices=tuple(range(0, 14, 2)),   # 7 RL vehicles, alternating
+    length=230.0,
+    zone_start=0.0,
+    zone_end=15.0,
+    zone_vmax=3.0,                        # intersection analog: slow zone
+)
+
+MERGE = EnvConfig(
+    name="merge",
+    n_vehicles=50,
+    rl_indices=tuple(range(0, 50, 10)),  # 5 RL vehicles
+    length=700.0,
+    v_max=12.0,
+    idm_v0=12.0,
+    zone_start=0.0,
+    zone_end=40.0,
+    zone_vmax=4.0,                        # merge-friction zone
+)
+
+
+class EnvState(NamedTuple):
+    x: jnp.ndarray        # (N,) positions
+    v: jnp.ndarray        # (N,) speeds
+    crashed: jnp.ndarray  # () bool
+
+
+def env_reset(cfg: EnvConfig, key) -> EnvState:
+    n = cfg.n_vehicles
+    spacing = cfg.length / n
+    jitter = jax.random.uniform(key, (n,), minval=-0.2, maxval=0.2) * spacing
+    x = jnp.sort((jnp.arange(n) * spacing + jitter) % cfg.length)
+    v = jnp.zeros(n) + 0.5
+    return EnvState(x=x, v=v, crashed=jnp.zeros((), bool))
+
+
+def _gaps(cfg: EnvConfig, x):
+    """Leader gap per vehicle on the ring (order-preserving by construction)."""
+    order = jnp.argsort(x)
+    x_sorted = x[order]
+    lead_sorted = jnp.roll(x_sorted, -1)
+    gap_sorted = (lead_sorted - x_sorted) % cfg.length
+    gaps = jnp.zeros_like(x).at[order].set(gap_sorted)
+    leader = jnp.zeros(cfg.n_vehicles, jnp.int32).at[order].set(jnp.roll(order, -1))
+    follower = jnp.zeros(cfg.n_vehicles, jnp.int32).at[order].set(jnp.roll(order, 1))
+    return gaps, leader, follower
+
+
+def _idm_accel(cfg: EnvConfig, v, gap, v_lead):
+    dv = v - v_lead
+    s_star = cfg.idm_s0 + v * cfg.idm_T + v * dv / (2.0 * jnp.sqrt(cfg.idm_a * cfg.idm_b))
+    s_star = jnp.maximum(s_star, 0.0)
+    return cfg.idm_a * (1.0 - (v / cfg.idm_v0) ** 4 - (s_star / jnp.maximum(gap, 0.1)) ** 2)
+
+
+def _zone_limit(cfg: EnvConfig, x):
+    inz = (x >= cfg.zone_start) & (x < cfg.zone_end)
+    return jnp.where(inz, cfg.zone_vmax, cfg.v_max)
+
+
+def get_obs(cfg: EnvConfig, state: EnvState) -> jnp.ndarray:
+    """(n_rl, 6): [own pos/L, own v/vmax, lead gap/L, lead v/vmax, fol gap/L, fol v/vmax]."""
+    gaps, leader, follower = _gaps(cfg, state.x)
+    idx = jnp.asarray(cfg.rl_indices)
+    fol_gap = gaps[follower][idx]
+    return jnp.stack(
+        [
+            state.x[idx] / cfg.length,
+            state.v[idx] / cfg.v_max,
+            gaps[idx] / cfg.length,
+            state.v[leader[idx]] / cfg.v_max,
+            fol_gap / cfg.length,
+            state.v[follower[idx]] / cfg.v_max,
+        ],
+        axis=-1,
+    )
+
+
+def env_step(cfg: EnvConfig, state: EnvState, rl_accel):
+    """rl_accel: (n_rl,) in [-1, 1]. Returns (state, reward, crashed_now)."""
+    gaps, leader, _ = _gaps(cfg, state.x)
+    accel = _idm_accel(cfg, state.v, gaps, state.v[leader])
+    idx = jnp.asarray(cfg.rl_indices)
+    accel = accel.at[idx].set(jnp.clip(rl_accel, -1.0, 1.0) * cfg.a_max)
+
+    # emergency brake if about to collide (paper: slam brakes before crash)
+    ttc_brake = gaps < (cfg.min_gap + state.v * cfg.dt * 2.0)
+    accel = jnp.where(ttc_brake, -cfg.idm_b * 2.0, accel)
+
+    v = jnp.clip(state.v + accel * cfg.dt, 0.0, _zone_limit(cfg, state.x))
+    x = (state.x + v * cfg.dt) % cfg.length
+
+    new_gaps, _, _ = _gaps(cfg, x)
+    crashed_now = jnp.any(new_gaps < cfg.min_gap * 0.5)
+    crashed = state.crashed | crashed_now
+    # NAS reward shared by the team, zeroed after a crash
+    nas = jnp.mean(v) / cfg.v_max
+    reward = jnp.where(crashed, -cfg.crash_penalty, nas)
+    return EnvState(x=x, v=v, crashed=crashed), reward, crashed_now

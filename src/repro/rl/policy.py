@@ -1,0 +1,67 @@
+"""Gaussian MLP actor-critic for the traffic MARL tasks (paper's DRL model)."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def init_policy(key, obs_dim: int, hidden: int = 64, act_dim: int = 1):
+    ks = jax.random.split(key, 6)
+    g = jax.nn.initializers.orthogonal()
+    return {
+        "pi": {
+            "w1": g(ks[0], (obs_dim, hidden)), "b1": jnp.zeros(hidden),
+            "w2": g(ks[1], (hidden, hidden)), "b2": jnp.zeros(hidden),
+            "w3": 0.01 * g(ks[2], (hidden, act_dim)), "b3": jnp.zeros(act_dim),
+            "log_std": jnp.full((act_dim,), -0.5),
+        },
+        "vf": {
+            "w1": g(ks[3], (obs_dim, hidden)), "b1": jnp.zeros(hidden),
+            "w2": g(ks[4], (hidden, hidden)), "b2": jnp.zeros(hidden),
+            "w3": g(ks[5], (hidden, 1)), "b3": jnp.zeros(1),
+        },
+    }
+
+
+def _mlp(p, x):
+    h = jnp.tanh(x @ p["w1"] + p["b1"])
+    h = jnp.tanh(h @ p["w2"] + p["b2"])
+    return h @ p["w3"] + p["b3"]
+
+
+def policy_apply(params, obs):
+    """Returns (mean, log_std) of the Gaussian policy."""
+    mean = jnp.tanh(_mlp(params["pi"], obs))
+    return mean, params["pi"]["log_std"]
+
+
+def policy_value(params, obs):
+    return _mlp(params["vf"], obs)[..., 0]
+
+
+def sample_action(params, obs, key):
+    mean, log_std = policy_apply(params, obs)
+    std = jnp.exp(log_std)
+    eps = jax.random.normal(key, mean.shape)
+    act = mean + std * eps
+    logp = gaussian_logp(act, mean, log_std)
+    return act, logp
+
+
+def gaussian_logp(act, mean, log_std):
+    var = jnp.exp(2.0 * log_std)
+    return jnp.sum(
+        -0.5 * ((act - mean) ** 2 / var + 2.0 * log_std + jnp.log(2.0 * jnp.pi)),
+        axis=-1,
+    )
+
+
+def gaussian_entropy(log_std):
+    return jnp.sum(log_std + 0.5 * jnp.log(2.0 * jnp.pi * jnp.e))
+
+
+def tsallis2_entropy(log_std):
+    """Tsallis entropy with entropic index q=2 for a diagonal Gaussian:
+    S_2 = 1 - integral pi^2 = 1 - prod_i 1/(2 sqrt(pi) sigma_i)."""
+    sigma = jnp.exp(log_std)
+    return 1.0 - jnp.prod(1.0 / (2.0 * jnp.sqrt(jnp.pi) * sigma))

@@ -1,0 +1,74 @@
+"""Policy-gradient losses: PPO (paper's default), TRPO-as-KL-penalty, TAC.
+
+The paper uses PPO [18] for Figs. 4-6, TRPO [17] for Fig. 8 and TAC [19] for
+Fig. 9 purely to show the consensus method is optimizer-agnostic; we implement
+TRPO as its KL-penalized trust-region form and TAC as Tsallis-entropy (q=2)
+regularized PPO (loss-level fidelity; noted in DESIGN.md §8).
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.rl.policy import (
+    gaussian_entropy,
+    gaussian_logp,
+    policy_apply,
+    policy_value,
+    tsallis2_entropy,
+)
+
+
+def gae(rewards, values, last_value, *, gamma=0.99, lam=0.95):
+    """rewards/values: (P,); returns (advantages (P,), returns (P,))."""
+    def step(carry, inp):
+        adv_next, v_next = carry
+        r, v = inp
+        delta = r + gamma * v_next - v
+        adv = delta + gamma * lam * adv_next
+        return (adv, v), adv
+
+    (_, _), advs = jax.lax.scan(
+        step, (jnp.zeros(()), last_value), (rewards, values), reverse=True
+    )
+    return advs, advs + values
+
+
+def _policy_terms(params, traj):
+    mean, log_std = policy_apply(params, traj["obs"])
+    logp = gaussian_logp(traj["act"], mean, log_std)
+    ratio = jnp.exp(logp - traj["logp_old"])
+    adv = traj["adv"]
+    adv = (adv - adv.mean()) / (adv.std() + 1e-8)
+    v = policy_value(params, traj["obs"])
+    vf = jnp.mean((v - traj["ret"]) ** 2)
+    return ratio, adv, vf, log_std, logp
+
+
+def ppo_loss(params, traj, *, clip=0.2, vf_coef=0.5, ent_coef=0.01):
+    ratio, adv, vf, log_std, _ = _policy_terms(params, traj)
+    unclipped = ratio * adv
+    clipped = jnp.clip(ratio, 1.0 - clip, 1.0 + clip) * adv
+    pg = -jnp.mean(jnp.minimum(unclipped, clipped))
+    return pg + vf_coef * vf - ent_coef * gaussian_entropy(log_std)
+
+
+def trpo_kl_loss(params, traj, *, kl_coef=1.0, vf_coef=0.5):
+    """Trust-region as KL penalty: -E[ratio * A] + beta * E[KL(old || new)]."""
+    ratio, adv, vf, log_std, logp = _policy_terms(params, traj)
+    pg = -jnp.mean(ratio * adv)
+    # KL(old||new) estimate from samples of old: E_old[logp_old - logp_new]
+    kl = jnp.mean(traj["logp_old"] - logp)
+    return pg + kl_coef * kl + vf_coef * vf
+
+
+def tac_loss(params, traj, *, clip=0.2, vf_coef=0.5, tsallis_coef=0.01):
+    """Tsallis actor-critic (q=2): PPO surrogate + Tsallis-2 entropy bonus."""
+    ratio, adv, vf, log_std, _ = _policy_terms(params, traj)
+    unclipped = ratio * adv
+    clipped = jnp.clip(ratio, 1.0 - clip, 1.0 + clip) * adv
+    pg = -jnp.mean(jnp.minimum(unclipped, clipped))
+    return pg + vf_coef * vf - tsallis_coef * tsallis2_entropy(log_std)
+
+
+LOSSES = {"ppo": ppo_loss, "trpo": trpo_kl_loss, "tac": tac_loss}

@@ -1,0 +1,9 @@
+from repro.sharding.rules import (
+    MeshRules,
+    axes_to_spec,
+    current_rules,
+    shard,
+    use_rules,
+)
+
+__all__ = ["MeshRules", "axes_to_spec", "current_rules", "shard", "use_rules"]

@@ -1,0 +1,131 @@
+"""Logical-axis sharding rules (MaxText-style) with a context-local rule set.
+
+Model code names array axes logically ("batch", "heads", "ff", ...). A
+MeshRules maps logical names -> mesh axis names (or None). Outside a rules
+context, `shard()` is the identity, so the same model code runs unsharded on
+CPU smoke tests and fully sharded in the dry-run / trainer.
+
+Divisibility: if a logical dimension is not divisible by its mesh axis size,
+the rule engine *drops* that constraint (GSPMD would reject it). Dropped
+constraints are recorded on the rules object so the dry-run can report them
+(e.g. 8 kv heads on a 16-way model axis -> replicated KV, noted in
+EXPERIMENTS.md rather than silently mis-sharded).
+"""
+from __future__ import annotations
+
+import contextlib
+import dataclasses
+import threading
+from typing import Optional, Tuple
+
+import jax
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+_LOCAL = threading.local()
+
+# Default logical->mesh mapping used by the production mesh (data, model).
+DEFAULT_RULES: dict[str, Optional[tuple]] = {
+    "batch": ("data",),
+    "seq": None,               # sequence parallelism off by default (perf knob)
+    "embed": None,
+    "embed_fsdp": ("data",),   # FSDP shard axis on params
+    "vocab": ("model",),
+    "heads": ("model",),
+    "kv_heads": ("model",),
+    "ff": ("model",),
+    "experts": ("model",),
+    "tokens": ("data", "model"),   # MoE group axis (batch x seq-chunks)
+    "expert_ff": None,
+    "layers": None,
+    "lru": ("model",),
+    "window": None,
+    "head_dim": None,
+    "agents": ("pod",),        # federated replica axis (multi-pod only)
+}
+
+
+@dataclasses.dataclass
+class MeshRules:
+    mesh: Mesh
+    rules: dict
+    dropped: set = dataclasses.field(default_factory=set)
+
+    def mesh_axes_for(self, logical: Optional[str]) -> Optional[tuple]:
+        if logical is None:
+            return None
+        axes = self.rules.get(logical)
+        if axes is None:
+            return None
+        present = tuple(a for a in axes if a in self.mesh.axis_names)
+        return present or None
+
+    def spec(self, logical_axes: Tuple[Optional[str], ...], shape=None) -> P:
+        entries = []
+        used: set = set()
+        for i, name in enumerate(logical_axes):
+            axes = self.mesh_axes_for(name)
+            if axes is None:
+                entries.append(None)
+                continue
+            axes = tuple(a for a in axes if a not in used)
+            if not axes:
+                entries.append(None)
+                continue
+            if shape is not None:
+                size = 1
+                for a in axes:
+                    size *= self.mesh.shape[a]
+                if shape[i] % size != 0:
+                    self.dropped.add((name, shape[i], size))
+                    entries.append(None)
+                    continue
+            used.update(axes)
+            entries.append(axes if len(axes) > 1 else axes[0])
+        return P(*entries)
+
+    def named_sharding(self, logical_axes, shape=None) -> NamedSharding:
+        return NamedSharding(self.mesh, self.spec(logical_axes, shape))
+
+
+def current_rules() -> Optional[MeshRules]:
+    return getattr(_LOCAL, "rules", None)
+
+
+@contextlib.contextmanager
+def use_rules(rules: Optional[MeshRules]):
+    prev = current_rules()
+    _LOCAL.rules = rules
+    try:
+        yield rules
+    finally:
+        _LOCAL.rules = prev
+
+
+def axes_to_spec(logical_axes, shape=None) -> Optional[P]:
+    r = current_rules()
+    if r is None:
+        return None
+    return r.spec(logical_axes, shape)
+
+
+def shard(x, *logical_axes):
+    """with_sharding_constraint by logical axes; identity outside a rules ctx."""
+    r = current_rules()
+    if r is None:
+        return x
+    spec = r.spec(tuple(logical_axes), x.shape)
+    return jax.lax.with_sharding_constraint(x, NamedSharding(r.mesh, spec))
+
+
+def logical_axis_size(name: str) -> int:
+    """Mesh extent a logical axis would shard over (1 outside a rules ctx)."""
+    r = current_rules()
+    if r is None:
+        return 1
+    axes = r.mesh_axes_for(name)
+    if not axes:
+        return 1
+    size = 1
+    for a in axes:
+        size *= r.mesh.shape[a]
+    return size

@@ -1,0 +1,19 @@
+from repro.utils.pytree import (
+    tree_add,
+    tree_axpy,
+    tree_dot,
+    tree_l2_norm,
+    tree_scale,
+    tree_sub,
+    tree_zeros_like,
+)
+
+__all__ = [
+    "tree_add",
+    "tree_axpy",
+    "tree_dot",
+    "tree_l2_norm",
+    "tree_scale",
+    "tree_sub",
+    "tree_zeros_like",
+]

@@ -1,0 +1,41 @@
+"""Small pytree algebra used across the framework (no optax available)."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def tree_zeros_like(tree):
+    return jax.tree.map(jnp.zeros_like, tree)
+
+
+def tree_add(a, b):
+    return jax.tree.map(jnp.add, a, b)
+
+
+def tree_sub(a, b):
+    return jax.tree.map(jnp.subtract, a, b)
+
+
+def tree_scale(s, tree):
+    return jax.tree.map(lambda x: s * x, tree)
+
+
+def tree_axpy(a, x, y):
+    """a * x + y, elementwise over matching pytrees."""
+    return jax.tree.map(lambda xi, yi: a * xi + yi, x, y)
+
+
+def tree_dot(a, b):
+    # NOTE: jnp.vdot flattens its operands; flattening a 2D-sharded array
+    # forces GSPMD to all-gather it fully (measured: 3 GiB fp32 per stacked
+    # weight in the 256-chip dry run). The elementwise multiply + sum below
+    # partitions cleanly.
+    leaves = jax.tree.map(
+        lambda x, y: jnp.sum(x.astype(jnp.float32) * y.astype(jnp.float32)), a, b
+    )
+    return jax.tree.reduce(jnp.add, leaves, jnp.asarray(0.0))
+
+
+def tree_l2_norm(tree):
+    return jnp.sqrt(tree_dot(tree, tree).real)

@@ -1,0 +1,8 @@
+import os
+import sys
+
+# Tests run on the default single CPU device (the dry-run subprocess sets its
+# own XLA_FLAGS); keep compilation deterministic and quiet.
+os.environ.setdefault("JAX_PLATFORMS", "cpu")
+
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))

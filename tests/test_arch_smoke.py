@@ -1,0 +1,91 @@
+"""Deliverable (f): per-architecture smoke tests on REDUCED variants.
+
+Each assigned arch instantiates a reduced config (<=2 layers-ish, d<=512,
+<=4 experts) and runs one forward + one train step on CPU, asserting output
+shapes and the absence of NaNs.
+"""
+import jax
+import jax.numpy as jnp
+import pytest
+
+import repro.configs as C
+from repro.models import forward, init_params, lm_loss
+from repro.models.transformer import padded_vocab
+from repro.optim import adamw
+
+ARCHS = C.list_archs()
+
+
+def _batch(cfg, key, b=2, s=17):
+    ks = jax.random.split(key, 3)
+    batch = {"tokens": jax.random.randint(ks[0], (b, s), 0, cfg.vocab_size)}
+    if cfg.frontend == "vision":
+        batch["patch_embeds"] = 0.1 * jax.random.normal(
+            ks[1], (b, cfg.n_frontend_tokens, cfg.d_model)
+        )
+    if cfg.frontend == "audio":
+        batch["frames"] = 0.1 * jax.random.normal(
+            ks[2], (b, cfg.n_frontend_tokens, cfg.d_model)
+        )
+    return batch
+
+
+@pytest.mark.parametrize("arch", ARCHS)
+def test_reduced_forward_shapes_and_finite(arch):
+    cfg = C.get_arch(arch).reduced()
+    params = init_params(cfg, jax.random.key(0))
+    batch = _batch(cfg, jax.random.key(1))
+    if cfg.is_encoder_decoder:
+        from repro.models.encdec import encdec_forward
+        logits, _ = encdec_forward(cfg, params, batch["tokens"], batch["frames"])
+        assert logits.shape == (2, 17, padded_vocab(cfg))
+    else:
+        logits, _, aux = forward(cfg, params, batch["tokens"],
+                                 embeds=batch.get("patch_embeds"), mode="train")
+        total = 17 + (cfg.n_frontend_tokens if cfg.frontend == "vision" else 0)
+        assert logits.shape == (2, total, padded_vocab(cfg))
+        assert jnp.isfinite(aux)
+    assert not bool(jnp.isnan(logits).any())
+
+
+@pytest.mark.parametrize("arch", ARCHS)
+def test_reduced_train_step_decreases_loss(arch):
+    cfg = C.get_arch(arch).reduced()
+    params = init_params(cfg, jax.random.key(0))
+    opt = adamw()
+    opt_state = opt.init(params)
+    batch = _batch(cfg, jax.random.key(1))
+
+    @jax.jit
+    def step(params, opt_state):
+        loss, grads = jax.value_and_grad(lambda p: lm_loss(cfg, p, batch))(params)
+        params, opt_state = opt.apply(grads, opt_state, params, 1e-3)
+        return params, opt_state, loss
+
+    losses = []
+    for _ in range(5):
+        params, opt_state, loss = step(params, opt_state)
+        losses.append(float(loss))
+    assert all(jnp.isfinite(jnp.asarray(losses))), losses
+    # training on a fixed batch must reduce the loss
+    assert losses[-1] < losses[0], losses
+
+
+def test_exactly_ten_archs_registered():
+    assert len(ARCHS) == 10
+    families = {C.get_arch(a).family for a in ARCHS}
+    assert families == {"dense", "moe", "ssm", "hybrid", "vlm", "audio"}
+
+
+@pytest.mark.parametrize("arch", ARCHS)
+def test_param_count_close_to_nameplate(arch):
+    """Analytic n_params should be in the right ballpark of the arch's name."""
+    cfg = C.get_arch(arch)
+    n = cfg.n_params()
+    nameplate = {
+        "qwen2-72b": 72e9, "rwkv6-1.6b": 1.6e9, "h2o-danube-3-4b": 4e9,
+        "recurrentgemma-9b": 9e9, "kimi-k2-1t-a32b": 1.0e12, "gemma-7b": 8.5e9,
+        "internvl2-26b": 20e9, "phi4-mini-3.8b": 3.8e9, "arctic-480b": 480e9,
+        "whisper-small": 0.24e9,
+    }[arch]
+    assert 0.5 * nameplate <= n <= 1.6 * nameplate, (arch, n, nameplate)

@@ -1,0 +1,58 @@
+"""Consensus algorithm: T5's contraction rate, verified empirically."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import consensus_rounds_dense, consensus_rounds_matrix
+from repro.core.consensus import disagreement
+from repro.core import topology as T
+
+
+def test_dense_equals_matrix_power():
+    topo = T.ring(8)
+    g = {"x": jax.random.normal(jax.random.key(0), (8, 5, 3))}
+    a = consensus_rounds_dense(g, topo, 0.25, 4)
+    b = consensus_rounds_matrix(g, topo, 0.25, 4)
+    assert jnp.allclose(a["x"], b["x"], atol=1e-5)
+
+
+@pytest.mark.parametrize("maker,kw", [
+    (T.ring, dict(m=8)),
+    (T.chain, dict(m=5)),
+    (T.fully_connected, dict(m=6)),
+    (T.torus2d, dict(rows=3, cols=3)),
+])
+def test_disagreement_contracts_at_spectral_rate(maker, kw):
+    """||G(I-J)||_F^2 after E rounds <= (1 - eps*mu2)^{2E} * initial (T5 core)."""
+    topo = maker(**kw)
+    eps = 0.9 / topo.max_degree
+    g = {"x": jax.random.normal(jax.random.key(1), (topo.m, 16))}
+    d0 = float(disagreement(g))
+    for rounds in (1, 2, 4):
+        out = consensus_rounds_dense(g, topo, eps, rounds)
+        dE = float(disagreement(out))
+        bound = (1.0 - eps * T.mu2(topo)) ** (2 * rounds) * d0
+        # fully-connected graphs attain the bound exactly (all nonzero
+        # Laplacian eigenvalues equal) -> allow fp32 mixing roundoff.
+        assert dE <= bound * (1 + 1e-3) + 1e-6 * d0, (topo.name, rounds, dE, bound)
+
+
+def test_consensus_converges_to_mean():
+    topo = T.ring(6)
+    g = {"x": jax.random.normal(jax.random.key(2), (6, 4))}
+    out = consensus_rounds_dense(g, topo, 0.3, 200)
+    mean = g["x"].mean(axis=0, keepdims=True)
+    assert jnp.allclose(out["x"], jnp.broadcast_to(mean, out["x"].shape), atol=1e-4)
+
+
+def test_denser_graph_contracts_faster():
+    """Paper Fig. 6: larger mu2 (denser network) improves convergence."""
+    sparse = T.random_regularish(9, 3, 4, seed=0)
+    dense = T.random_regularish(9, 5, 6, seed=0)
+    assert T.mu2(dense) > T.mu2(sparse)
+    g = {"x": jax.random.normal(jax.random.key(3), (9, 32))}
+    eps = 0.9 / max(sparse.max_degree, dense.max_degree)
+    ds = float(disagreement(consensus_rounds_dense(g, sparse, eps, 2)))
+    dd = float(disagreement(consensus_rounds_dense(g, dense, eps, 2)))
+    assert dd < ds

@@ -1,0 +1,79 @@
+"""Integration: prefill + decode_step must reproduce the full forward pass."""
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import pytest
+
+import repro.configs as C
+from repro.models import decode_step, forward, init_params, prefill
+
+FAMS = ["phi4-mini-3.8b", "h2o-danube-3-4b", "rwkv6-1.6b", "recurrentgemma-9b",
+        "kimi-k2-1t-a32b"]
+
+
+@pytest.mark.parametrize("arch", FAMS)
+def test_prefill_then_decode_matches_forward(arch):
+    cfg = dataclasses.replace(C.get_arch(arch).reduced(), attn_impl="einsum")
+    params = init_params(cfg, jax.random.key(0))
+    s = 12
+    toks = jax.random.randint(jax.random.key(1), (2, s + 1), 0, cfg.vocab_size)
+    full, _, _ = forward(cfg, params, toks, mode="train")
+    lg, st = prefill(cfg, params, toks[:, :s], cache_len=s + 2)
+    assert jnp.allclose(full[:, :s], lg, atol=2e-4), "prefill logits mismatch"
+    lg2, _ = decode_step(cfg, params, toks[:, s:s + 1], st, jnp.full((2,), s))
+    assert jnp.allclose(full[:, s], lg2[:, 0], atol=2e-4), "decode logits mismatch"
+
+
+@pytest.mark.parametrize("arch", ["h2o-danube-3-4b", "recurrentgemma-9b"])
+def test_ring_buffer_decode_beyond_window(arch):
+    """SWA ring cache: decode with S > window still matches the oracle."""
+    cfg = dataclasses.replace(C.get_arch(arch).reduced(), attn_impl="einsum")
+    assert cfg.sliding_window is not None
+    s = cfg.sliding_window * 2 - 2
+    params = init_params(cfg, jax.random.key(0))
+    toks = jax.random.randint(jax.random.key(1), (2, s + 1), 0, cfg.vocab_size)
+    full, _, _ = forward(cfg, params, toks, mode="train")
+    _, st = prefill(cfg, params, toks[:, :s], cache_len=s + 2)
+    lg2, _ = decode_step(cfg, params, toks[:, s:s + 1], st, jnp.full((2,), s))
+    assert jnp.allclose(full[:, s], lg2[:, 0], atol=3e-4)
+
+
+def test_multi_token_decode_chain():
+    """Decode 4 tokens sequentially; each must match the full forward."""
+    cfg = dataclasses.replace(C.get_arch("rwkv6-1.6b").reduced(), attn_impl="einsum")
+    params = init_params(cfg, jax.random.key(0))
+    s, extra = 8, 4
+    toks = jax.random.randint(jax.random.key(1), (1, s + extra), 0, cfg.vocab_size)
+    full, _, _ = forward(cfg, params, toks, mode="train")
+    _, st = prefill(cfg, params, toks[:, :s], cache_len=s + extra + 1)
+    for i in range(extra):
+        lg, st = decode_step(cfg, params, toks[:, s + i:s + i + 1], st,
+                             jnp.full((1,), s + i))
+        assert jnp.allclose(full[:, s + i], lg[:, 0], atol=3e-4), f"token {i}"
+
+
+def test_whisper_decode_matches_forward():
+    cfg = dataclasses.replace(C.get_arch("whisper-small").reduced(),
+                              attn_impl="einsum")
+    from repro.models.encdec import (
+        encdec_decode_step,
+        encdec_forward,
+        init_encdec_decode_state,
+    )
+    params = init_params(cfg, jax.random.key(0))
+    s = 10
+    toks = jax.random.randint(jax.random.key(1), (2, s + 1), 0, cfg.vocab_size)
+    frames = 0.1 * jax.random.normal(jax.random.key(2),
+                                     (2, cfg.n_frontend_tokens, cfg.d_model))
+    full, _ = encdec_forward(cfg, params, toks, frames)
+    _, sts = encdec_forward(cfg, params, toks[:, :s], frames, mode="prefill",
+                            cache_len=s + 2)
+    state = init_encdec_decode_state(cfg, 2, max_seq=s + 2,
+                                     n_frames=cfg.n_frontend_tokens,
+                                     dtype=jnp.float32)
+    state["self"] = sts["cache"]
+    state["cross_k"], state["cross_v"] = sts["cross"]["k"], sts["cross"]["v"]
+    lg, _ = encdec_decode_step(cfg, params, toks[:, s:s + 1], state,
+                               jnp.full((2,), s))
+    assert jnp.allclose(full[:, s], lg[:, 0], atol=3e-4)

@@ -1,0 +1,92 @@
+"""Beyond-paper strategies: hierarchical FL (the paper's future work),
+quantized sync with error feedback, elastic averaging."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core.extensions import (
+    ElasticAveragingStrategy,
+    HierarchicalStrategy,
+    QuantizedSyncStrategy,
+)
+
+
+def _params(m=6, seed=0):
+    k = jax.random.key(seed)
+    return {"w": jax.random.normal(k, (m, 4, 3)),
+            "b": jax.random.normal(jax.random.split(k)[0], (m, 5))}
+
+
+def test_hierarchical_local_then_global():
+    s = HierarchicalStrategy(tau=4, clusters=((0, 1, 2), (3, 4, 5)),
+                             global_every=2)
+    p = _params(6)
+    # period 0: intra-cluster average only
+    loc = s.server_average(p, period_idx=jnp.asarray(0))
+    w = np.asarray(loc["w"])
+    np.testing.assert_allclose(w[0], w[1], atol=1e-6)
+    np.testing.assert_allclose(w[3], w[5], atol=1e-6)
+    assert not np.allclose(w[0], w[3])  # clusters still differ
+    np.testing.assert_allclose(w[0], np.asarray(p["w"])[:3].mean(0), atol=1e-6)
+    # period 1 (global): everyone equal to the full mean
+    glob = s.server_average(p, period_idx=jnp.asarray(1))
+    wg = np.asarray(glob["w"])
+    np.testing.assert_allclose(wg[0], wg[5], atol=1e-6)
+    np.testing.assert_allclose(wg[0], np.asarray(p["w"]).mean(0), atol=1e-6)
+
+
+def test_hierarchical_requires_partition():
+    with pytest.raises(ValueError):
+        HierarchicalStrategy(tau=2, clusters=((0, 1), (1, 2)))
+
+
+def test_hierarchical_comm_accounting():
+    s = HierarchicalStrategy(tau=4, clusters=((0, 1, 2), (3, 4, 5)),
+                             global_every=3)
+    ev = s.comm_events_per_period()
+    assert ev["c1"] == 2          # amortized global uploads
+    assert ev["w1"] == 4          # the rest go over the cheap local link
+
+
+def test_quantized_sync_with_error_feedback_converges_to_mean():
+    s = QuantizedSyncStrategy(tau=2, m=4)
+    p = _params(4, seed=1)
+    anchor = jax.tree.map(lambda l: l[0] * 0.0, p)
+    errors = jax.tree.map(lambda l: jnp.zeros_like(l), p)
+    new_p, new_e = s.server_average(p, anchor=anchor, errors=errors)
+    mean = np.asarray(p["w"]).mean(0)
+    got = np.asarray(new_p["w"])[0]
+    # int8 quantization error is bounded by scale/2 per element
+    scale = np.abs(np.asarray(p["w"])).max() / 127.0
+    assert np.max(np.abs(got - mean)) <= scale * 1.01
+    # the residual equals what was lost (error feedback invariant)
+    resid = np.asarray(new_e["w"])
+    assert np.all(np.abs(resid) <= scale * 0.51)
+
+
+def test_quantized_comm_accounting_reports_byte_factor():
+    s = QuantizedSyncStrategy(tau=2, m=4, bits=8)
+    assert s.comm_events_per_period()["c1_bytes_factor"] == 0.25
+
+
+def test_elastic_averaging_contracts_toward_anchor():
+    s = ElasticAveragingStrategy(tau=2, m=4, alpha=0.5)
+    p = _params(4, seed=2)
+    anchor = jax.tree.map(lambda l: jnp.zeros(l.shape[1:]), p)
+    new_p, new_anchor = s.server_average(p, anchor=anchor)
+    # agents move halfway to anchor; anchor moves halfway to the agent mean
+    np.testing.assert_allclose(np.asarray(new_p["w"]),
+                               0.5 * np.asarray(p["w"]), atol=1e-6)
+    np.testing.assert_allclose(np.asarray(new_anchor["w"]),
+                               0.5 * np.asarray(p["w"]).mean(0), atol=1e-6)
+
+
+def test_elastic_repeated_rounds_reach_consensus():
+    s = ElasticAveragingStrategy(tau=2, m=4, alpha=0.5)
+    p = _params(4, seed=3)
+    anchor = jax.tree.map(lambda l: jnp.zeros(l.shape[1:]), p)
+    for _ in range(40):
+        p, anchor = s.server_average(p, anchor=anchor)
+    spread = float(jnp.max(jnp.abs(p["w"] - p["w"].mean(0, keepdims=True))))
+    assert spread < 1e-4

@@ -1,0 +1,123 @@
+"""Per-kernel shape/dtype sweeps vs the pure-jnp oracles (deliverable c)."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+import repro.kernels.ops as ops
+import repro.kernels.ref as ref
+from repro.core import topology as T
+from repro.core.topology import mixing_matrix
+
+
+def _rand(key, shape, dtype=jnp.float32, scale=0.5):
+    return (scale * jax.random.normal(key, shape)).astype(dtype)
+
+
+@pytest.mark.parametrize("b,t,h,d,chunk", [
+    (1, 8, 1, 8, 4),
+    (2, 32, 3, 16, 8),
+    (2, 64, 2, 64, 16),
+    (1, 24, 4, 32, 24),   # single chunk
+    (3, 20, 2, 16, 8),    # t not divisible by chunk -> degenerate single chunk
+])
+def test_wkv6_matches_oracle(b, t, h, d, chunk):
+    ks = jax.random.split(jax.random.key(b * t + h), 6)
+    r, k, v = (_rand(ks[i], (b, t, h, d)) for i in range(3))
+    w = jax.nn.sigmoid(_rand(ks[3], (b, t, h, d))) * 0.5 + 0.45
+    u = _rand(ks[4], (h, d))
+    s0 = _rand(ks[5], (b, h, d, d), scale=0.1)
+    y1, s1 = ops.wkv6(r, k, v, w, u, s0, chunk=chunk)
+    y2, s2 = ref.wkv6_ref(r, k, v, w, u, s0)
+    np.testing.assert_allclose(y1, y2, atol=1e-5, rtol=1e-5)
+    np.testing.assert_allclose(s1, s2, atol=1e-5, rtol=1e-5)
+
+
+def test_wkv6_state_chaining():
+    """Running two halves with carried state == one full run (chunk boundary)."""
+    b, t, h, d = 1, 32, 2, 16
+    ks = jax.random.split(jax.random.key(7), 5)
+    r, k, v = (_rand(ks[i], (b, t, h, d)) for i in range(3))
+    w = jax.nn.sigmoid(_rand(ks[3], (b, t, h, d))) * 0.5 + 0.45
+    u = _rand(ks[4], (h, d))
+    s0 = jnp.zeros((b, h, d, d))
+    y_full, s_full = ops.wkv6(r, k, v, w, u, s0, chunk=8)
+    y1, s_mid = ops.wkv6(r[:, :16], k[:, :16], v[:, :16], w[:, :16], u, s0, chunk=8)
+    y2, s_end = ops.wkv6(r[:, 16:], k[:, 16:], v[:, 16:], w[:, 16:], u, s_mid, chunk=8)
+    np.testing.assert_allclose(jnp.concatenate([y1, y2], 1), y_full, atol=1e-5)
+    np.testing.assert_allclose(s_end, s_full, atol=1e-5)
+
+
+@pytest.mark.parametrize("sq,sk,window,bq,bk", [
+    (32, 32, None, 16, 16),
+    (64, 64, 24, 16, 16),
+    (64, 64, 8, 32, 16),    # window smaller than a block
+    (128, 128, 48, 32, 32),
+])
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+def test_swa_attention_matches_oracle(sq, sk, window, bq, bk, dtype):
+    b, h, d = 2, 2, 32
+    ks = jax.random.split(jax.random.key(sq + sk + (window or 0)), 3)
+    q, k, v = (_rand(ks[i], (b, sq, h, d), dtype) for i in range(3))
+    o1 = ops.swa_attention(q, k, v, window=window, block_q=bq, block_kv=bk)
+    o2 = ref.swa_attention_ref(q, k, v, window=window)
+    atol = 2e-2 if dtype == jnp.bfloat16 else 2e-6
+    np.testing.assert_allclose(np.asarray(o1, np.float32),
+                               np.asarray(o2, np.float32), atol=atol)
+
+
+def test_swa_block_skipping_correct_at_boundaries():
+    """Every (window, block) alignment near edges must agree with the oracle."""
+    b, h, d = 1, 1, 16
+    for window in (16, 17, 31, 33):
+        ks = jax.random.split(jax.random.key(window), 3)
+        q, k, v = (_rand(ks[i], (b, 64, h, d)) for i in range(3))
+        o1 = ops.swa_attention(q, k, v, window=window, block_q=16, block_kv=16)
+        o2 = ref.swa_attention_ref(q, k, v, window=window)
+        np.testing.assert_allclose(o1, o2, atol=2e-6), window
+
+
+@pytest.mark.parametrize("m,n,block", [(4, 64, 32), (7, 1000, 128), (16, 4096, 2048)])
+def test_consensus_step_matches_oracle(m, n, block):
+    topo = T.ring(m)
+    p = jnp.asarray(mixing_matrix(topo, 0.9 / topo.max_degree), jnp.float32)
+    g = _rand(jax.random.key(m * n), (m, n))
+    out = ops.consensus_step(g, p, block_n=block)
+    np.testing.assert_allclose(out, ref.consensus_step_ref(g, p), atol=1e-5)
+
+
+@pytest.mark.parametrize("n,block,d", [(100, 64, 0.5), (4096, 512, 0.98),
+                                        (5000, 4096, 0.0), (64, 64, 1.0)])
+def test_decay_accum_matches_oracle(n, block, d):
+    ks = jax.random.split(jax.random.key(n), 2)
+    acc, g = _rand(ks[0], (n,)), _rand(ks[1], (n,))
+    out = ops.decay_accum(acc, g, d, block_n=block)
+    np.testing.assert_allclose(out, ref.decay_accum_ref(acc, g, d), atol=1e-6)
+
+
+def test_consensus_step_tree_roundtrip():
+    topo = T.ring(5)
+    p = jnp.asarray(mixing_matrix(topo, 0.3), jnp.float32)
+    g = {"a": _rand(jax.random.key(0), (5, 3, 4)),
+         "b": _rand(jax.random.key(1), (5, 7))}
+    out = ops.consensus_step_tree(g, p)
+    expect = jax.tree.map(lambda l: jnp.tensordot(p, l, axes=1), g)
+    np.testing.assert_allclose(out["a"], expect["a"], atol=1e-5)
+    np.testing.assert_allclose(out["b"], expect["b"], atol=1e-5)
+
+
+def test_wkv6_kernel_inside_time_mix():
+    """The Pallas wkv6 plugs into the model's time_mix as wkv_impl."""
+    import dataclasses
+    import repro.configs as C
+    from repro.models import rwkv6 as rw
+    cfg = C.get_arch("rwkv6-1.6b").reduced()
+    p = rw.init_time_mix(jax.random.key(0), cfg)
+    p = jax.tree.map(lambda l: l.value, p, is_leaf=lambda x: hasattr(x, "axes"))
+    x = _rand(jax.random.key(1), (2, 16, cfg.d_model))
+    st = rw.init_wkv_state(cfg, 2)["tm"]
+    y_ref, st_ref = rw.time_mix(p, x, cfg, st)
+    y_k, st_k = rw.time_mix(p, x, cfg, st,
+                            wkv_impl=lambda *a: ops.wkv6(*a, chunk=8))
+    np.testing.assert_allclose(y_k, y_ref, atol=1e-4)
+    np.testing.assert_allclose(st_k["wkv"], st_ref["wkv"], atol=1e-4)

@@ -1,0 +1,100 @@
+"""Correctness of the §Perf alternative implementations (hillclimb paths)."""
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+import repro.configs as C
+from repro.models import decode_step, forward, init_params, prefill
+from repro.models.rwkv6 import wkv_chunked, wkv_scan
+
+
+@pytest.mark.parametrize("chunk", [8, 16, 32, 48])
+def test_wkv_chunked_matches_scan(chunk):
+    B, T, H, D = 2, 48, 3, 16
+    ks = jax.random.split(jax.random.key(chunk), 6)
+    r, k, v = (0.5 * jax.random.normal(ks[i], (B, T, H, D)) for i in range(3))
+    w = jax.nn.sigmoid(jax.random.normal(ks[3], (B, T, H, D))) * 0.5 + 0.45
+    u = 0.3 * jax.random.normal(ks[4], (H, D))
+    s0 = 0.1 * jax.random.normal(ks[5], (B, H, D, D))
+    y1, s1 = wkv_scan(r, k, v, w, u, s0)
+    y2, s2 = wkv_chunked(r, k, v, w, u, s0, chunk=chunk)
+    np.testing.assert_allclose(y1, y2, atol=1e-5, rtol=1e-5)
+    np.testing.assert_allclose(s1, s2, atol=1e-5, rtol=1e-5)
+
+
+def test_wkv_chunked_gradients_match_scan():
+    B, T, H, D = 1, 24, 2, 8
+    ks = jax.random.split(jax.random.key(0), 6)
+    r, k, v = (0.5 * jax.random.normal(ks[i], (B, T, H, D)) for i in range(3))
+    w = jax.nn.sigmoid(jax.random.normal(ks[3], (B, T, H, D))) * 0.5 + 0.45
+    u = 0.3 * jax.random.normal(ks[4], (H, D))
+    s0 = jnp.zeros((B, H, D, D))
+
+    def loss(fn, r, k, v, w):
+        y, _ = fn(r, k, v, w, u, s0)
+        return jnp.sum(y**2)
+
+    g1 = jax.grad(lambda *a: loss(wkv_scan, *a), argnums=(0, 1, 2, 3))(r, k, v, w)
+    g2 = jax.grad(lambda *a: loss(lambda *b: wkv_chunked(*b, chunk=8), *a),
+                  argnums=(0, 1, 2, 3))(r, k, v, w)
+    for a, b in zip(g1, g2):
+        np.testing.assert_allclose(a, b, atol=2e-4, rtol=2e-4)
+
+
+def test_rwkv_model_with_chunked_impl_matches_scan_impl():
+    cfg = C.get_arch("rwkv6-1.6b").reduced()
+    cfg_c = dataclasses.replace(cfg, wkv_impl="chunked", wkv_chunk=8)
+    params = init_params(cfg, jax.random.key(0))
+    toks = jax.random.randint(jax.random.key(1), (2, 16), 0, cfg.vocab_size)
+    l1, _, _ = forward(cfg, params, toks, mode="train")
+    l2, _, _ = forward(cfg_c, params, toks, mode="train")
+    np.testing.assert_allclose(l1, l2, atol=1e-3)
+
+
+@pytest.mark.parametrize("impl", ["scatter", "onehot"])
+def test_cache_update_impls_decode_exact(impl):
+    cfg = dataclasses.replace(C.get_arch("phi4-mini-3.8b").reduced(),
+                              attn_impl="einsum", cache_update=impl)
+    params = init_params(cfg, jax.random.key(0))
+    s = 10
+    toks = jax.random.randint(jax.random.key(1), (2, s + 1), 0, cfg.vocab_size)
+    full, _, _ = forward(cfg, params, toks, mode="train")
+    _, st = prefill(cfg, params, toks[:, :s], cache_len=s + 2)
+    lg, _ = decode_step(cfg, params, toks[:, s:s + 1], st, jnp.full((2,), s))
+    np.testing.assert_allclose(np.asarray(full[:, s]), np.asarray(lg[:, 0]),
+                               atol=3e-4)
+
+
+def test_bf16_adam_state_dtype_preserved_and_converges():
+    from repro.optim import adamw
+    opt = adamw(state_dtype=jnp.bfloat16)
+    p = {"x": jnp.asarray([3.0, -2.0])}
+    s = opt.init(p)
+    for _ in range(150):
+        g = jax.grad(lambda q: jnp.sum(q["x"] ** 2))(p)
+        p, s = opt.apply(g, s, p, 0.1)
+    assert s["m"]["x"].dtype == jnp.bfloat16  # no silent fp32 promotion
+    assert float(jnp.sum(p["x"] ** 2)) < 1e-3
+
+
+def test_moe_group_size_does_not_change_output_in_nodrop_regime():
+    cfg = C.get_arch("kimi-k2-1t-a32b").reduced()
+    params = init_params(cfg, jax.random.key(0))
+    toks = jax.random.randint(jax.random.key(1), (2, 16), 0, cfg.vocab_size)
+    outs = []
+    for g in (4, 8, 4096):
+        c = dataclasses.replace(cfg, moe_group_size=g)
+        l, _, _ = forward(c, params, toks, mode="train")
+        outs.append(np.asarray(l))
+    np.testing.assert_allclose(outs[0], outs[1], atol=2e-4)
+    np.testing.assert_allclose(outs[0], outs[2], atol=2e-4)
+
+
+def test_tau_schedule_fp_rounding_regression():
+    """floor(7 * 0.1/0.1) must be 7 (was 6 before the epsilon guard)."""
+    from repro.core.variation import tau_schedule
+    taus = tau_schedule(7, np.asarray([0.1, 0.1]))
+    assert taus[0] == 7

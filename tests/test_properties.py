@@ -1,0 +1,123 @@
+"""Property-based tests (hypothesis) on system invariants."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+from hypothesis import given, settings, strategies as st
+
+from repro.core.bounds import SgdConstants, periodic_bound_t1, variation_bound_t2
+from repro.core.decay import (
+    cosine_decay,
+    exponential_decay,
+    linear_decay,
+    step_decay,
+)
+from repro.core import topology as T
+from repro.core.variation import tau_schedule, uniform_taus, validate_a2
+from repro.utils.pytree import tree_axpy, tree_dot, tree_l2_norm, tree_scale
+
+SETTINGS = settings(max_examples=40, deadline=None)
+
+
+@SETTINGS
+@given(lam=st.floats(0.05, 1.0), tau=st.integers(1, 40))
+def test_exponential_decay_satisfies_a3(lam, tau):
+    d = exponential_decay(lam)
+    vals = np.asarray(d(jnp.arange(tau)))
+    assert np.isclose(vals[0], 1.0)
+    assert np.all(np.diff(vals) <= 1e-7)
+    assert np.all((vals >= -1e-7) & (vals <= 1.0 + 1e-7))
+
+
+@SETTINGS
+@given(tau=st.integers(1, 30), floor=st.floats(0.0, 0.9),
+       kind=st.sampled_from(["linear", "cosine", "step"]))
+def test_other_decays_satisfy_a3(tau, floor, kind):
+    if kind == "linear":
+        d = linear_decay(tau, floor)
+    elif kind == "cosine":
+        d = cosine_decay(tau, floor)
+    else:
+        d = step_decay(max(tau // 2, 1), floor)
+    vals = np.asarray(d(jnp.arange(tau)))
+    assert np.isclose(vals[0], 1.0, atol=1e-6)
+    assert np.all(np.diff(vals) <= 1e-6)
+    assert np.all(vals >= -1e-6)
+
+
+@SETTINGS
+@given(tau=st.integers(1, 30), m=st.integers(1, 20), seed=st.integers(0, 99))
+def test_uniform_taus_satisfy_a2(tau, m, seed):
+    taus = uniform_taus(1, tau, m, seed)
+    validate_a2(taus, tau)
+
+
+@SETTINGS
+@given(tau=st.integers(1, 20),
+       times=st.lists(st.floats(0.1, 10.0), min_size=2, max_size=10))
+def test_tau_schedule_eq6_properties(tau, times):
+    t = np.sort(np.asarray(times))
+    taus = tau_schedule(tau, t)
+    assert taus[0] == max(tau, 1)          # fastest agent paces the period
+    assert np.all(np.diff(taus) <= 0)      # slower agents do fewer updates
+    assert np.all(taus >= 1)
+
+
+@SETTINGS
+@given(tau=st.integers(1, 25),
+       nu_frac=st.floats(0.0, 1.0), w2=st.floats(0.0, 5.0),
+       eta=st.floats(1e-4, 0.05), sigma2=st.floats(0.01, 5.0))
+def test_t2_never_exceeds_t1_at_same_tau(tau, nu_frac, w2, eta, sigma2):
+    """nu <= tau and omega^2 >= 0 imply the variation-aware bound <= T1's
+    bound with nu=tau (heterogeneity can only help, per the paper)."""
+    c = SgdConstants(L=1.0, sigma2=sigma2, beta=0.1, eta=eta, K=10_000, m=5,
+                     f0_minus_finf=1.0)
+    nu = 1.0 + nu_frac * (tau - 1.0)
+    w2 = min(w2, (tau - nu) * (nu - 1.0)) if tau > 1 else 0.0
+    t2 = variation_bound_t2(c, tau, nu, max(w2, 0.0))
+    t1 = periodic_bound_t1(c, tau)
+    assert t2 <= t1 + 1e-12
+
+
+@SETTINGS
+@given(m=st.integers(3, 12), seed=st.integers(0, 50))
+def test_mixing_matrix_spectral_radius(m, seed):
+    topo = T.random_regularish(m, 2, min(3, m - 1), seed=seed)
+    eps = 0.9 / topo.max_degree
+    p = T.mixing_matrix(topo, eps)
+    eig = np.linalg.eigvalsh(p)
+    assert np.all(eig <= 1.0 + 1e-9)
+    assert np.all(eig >= -1.0 + 1e-9)
+    assert np.isclose(np.max(eig), 1.0)
+
+
+@SETTINGS
+@given(a=st.floats(-3, 3), n=st.integers(1, 6))
+def test_pytree_algebra(a, n):
+    key = jax.random.key(n)
+    x = {"w": jax.random.normal(key, (n, 2)), "b": jnp.ones(n)}
+    y = tree_scale(2.0, x)
+    np.testing.assert_allclose(tree_dot(x, y), 2 * tree_dot(x, x), rtol=1e-5)
+    z = tree_axpy(a, x, y)
+    np.testing.assert_allclose(
+        np.asarray(z["w"]), a * np.asarray(x["w"]) + 2 * np.asarray(x["w"]),
+        rtol=1e-5, atol=1e-6)
+    assert float(tree_l2_norm(x)) >= 0
+
+
+@SETTINGS
+@given(b=st.integers(1, 3), t=st.integers(1, 24), h=st.integers(1, 3),
+       d=st.sampled_from([4, 8, 16]))
+def test_wkv6_kernel_property_sweep(b, t, h, d):
+    """Random-shape sweep: Pallas wkv6 == oracle for every drawn shape."""
+    import repro.kernels.ops as ops
+    import repro.kernels.ref as ref
+    ks = jax.random.split(jax.random.key(b * 131 + t * 7 + h * 3 + d), 6)
+    r, k, v = (0.5 * jax.random.normal(ks[i], (b, t, h, d)) for i in range(3))
+    w = jax.nn.sigmoid(jax.random.normal(ks[3], (b, t, h, d))) * 0.5 + 0.4
+    u = 0.3 * jax.random.normal(ks[4], (h, d))
+    s0 = 0.1 * jax.random.normal(ks[5], (b, h, d, d))
+    chunk = max(1, t // 2)
+    y1, s1 = ops.wkv6(r, k, v, w, u, s0, chunk=chunk)
+    y2, s2 = ref.wkv6_ref(r, k, v, w, u, s0)
+    np.testing.assert_allclose(y1, y2, atol=1e-4, rtol=1e-4)
+    np.testing.assert_allclose(s1, s2, atol=1e-4, rtol=1e-4)

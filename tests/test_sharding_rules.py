@@ -1,0 +1,55 @@
+"""Sharding rule engine: spec construction, divisibility drops, dedup."""
+import jax
+import pytest
+from jax.sharding import PartitionSpec as P
+
+from repro.launch.mesh import make_test_mesh
+from repro.sharding.rules import DEFAULT_RULES, MeshRules, shard, use_rules
+
+pytestmark = pytest.mark.skipif(
+    len(jax.devices()) < 4, reason="needs 4 local devices"
+)
+
+
+def _rules():
+    mesh = make_test_mesh((2, 2), ("data", "model"))
+    return MeshRules(mesh=mesh, rules=dict(DEFAULT_RULES))
+
+
+def test_spec_basic_mapping():
+    r = _rules()
+    assert r.spec(("batch", "seq", "embed")) == P("data", None, None)
+    assert r.spec(("embed_fsdp", "heads")) == P("data", "model")
+
+
+def test_spec_drops_non_divisible():
+    r = _rules()
+    # 3 not divisible by the 2-way model axis -> constraint dropped + recorded
+    assert r.spec(("heads",), shape=(3,)) == P(None)
+    assert ("heads", 3, 2) in r.dropped
+    assert r.spec(("heads",), shape=(4,)) == P("model")
+
+
+def test_spec_dedups_mesh_axes():
+    r = _rules()
+    # both 'heads' and 'ff' map to model; second use must be dropped
+    assert r.spec(("heads", "ff"), shape=(4, 4)) == P("model", None)
+
+
+def test_missing_pod_axis_ignored():
+    r = _rules()  # mesh has no 'pod'
+    assert r.spec(("agents", "batch")) == P(None, "data")
+
+
+def test_shard_outside_context_is_identity():
+    import jax.numpy as jnp
+    x = jnp.ones((4, 4))
+    assert shard(x, "batch", "embed") is x
+
+
+def test_shard_applies_constraint_in_context():
+    import jax.numpy as jnp
+    r = _rules()
+    with use_rules(r):
+        y = jax.jit(lambda x: shard(x, "batch", "embed"))(jnp.ones((4, 8)))
+    assert y.sharding.spec == P("data", None) or y.shape == (4, 8)

@@ -1,0 +1,108 @@
+"""Unit tests for the paper's aggregation strategies (core contribution)."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import (
+    ConsensusStrategy,
+    DecayStrategy,
+    PeriodicStrategy,
+    SyncStrategy,
+    exponential_decay,
+    make_strategy,
+    uniform_taus,
+)
+from repro.core import topology as T
+
+
+def _grads(m=5, seed=0):
+    key = jax.random.key(seed)
+    return {
+        "w": jax.random.normal(key, (m, 3, 4)),
+        "b": jax.random.normal(jax.random.split(key)[0], (m, 2)),
+    }
+
+
+def test_sync_strategy_is_tau_1():
+    s = SyncStrategy(m=4)
+    assert s.tau == 1 and np.all(s.taus == 1)
+
+
+def test_periodic_mask_matches_indicator():
+    taus = np.array([5, 3, 1])
+    s = PeriodicStrategy(tau=5, taus=taus)
+    for j in range(5):
+        w = np.asarray(s.weight(j))
+        assert np.array_equal(w, (taus > j).astype(np.float32))
+
+
+def test_variation_mask_zeroes_exhausted_agents():
+    taus = np.array([4, 2, 1])
+    s = PeriodicStrategy(tau=4, taus=taus)
+    g = _grads(m=3)
+    out = s.transform(g, 3)  # offset 3: only agent 0 still active
+    assert np.allclose(np.asarray(out["w"])[1:], 0.0)
+    assert np.allclose(np.asarray(out["w"])[0], np.asarray(g["w"])[0])
+
+
+def test_server_average_is_mean():
+    s = PeriodicStrategy(tau=2, m=4)
+    g = _grads(m=4)
+    avg = s.server_average(g)
+    assert np.allclose(np.asarray(avg["w"]), np.asarray(g["w"]).mean(0), atol=1e-6)
+
+
+def test_decay_weights_follow_eq21():
+    lam = 0.9
+    s = DecayStrategy(tau=6, m=3, decay=exponential_decay(lam))
+    for j in range(6):
+        w = np.asarray(s.weight(j))
+        assert np.allclose(w, lam ** (j / 2), atol=1e-6)
+
+
+def test_decay_rejects_non_a3_function():
+    increasing = lambda j: 1.0 + j  # violates D <= 1 monotone
+    with pytest.raises(ValueError):
+        DecayStrategy(tau=4, m=2, decay=increasing)
+
+
+def test_consensus_fused_equals_explicit_rounds():
+    topo = T.ring(6)
+    g = _grads(m=6)
+    for rounds in (1, 2, 3):
+        fused = ConsensusStrategy(tau=3, topo=topo, eps=0.3, rounds=rounds,
+                                  fused=True)
+        loop = ConsensusStrategy(tau=3, topo=topo, eps=0.3, rounds=rounds,
+                                 fused=False)
+        a = fused.transform(g, 0)
+        b = loop.transform(g, 0)
+        assert jnp.allclose(a["w"], b["w"], atol=1e-5)
+
+
+def test_consensus_preserves_mean():
+    """P is doubly stochastic: gossip never changes the across-agent mean."""
+    topo = T.random_regularish(7, 3, 4, seed=1)
+    s = ConsensusStrategy(tau=2, topo=topo, eps=0.1, rounds=3)
+    g = _grads(m=7)
+    out = s.transform(g, 0)
+    assert jnp.allclose(out["w"].mean(0), g["w"].mean(0), atol=1e-5)
+
+
+def test_consensus_comm_events_match_eq27():
+    topo = T.random_regularish(7, 3, 4, seed=0)
+    s = ConsensusStrategy(tau=10, topo=topo, eps=0.1, rounds=2)
+    ev = s.comm_events_per_period()
+    assert ev["c1"] == 7
+    assert ev["c2"] == 70
+    assert ev["w1"] == int(topo.degrees.sum()) * 2 * 10
+    assert ev["w1"] == ev["w2"]
+
+
+def test_make_strategy_dispatch():
+    assert make_strategy("sync", m=3).name == "sync"
+    assert make_strategy("periodic", tau=4, m=3).tau == 4
+    taus = uniform_taus(1, 8, 5, seed=0)
+    assert make_strategy("periodic", tau=8, taus=taus).m == 5
+    with pytest.raises(ValueError):
+        make_strategy("nope", m=2)

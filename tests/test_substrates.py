@@ -1,0 +1,96 @@
+"""Optimizers, data pipeline, checkpointing, sharding rules."""
+import os
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.checkpoint import latest_step, restore, save
+from repro.data import SyntheticLM, make_batch_iterator
+from repro.optim import adamw, clip_by_global_norm, momentum, sgd
+from repro.optim.schedules import constant_lr, cosine_lr, warmup_cosine_lr
+
+
+@pytest.mark.parametrize("opt_name", ["sgd", "momentum", "adamw"])
+def test_optimizers_minimize_quadratic(opt_name):
+    opt = {"sgd": sgd, "momentum": momentum, "adamw": adamw}[opt_name]()
+    params = {"x": jnp.asarray([3.0, -2.0]), "y": jnp.asarray(5.0)}
+    state = opt.init(params)
+    loss_fn = lambda p: jnp.sum(p["x"] ** 2) + p["y"] ** 2
+    lr = 0.1
+    for _ in range(200):
+        grads = jax.grad(loss_fn)(params)
+        params, state = opt.apply(grads, state, params, lr)
+    assert float(loss_fn(params)) < 1e-2
+
+
+def test_adamw_states_fp32_even_for_bf16_params():
+    opt = adamw()
+    params = {"w": jnp.zeros((4,), jnp.bfloat16)}
+    st = opt.init(params)
+    assert st["m"]["w"].dtype == jnp.float32
+
+
+def test_grad_clip_norm():
+    g = {"a": jnp.asarray([3.0, 4.0])}
+    clipped, norm = clip_by_global_norm(g, 1.0)
+    assert np.isclose(float(norm), 5.0)
+    assert np.isclose(float(jnp.linalg.norm(clipped["a"])), 1.0)
+    # under the threshold: untouched
+    clipped2, _ = clip_by_global_norm(g, 10.0)
+    np.testing.assert_allclose(clipped2["a"], g["a"])
+
+
+def test_schedules():
+    assert float(constant_lr(3e-4)(100)) == pytest.approx(3e-4)
+    c = cosine_lr(1.0, 100, final_frac=0.1)
+    assert float(c(0)) == pytest.approx(1.0)
+    assert float(c(100)) == pytest.approx(0.1)
+    w = warmup_cosine_lr(1.0, 10, 110)
+    assert float(w(5)) == pytest.approx(0.5)
+    assert float(w(10)) == pytest.approx(1.0, abs=1e-3)
+
+
+def test_synthetic_data_deterministic_and_agent_disjoint():
+    src = SyntheticLM(vocab_size=1000, seed=42)
+    a = src.batch(step=3, batch=4, seq=32, agent=0)
+    b = src.batch(step=3, batch=4, seq=32, agent=0)
+    c = src.batch(step=3, batch=4, seq=32, agent=1)
+    np.testing.assert_array_equal(a, b)
+    assert not np.array_equal(a, c)
+    assert a.min() >= 0 and a.max() < 1000
+
+
+def test_batch_iterator_host_sharding():
+    src = SyntheticLM(vocab_size=100, seed=0)
+    full = next(make_batch_iterator(src, 8, 16))["tokens"]
+    p0 = next(make_batch_iterator(src, 8, 16, process_index=0, process_count=2))
+    p1 = next(make_batch_iterator(src, 8, 16, process_index=1, process_count=2))
+    np.testing.assert_array_equal(np.concatenate([p0["tokens"], p1["tokens"]]), full)
+
+
+def test_checkpoint_roundtrip_nested(tmp_path):
+    tree = {
+        "params": {"w": np.arange(6, dtype=np.float32).reshape(2, 3),
+                   "scale": np.float32(2.5)},
+        "opt": [np.zeros(3, np.int32), (np.ones(2), np.asarray(7))],
+        "step": 13,
+    }
+    path = save(str(tmp_path), 13, tree, metadata={"note": "x"})
+    assert os.path.exists(path)
+    restored, meta = restore(str(tmp_path))
+    assert meta["step"] == 13 and meta["note"] == "x"
+    np.testing.assert_array_equal(restored["params"]["w"], tree["params"]["w"])
+    assert isinstance(restored["opt"], list)
+    assert isinstance(restored["opt"][1], tuple)
+    np.testing.assert_array_equal(restored["opt"][1][0], np.ones(2))
+
+
+def test_checkpoint_latest_step(tmp_path):
+    assert latest_step(str(tmp_path)) is None
+    save(str(tmp_path), 5, {"a": np.zeros(1)})
+    save(str(tmp_path), 17, {"a": np.ones(1)})
+    assert latest_step(str(tmp_path)) == 17
+    tree, _ = restore(str(tmp_path))
+    np.testing.assert_array_equal(tree["a"], np.ones(1))

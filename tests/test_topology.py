@@ -1,0 +1,57 @@
+"""Graph topology layer: Laplacian (eq. 55), mu2, mixing matrix validity."""
+import numpy as np
+import pytest
+
+from repro.core import topology as T
+
+
+def test_chain5_mu2_matches_paper_merge_value():
+    """The paper's 'Merge' topology (adjacent vehicles, m=5) has mu2=0.3820."""
+    assert np.isclose(T.mu2(T.chain(5)), 0.3820, atol=1e-4)
+
+
+def test_full_graph_mu2_equals_m():
+    topo = T.fully_connected(6)
+    assert np.isclose(T.mu2(topo), 6.0, atol=1e-9)
+    assert topo.max_degree == 6
+
+
+def test_laplacian_rows_sum_to_zero():
+    for topo in (T.ring(7), T.star(5), T.torus2d(3, 4)):
+        la = T.laplacian(topo)
+        assert np.allclose(la.sum(1), 0)
+        assert np.array_equal(la, la.T)
+
+
+def test_mixing_matrix_doubly_stochastic():
+    topo = T.random_regularish(8, 3, 4, seed=2)
+    p = T.mixing_matrix(topo, 0.9 / topo.max_degree)
+    assert np.allclose(p.sum(0), 1) and np.allclose(p.sum(1), 1)
+
+
+def test_mixing_matrix_eps_bounds():
+    topo = T.ring(5)
+    with pytest.raises(ValueError):
+        T.mixing_matrix(topo, 1.0 / topo.max_degree)  # eps must be < 1/Delta
+    with pytest.raises(ValueError):
+        T.mixing_matrix(topo, 0.0)
+
+
+def test_random_graph_connected_and_degree_range():
+    topo = T.random_regularish(12, 3, 4, seed=5)
+    assert topo.is_connected()
+    assert topo.degrees.min() >= 3
+
+
+def test_a4_rejects_directed_graph():
+    adj = np.zeros((3, 3), int)
+    adj[0, 1] = 1  # asymmetric
+    with pytest.raises(ValueError):
+        T.Topology("bad", adj)
+
+
+def test_spectral_gap_factor_in_unit_interval():
+    topo = T.ring(9)
+    eps = 0.9 / topo.max_degree
+    f = T.spectral_gap_factor(topo, eps, 2)
+    assert 0.0 < f < 1.0
