@@ -26,6 +26,19 @@ def emit(name: str, us_per_call: float, derived: str = "") -> None:
     sys.stdout.flush()
 
 
+def time_us(fn, *args, iters: int = 20) -> float:
+    """Microbench timer: one warm-up call (compile), then mean us over iters."""
+    import jax
+
+    out = fn(*args)
+    jax.block_until_ready(out)
+    t0 = time.perf_counter()
+    for _ in range(iters):
+        out = fn(*args)
+    jax.block_until_ready(out)
+    return (time.perf_counter() - t0) / iters * 1e6
+
+
 class Timer:
     def __enter__(self):
         self.t0 = time.perf_counter()

@@ -7,26 +7,19 @@ roofline discussion of the kernel layer.
 """
 from __future__ import annotations
 
-import time
-
 import jax
 import jax.numpy as jnp
 import numpy as np
 
 import repro.kernels.ops as ops
 import repro.kernels.ref as ref
-from benchmarks.common import emit, write_csv
+from benchmarks.common import emit, time_us, write_csv
 from repro.core import topology as T
 from repro.core.topology import mixing_matrix
 
 
-def _time(fn, *args, reps=3):
-    fn(*args)  # compile
-    t0 = time.perf_counter()
-    for _ in range(reps):
-        out = fn(*args)
-    jax.block_until_ready(out)
-    return (time.perf_counter() - t0) / reps * 1e6
+def _time(fn, *args):
+    return time_us(fn, *args, iters=3)
 
 
 def run(quick: bool = False) -> list[dict]:

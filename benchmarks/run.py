@@ -19,7 +19,7 @@ def main() -> None:
                     help="reduced configs (CI-speed)")
     ap.add_argument("--only", default=None,
                     help="run a single bench: table2|fig4|fig5|fig6|fig789|"
-                         "bounds|roofline|kernels")
+                         "bounds|roofline|kernels|dispatch")
     args = ap.parse_args()
 
     from benchmarks import (  # imported lazily so --only is cheap
@@ -30,12 +30,14 @@ def main() -> None:
         fig789_optimizers,
         kernel_bench,
         roofline_bench,
+        strategy_dispatch_bench,
         table2,
     )
 
     benches = {
         "bounds": bounds_bench.run,          # paper §V analysis
         "kernels": kernel_bench.run,         # kernel layer
+        "dispatch": strategy_dispatch_bench.run,  # jnp vs kernel strategy step
         "roofline": roofline_bench.run,      # §Roofline from dry-run artifacts
         "table2": table2.run,                # paper Table II
         "fig4": fig4_variation.run,          # paper Fig. 4

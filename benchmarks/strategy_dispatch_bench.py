@@ -1,0 +1,91 @@
+"""Strategy dispatch bench: pure-jnp vs kernel-backed federated step time.
+
+Times one fused ``flat_update`` (within-period transform + local SGD step) for
+the decay- and consensus-based strategies across agent counts m in {5, 20, 100}
+and flat parameter sizes n. Emits the run.py ``name,us_per_call,derived`` CSV
+lines and writes a JSON comparison to ``experiments/bench/strategy_dispatch.json``
+so the speedup lands in the bench trajectory.
+
+On a TPU host the kernel side is compiled Pallas (backend ``pallas``); on CPU
+it falls back to interpret mode, where the numbers track harness overhead and
+correctness rather than hardware speedup — the JSON records which mode ran.
+"""
+from __future__ import annotations
+
+import json
+import os
+
+import jax
+import jax.numpy as jnp
+
+from benchmarks.common import OUT_DIR, emit, time_us
+from repro.core import topology as T
+from repro.core.decay import exponential_decay
+from repro.core.strategies import ConsensusStrategy, DecayStrategy
+
+M_SWEEP = (5, 20, 100)
+N_FULL = (4096, 65536)
+N_QUICK = (1024,)
+
+
+def run(quick: bool = False) -> None:
+    ns = N_QUICK if quick else N_FULL
+    iters = 5 if quick else 20
+    kernel_backend = "pallas" if jax.default_backend() == "tpu" else "interpret"
+    tau = 4
+    rows = []
+    for m in M_SWEEP:
+        topo = T.ring(m)
+        strategies = {
+            "decay": lambda b, m=m: DecayStrategy(
+                tau=tau, m=m, decay=exponential_decay(0.9), backend=b
+            ),
+            "consensus": lambda b, topo=topo: ConsensusStrategy(
+                tau=tau, topo=topo, eps=0.3, rounds=2, backend=b
+            ),
+        }
+        for n in ns:
+            params = jax.random.normal(jax.random.key(0), (m, n))
+            grads = jax.random.normal(jax.random.key(1), (m, n))
+            offset = jnp.asarray(1)
+            for sname, make in strategies.items():
+                us = {}
+                for backend in ("jnp", kernel_backend):
+                    strat = make(backend)
+                    step = jax.jit(
+                        lambda p, g, off, s=strat: s.flat_update(p, g, off, 1e-2)
+                    )
+                    us[backend] = time_us(step, params, grads, offset, iters=iters)
+                row = {
+                    "strategy": sname,
+                    "m": m,
+                    "n": n,
+                    "kernel_backend": kernel_backend,
+                    "us_jnp": us["jnp"],
+                    "us_kernel": us[kernel_backend],
+                    # > 1 means the kernel path is faster than the jnp path
+                    "kernel_speedup_vs_jnp": us["jnp"] / us[kernel_backend],
+                }
+                rows.append(row)
+                emit(
+                    f"dispatch/{sname}/m{m}/n{n}",
+                    row["us_kernel"],
+                    f"jnp={row['us_jnp']:.1f}us x{row['kernel_speedup_vs_jnp']:.2f}",
+                )
+    os.makedirs(OUT_DIR, exist_ok=True)
+    path = os.path.join(OUT_DIR, "strategy_dispatch.json")
+    with open(path, "w") as f:
+        json.dump(
+            {
+                "device_backend": jax.default_backend(),
+                "kernel_backend": kernel_backend,
+                "rows": rows,
+            },
+            f,
+            indent=2,
+        )
+    print(f"# wrote {path}")
+
+
+if __name__ == "__main__":
+    run(quick=True)

@@ -79,10 +79,9 @@ def run_fmarl(
         grads_m, aux = jax.vmap(
             lambda p, k, i: local_grad_fn(p, k, i, step)
         )(params_m, keys, agent_ids)
-        grads_m = strat.transform(grads_m, offset)
-        params_m = jax.tree.map(
-            lambda p, g: p - cfg.eta * g, params_m, grads_m
-        )
+        # Transform + SGD; on kernel backends this runs the fused
+        # decay_accum_pallas / consensus_step_pallas flat path.
+        params_m = strat.local_update(params_m, grads_m, offset, cfg.eta)
         return (params_m, step + 1, key), aux
 
     def period(state: FmarlState, _):

@@ -7,6 +7,17 @@ step itself (eq. 11) is the same for every strategy: average the replica axis.
 
 All per-step data (masks, decay weights, fused mixing matrices) is precomputed
 into arrays so strategies are jit-stable and can be closed over by lax.scan.
+
+Execution backend: every strategy carries a ``backend`` field (see
+``repro.kernels.dispatch.BACKENDS``). ``jnp`` keeps the original pure-jnp
+tree-map path as the reference; ``pallas``/``interpret`` route the hot-path
+transforms through the fused Pallas kernels (``decay_accum_pallas``,
+``consensus_step_pallas``) on flat ``(m, n)`` buffers —
+``flat_transform`` applies the within-period transform, and ``flat_update``
+additionally fuses the SGD step (the decay/mask weight folds into the accum
+coefficient, so a masked-decay local update is ONE bandwidth pass over the
+parameters). ``auto`` (default) picks ``pallas`` on TPU and ``jnp`` elsewhere,
+so every pre-existing call site keeps its exact behaviour on CPU.
 """
 from __future__ import annotations
 
@@ -20,6 +31,7 @@ import numpy as np
 from repro.core.decay import DecayFn, no_decay
 from repro.core.topology import Topology, mixing_matrix
 from repro.core.variation import validate_a2
+from repro.kernels import dispatch
 
 
 @dataclasses.dataclass(frozen=True)
@@ -30,12 +42,21 @@ class AggregationStrategy:
       tau: local updates per period for the pacing agent (period length).
       taus: per-agent tau_i (A2); shape (m,).
       mask: (m, tau) float indicator I(tau_i > j) for period offset j.
+      backend: execution backend ('auto' | 'jnp' | 'pallas' | 'interpret').
     """
 
     name: str
     tau: int
     taus: np.ndarray
     mask: np.ndarray
+    backend: str = "auto"
+
+    def __post_init__(self):
+        if self.backend not in dispatch.BACKENDS:
+            raise ValueError(
+                f"unknown backend {self.backend!r}; expected one of "
+                f"{dispatch.BACKENDS}"
+            )
 
     # --- construction helpers -------------------------------------------------
     @staticmethod
@@ -47,19 +68,66 @@ class AggregationStrategy:
     def m(self) -> int:
         return len(self.taus)
 
+    def resolved_backend(self) -> str:
+        """Concrete backend for the current platform (resolves 'auto')."""
+        return dispatch.resolve_backend(self.backend)
+
     # --- hooks -----------------------------------------------------------------
     def weight(self, offset) -> jnp.ndarray:
         """Per-agent weight vector at period offset (mask only by default)."""
         return jnp.asarray(self.mask)[:, offset]
 
     def transform(self, grads_m, offset):
-        """Apply mask (+ subclass behaviour) to the stacked (m, ...) gradients."""
+        """Apply the within-period transform to the stacked (m, ...) pytree.
+
+        Dispatches on ``backend``: the jnp reference path stays in tree space;
+        the kernel path flattens once (cached ravel), runs the fused kernel,
+        and unflattens.
+        """
+        if self.resolved_backend() == "jnp":
+            return self._transform_tree(grads_m, offset)
+        flat, unravel = dispatch.stacked_ravel(grads_m)
+        return unravel(self.flat_transform(flat, offset))
+
+    def _transform_tree(self, grads_m, offset):
+        """Pure-jnp reference: mask (+ subclass behaviour) via tree.map."""
         w = self.weight(offset)
 
         def apply(leaf):
             return leaf * w.reshape((-1,) + (1,) * (leaf.ndim - 1))
 
         return jax.tree.map(apply, grads_m)
+
+    # --- flat (m, n) hot path --------------------------------------------------
+    def flat_transform(self, g, offset, *, backend: Optional[str] = None):
+        """Within-period transform on the flat (m, n) gradient matrix."""
+        b = backend if backend is not None else self.backend
+        return dispatch.scale_rows(g, self.weight(offset), backend=b)
+
+    def flat_update(self, params, g, offset, eta, *, backend: Optional[str] = None):
+        """Fused transform + local SGD step: params <- params - eta*T(g).
+
+        For mask/decay strategies the weight folds into the accumulation
+        coefficient, so the whole local update is a single decay_accum_pallas
+        pass per agent (no separately materialised scaled gradient).
+        """
+        b = backend if backend is not None else self.backend
+        return dispatch.decay_accum(params, g, -eta * self.weight(offset), backend=b)
+
+    def local_update(self, params_m, grads_m, offset, eta):
+        """One local step on the stacked replica pytrees: transform + SGD.
+
+        The single entry point the drivers call each iteration. The jnp
+        reference backend stays in tree space; the kernel backends ravel both
+        pytrees once (cached) and run the fused flat update through
+        decay_accum_pallas / consensus_step_pallas via the dispatch layer.
+        """
+        if self.resolved_backend() == "jnp":
+            g = self._transform_tree(grads_m, offset)
+            return jax.tree.map(lambda p, gg: p - eta * gg, params_m, g)
+        g_flat, _ = dispatch.stacked_ravel(grads_m)
+        p_flat, unravel = dispatch.stacked_ravel(params_m)
+        return unravel(self.flat_update(p_flat, g_flat, offset, eta))
 
     def server_average(self, params_m):
         """Eq. (11): periodic averaging = mean over the replica axis."""
@@ -80,17 +148,24 @@ class AggregationStrategy:
 class SyncStrategy(AggregationStrategy):
     """tau = 1: classic federated SGD (eq. 4) — the paper's communication-heavy baseline."""
 
-    def __init__(self, m: int):
+    def __init__(self, m: int, backend: str = "auto"):
         taus = np.ones(m, int)
         super().__init__(
-            name="sync", tau=1, taus=taus, mask=self._build_mask(taus, 1)
+            name="sync", tau=1, taus=taus, mask=self._build_mask(taus, 1),
+            backend=backend,
         )
 
 
 class PeriodicStrategy(AggregationStrategy):
     """Variation-aware periodic averaging (Alg. 1 / T2). tau_i = tau gives T1."""
 
-    def __init__(self, tau: int, taus: Optional[np.ndarray] = None, m: Optional[int] = None):
+    def __init__(
+        self,
+        tau: int,
+        taus: Optional[np.ndarray] = None,
+        m: Optional[int] = None,
+        backend: str = "auto",
+    ):
         if taus is None:
             if m is None:
                 raise ValueError("need taus or m")
@@ -102,6 +177,7 @@ class PeriodicStrategy(AggregationStrategy):
             tau=tau,
             taus=taus,
             mask=self._build_mask(taus, tau),
+            backend=backend,
         )
 
 
@@ -111,7 +187,8 @@ class DecayStrategy(AggregationStrategy):
 
     decay_weights: np.ndarray = dataclasses.field(default=None)  # (tau,)
 
-    def __init__(self, tau: int, taus=None, m=None, decay: DecayFn = None):
+    def __init__(self, tau: int, taus=None, m=None, decay: DecayFn = None,
+                 backend: str = "auto"):
         if taus is None:
             if m is None:
                 raise ValueError("need taus or m")
@@ -129,6 +206,7 @@ class DecayStrategy(AggregationStrategy):
             tau=tau,
             taus=taus,
             mask=self._build_mask(taus, tau),
+            backend=backend,
         )
 
     def weight(self, offset):
@@ -143,10 +221,16 @@ class ConsensusStrategy(AggregationStrategy):
     The gossip is fused into a single precomputed mixing matrix P^E (exactly
     equivalent; P is constant). ``fused=False`` keeps the paper's explicit
     E-round loop for fidelity checks.
+
+    For the kernel path the variation mask is folded into the mixing matrix:
+    P^E @ diag(mask[:, j]) is precomputed per period offset j (``p_e_masked``,
+    shape (tau, m, m)), so the masked gossip is ONE consensus_step_pallas call.
     """
 
     p_e: np.ndarray = dataclasses.field(default=None)   # (m, m) = P^E
     p: np.ndarray = dataclasses.field(default=None)     # (m, m) = P
+    p_e_masked: np.ndarray = dataclasses.field(default=None)  # (tau, m, m)
+    p_masked: np.ndarray = dataclasses.field(default=None)    # (tau, m, m)
     rounds: int = 1
     fused: bool = True
     topo: Topology = None
@@ -161,6 +245,7 @@ class ConsensusStrategy(AggregationStrategy):
         taus=None,
         m: Optional[int] = None,
         fused: bool = True,
+        backend: str = "auto",
     ):
         m = m if m is not None else topo.m
         if taus is None:
@@ -169,9 +254,14 @@ class ConsensusStrategy(AggregationStrategy):
         validate_a2(taus, tau)
         if topo.m != m:
             raise ValueError("topology size must match agent count")
-        p = mixing_matrix(topo, eps)
-        object.__setattr__(self, "p", p.astype(np.float32))
-        object.__setattr__(self, "p_e", np.linalg.matrix_power(p, rounds).astype(np.float32))
+        p = mixing_matrix(topo, eps).astype(np.float32)
+        p_e = np.linalg.matrix_power(p, rounds).astype(np.float32)
+        mask = self._build_mask(taus, tau)
+        # mask-folded mixing per offset: (P^E @ diag(w_j))[i, l] = P^E[i, l]*w_j[l]
+        object.__setattr__(self, "p", p)
+        object.__setattr__(self, "p_e", p_e)
+        object.__setattr__(self, "p_e_masked", p_e[None, :, :] * mask.T[:, None, :])
+        object.__setattr__(self, "p_masked", p[None, :, :] * mask.T[:, None, :])
         object.__setattr__(self, "rounds", rounds)
         object.__setattr__(self, "fused", fused)
         object.__setattr__(self, "topo", topo)
@@ -181,11 +271,12 @@ class ConsensusStrategy(AggregationStrategy):
             name=f"consensus(tau={tau},E={rounds},eps={eps:.3f})",
             tau=tau,
             taus=taus,
-            mask=self._build_mask(taus, tau),
+            mask=mask,
+            backend=backend,
         )
 
-    def transform(self, grads_m, offset):
-        masked = AggregationStrategy.transform(self, grads_m, offset)
+    def _transform_tree(self, grads_m, offset):
+        masked = AggregationStrategy._transform_tree(self, grads_m, offset)
         if self.fused:
             mix = jnp.asarray(self.p_e)
             return jax.tree.map(
@@ -199,6 +290,26 @@ class ConsensusStrategy(AggregationStrategy):
         out, _ = jax.lax.scan(one_round, masked, None, length=self.rounds)
         return out
 
+    def flat_transform(self, g, offset, *, backend: Optional[str] = None):
+        b = backend if backend is not None else self.backend
+        if self.fused:
+            mix = jnp.asarray(self.p_e_masked)[offset]
+            return dispatch.consensus_mix(g, mix, backend=b)
+        out = dispatch.consensus_mix(g, jnp.asarray(self.p_masked)[offset], backend=b)
+        if self.rounds > 1:
+            p = jnp.asarray(self.p)
+
+            def one_round(g_, _):
+                return dispatch.consensus_mix(g_, p, backend=b), None
+
+            out, _ = jax.lax.scan(one_round, out, None, length=self.rounds - 1)
+        return out
+
+    def flat_update(self, params, g, offset, eta, *, backend: Optional[str] = None):
+        b = backend if backend is not None else self.backend
+        mixed = self.flat_transform(g, offset, backend=b)
+        return dispatch.decay_accum(params, mixed, -eta, backend=b)
+
     def comm_events_per_period(self) -> dict:
         base = AggregationStrategy.comm_events_per_period(self)
         # Every local iteration (tau of them, all agents listen even when their
@@ -211,13 +322,17 @@ class ConsensusStrategy(AggregationStrategy):
 
 
 def make_strategy(kind: str, **kw) -> AggregationStrategy:
+    backend = kw.get("backend", "auto")
     if kind == "sync":
-        return SyncStrategy(m=kw["m"])
+        return SyncStrategy(m=kw["m"], backend=backend)
     if kind == "periodic":
-        return PeriodicStrategy(tau=kw["tau"], taus=kw.get("taus"), m=kw.get("m"))
+        return PeriodicStrategy(
+            tau=kw["tau"], taus=kw.get("taus"), m=kw.get("m"), backend=backend
+        )
     if kind == "decay":
         return DecayStrategy(
-            tau=kw["tau"], taus=kw.get("taus"), m=kw.get("m"), decay=kw.get("decay")
+            tau=kw["tau"], taus=kw.get("taus"), m=kw.get("m"),
+            decay=kw.get("decay"), backend=backend,
         )
     if kind == "consensus":
         return ConsensusStrategy(
@@ -228,5 +343,6 @@ def make_strategy(kind: str, **kw) -> AggregationStrategy:
             taus=kw.get("taus"),
             m=kw.get("m"),
             fused=kw.get("fused", True),
+            backend=backend,
         )
     raise ValueError(f"unknown strategy kind: {kind}")

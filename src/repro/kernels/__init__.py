@@ -1,3 +1,31 @@
-# OPTIONAL layer. Add <name>.py (or .cu) + ops.py + ref.py ONLY
-# for compute hot-spots the paper itself optimizes with a custom
-# kernel. Leave this package empty if the paper has none.
+"""Pallas kernel layer + backend dispatch.
+
+Per-kernel modules hold the Pallas bodies; ``ops`` exposes jit'd wrappers
+with CPU interpret-mode fallback; ``ref`` holds the pure-jnp oracles; and
+``dispatch`` is the backend switch (jnp | pallas | interpret) that the
+federated drivers route the hot-path transforms through.
+"""
+from repro.kernels import dispatch
+from repro.kernels.dispatch import (
+    BACKENDS,
+    consensus_mix,
+    is_kernel_backend,
+    resolve_backend,
+    scale_rows,
+    stacked_ravel,
+)
+
+# NOTE: dispatch.decay_accum is deliberately NOT re-exported here: the package
+# attribute `repro.kernels.decay_accum` is claimed by the kernel submodule of
+# the same name the moment it is imported, which would silently shadow the
+# function. Use `dispatch.decay_accum`.
+
+__all__ = [
+    "BACKENDS",
+    "consensus_mix",
+    "dispatch",
+    "is_kernel_backend",
+    "resolve_backend",
+    "scale_rows",
+    "stacked_ravel",
+]

@@ -26,7 +26,24 @@ def _consensus_kernel(p_ref, g_ref, o_ref):
 @functools.partial(jax.jit, static_argnames=("block_n", "interpret"))
 def consensus_step_pallas(g, mixing, *, block_n: int = 2048, interpret: bool = False):
     """g: (m, n) per-agent flattened grads; mixing: (m, m). Returns (m, n)."""
+    if g.ndim != 2:
+        raise ValueError(f"consensus_step_pallas: g must be (m, n), got {g.shape}")
     m, n = g.shape
+    # A larger-than-(m, m) mixing matrix would otherwise be silently cropped
+    # to its top-left block by the BlockSpec tiling below.
+    if mixing.shape != (m, m):
+        raise ValueError(
+            f"consensus_step_pallas: mixing must be ({m}, {m}) for g {g.shape}, "
+            f"got {mixing.shape}"
+        )
+    if not jnp.issubdtype(mixing.dtype, jnp.floating):
+        raise ValueError(
+            f"consensus_step_pallas: mixing must be floating, got {mixing.dtype}"
+        )
+    if block_n < 1:
+        raise ValueError(f"consensus_step_pallas: block_n must be >= 1, got {block_n}")
+    if n == 0:
+        return g
     block_n = min(block_n, n)
     pad = (-n) % block_n
     gp = jnp.pad(g, ((0, 0), (0, pad))) if pad else g

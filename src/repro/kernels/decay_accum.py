@@ -23,7 +23,23 @@ def _decay_accum_kernel(d_ref, acc_ref, g_ref, o_ref):
 @functools.partial(jax.jit, static_argnames=("block_n", "interpret"))
 def decay_accum_pallas(acc, g, d, *, block_n: int = 4096, interpret: bool = False):
     """acc, g: (n,) flat buffers; d: scalar decay weight. Returns acc + d*g."""
+    if acc.ndim != 1 or acc.shape != g.shape:
+        raise ValueError(
+            f"decay_accum_pallas: acc and g must be identical (n,) buffers, "
+            f"got acc {acc.shape} vs g {g.shape}"
+        )
+    if acc.dtype != g.dtype:
+        raise ValueError(
+            f"decay_accum_pallas: acc/g dtypes must match, got "
+            f"{acc.dtype} vs {g.dtype}"
+        )
+    if jnp.ndim(d) != 0:
+        raise ValueError(f"decay_accum_pallas: d must be a scalar, got shape {jnp.shape(d)}")
+    if block_n < 1:
+        raise ValueError(f"decay_accum_pallas: block_n must be >= 1, got {block_n}")
     n = acc.shape[0]
+    if n == 0:
+        return acc
     block_n = min(block_n, n)
     pad = (-n) % block_n
     if pad:

@@ -1,0 +1,167 @@
+"""Backend dispatch: route the federated hot-path transforms to the kernels.
+
+The within-period gradient transforms (variation mask / decay weighting /
+consensus gossip) and the local SGD update are the per-step work of
+Algorithms 1 & 2. This module is the single switch that decides how they
+execute:
+
+  * ``jnp``       — pure-jnp reference path (tree ops / matmul). Always
+                    available; the allclose target for everything else.
+  * ``pallas``    — compiled Pallas TPU kernels (``decay_accum_pallas``,
+                    ``consensus_step_pallas``): one fused bandwidth-bound
+                    pass over the flat parameter buffers.
+  * ``interpret`` — the same Pallas kernels in interpret mode. Runs the
+                    kernel bodies as traced jax on CPU; used for parity tests
+                    and CPU debugging of the kernel path.
+  * ``auto``      — ``pallas`` when the default backend is TPU, else ``jnp``.
+
+Strategies carry a ``backend=`` field (default ``auto``) so every existing
+call site keeps working; the drivers resolve it once at trace time.
+
+The kernel path works on flat ``(m, n)`` matrices — m agents by n parameters.
+``stacked_ravel`` flattens a replica pytree to that form (and back) with the
+unravel closure cached per (treedef, shapes, dtypes), so the per-step cost is
+one reshape+concatenate, not a re-derivation of the tree structure.
+"""
+from __future__ import annotations
+
+import jax
+import jax.flatten_util
+import jax.numpy as jnp
+
+# NOTE: the Pallas kernel modules are imported lazily inside the kernel
+# branches below — the jnp reference path (and hence repro.core) must stay
+# importable on JAX builds where jax.experimental.pallas fails to import.
+
+BACKENDS = ("auto", "jnp", "pallas", "interpret")
+
+
+def resolve_backend(backend: str = "auto") -> str:
+    """Collapse ``auto`` to a concrete backend for the current platform."""
+    if backend not in BACKENDS:
+        raise ValueError(f"unknown backend {backend!r}; expected one of {BACKENDS}")
+    if backend == "auto":
+        return "pallas" if jax.default_backend() == "tpu" else "jnp"
+    return backend
+
+
+def is_kernel_backend(backend: str) -> bool:
+    return resolve_backend(backend) in ("pallas", "interpret")
+
+
+# --- flat <-> pytree plumbing -------------------------------------------------
+
+_UNRAVEL_CACHE: dict = {}
+
+
+def stacked_ravel(tree_m):
+    """Flatten an (m, ...)-leaved replica pytree to an ``(m, n)`` matrix.
+
+    Returns ``(flat, unravel)`` where ``unravel`` maps an ``(m, n)`` matrix
+    back to the original tree structure. The unravel closure depends only on
+    (treedef, per-agent leaf shapes, dtypes) and is cached on that key.
+    """
+    leaves, treedef = jax.tree.flatten(tree_m)
+    if not leaves:
+        raise ValueError("stacked_ravel: empty pytree")
+    m = leaves[0].shape[0]
+    for l in leaves:
+        if l.ndim < 1 or l.shape[0] != m:
+            raise ValueError(
+                f"stacked_ravel: every leaf needs leading agent axis {m}, "
+                f"got shape {l.shape}"
+            )
+    key = (treedef, tuple((l.shape[1:], jnp.dtype(l.dtype).name) for l in leaves))
+    if key not in _UNRAVEL_CACHE:
+        template = jax.tree.unflatten(
+            treedef, [jnp.zeros(l.shape[1:], l.dtype) for l in leaves]
+        )
+        _, unravel_one = jax.flatten_util.ravel_pytree(template)
+        _UNRAVEL_CACHE[key] = jax.vmap(unravel_one)
+    flat = jax.vmap(lambda t: jax.flatten_util.ravel_pytree(t)[0])(tree_m)
+    return flat, _UNRAVEL_CACHE[key]
+
+
+# --- dispatched primitives ----------------------------------------------------
+
+def decay_accum(acc, g, d, *, backend: str = "auto", block_n: int = 4096):
+    """``acc + d * g`` — the fused FMA at the heart of the decay/SGD step.
+
+    ``acc``/``g``: ``(n,)`` or ``(m, n)``; ``d``: scalar, or ``(m,)`` per-agent
+    coefficients when the inputs are ``(m, n)`` (the kernel is vmapped over
+    the agent axis).
+    """
+    b = resolve_backend(backend)
+    if acc.ndim not in (1, 2) or acc.shape != g.shape:
+        raise ValueError(
+            f"decay_accum: acc/g must be matching (n,) or (m, n) buffers, "
+            f"got {acc.shape} vs {g.shape}"
+        )
+    if acc.dtype != g.dtype:
+        # Enforced on every backend so 'auto' behaves identically on CPU/TPU.
+        raise ValueError(
+            f"decay_accum: acc/g dtypes must match, got {acc.dtype} vs {g.dtype}"
+        )
+    d_arr = jnp.asarray(d, acc.dtype)
+    if d_arr.ndim not in (0, 1) or (d_arr.ndim == 1 and acc.ndim != 2):
+        raise ValueError(
+            f"decay_accum: d must be scalar or (m,) with (m, n) inputs, "
+            f"got d shape {d_arr.shape} for input shape {acc.shape}"
+        )
+    if b == "jnp":
+        d_b = d_arr[:, None] if d_arr.ndim == 1 else d_arr
+        return acc + d_b * g
+    from repro.kernels.decay_accum import decay_accum_pallas
+
+    interp = b == "interpret"
+    if acc.ndim == 2:
+        d_m = jnp.broadcast_to(d_arr, (acc.shape[0],))
+        return jax.vmap(
+            lambda a, gi, di: decay_accum_pallas(
+                a, gi, di, block_n=block_n, interpret=interp
+            )
+        )(acc, g, d_m)
+    return decay_accum_pallas(acc, g, d_arr, block_n=block_n, interpret=interp)
+
+
+def scale_rows(g, w, *, backend: str = "auto", block_n: int = 4096):
+    """Row-scale ``(m, n)`` grads by per-agent weights ``w``: out[i] = w[i]*g[i].
+
+    On the kernel path this is ``decay_accum(g, g, w - 1)`` = g + (w-1)*g —
+    both operands alias the same buffer, so no zeros accumulator is ever
+    materialised. The drivers avoid even this pass by fusing the weight into
+    the SGD coefficient (see ``AggregationStrategy.flat_update``); this
+    standalone form backs ``transform`` when called outside the fused update.
+    """
+    b = resolve_backend(backend)
+    if g.ndim != 2:
+        raise ValueError(f"scale_rows: g must be (m, n), got {g.shape}")
+    w_arr = jnp.asarray(w, g.dtype)
+    if w_arr.shape != (g.shape[0],):
+        raise ValueError(
+            f"scale_rows: w must be ({g.shape[0]},) for g {g.shape}, "
+            f"got {w_arr.shape}"
+        )
+    if b == "jnp":
+        return g * w_arr[:, None]
+    return decay_accum(g, g, w_arr - 1.0, backend=b, block_n=block_n)
+
+
+def consensus_mix(g, mixing, *, backend: str = "auto", block_n: int = 2048):
+    """One (possibly fused-E, possibly mask-folded) gossip mix: ``mixing @ g``."""
+    b = resolve_backend(backend)
+    if g.ndim != 2:
+        raise ValueError(f"consensus_mix: g must be (m, n), got {g.shape}")
+    m = g.shape[0]
+    if mixing.shape != (m, m):
+        raise ValueError(
+            f"consensus_mix: mixing must be ({m}, {m}) for g {g.shape}, "
+            f"got {mixing.shape}"
+        )
+    if b == "jnp":
+        return (mixing.astype(jnp.float32) @ g.astype(jnp.float32)).astype(g.dtype)
+    from repro.kernels.consensus_step import consensus_step_pallas
+
+    return consensus_step_pallas(
+        g, mixing, block_n=block_n, interpret=(b == "interpret")
+    )

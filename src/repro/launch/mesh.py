@@ -6,21 +6,19 @@ importing jax (see dryrun.py lines 1-2).
 """
 from __future__ import annotations
 
-import jax
-from jax.sharding import AxisType
-
 from repro.sharding.rules import DEFAULT_RULES, MeshRules
+from repro.utils.compat import default_axis_types, make_mesh
 
 
 def make_production_mesh(*, multi_pod: bool = False):
     shape = (2, 16, 16) if multi_pod else (16, 16)
     axes = ("pod", "data", "model") if multi_pod else ("data", "model")
-    return jax.make_mesh(shape, axes, axis_types=(AxisType.Auto,) * len(axes))
+    return make_mesh(shape, axes, axis_types=default_axis_types(len(axes)))
 
 
 def make_test_mesh(shape=(2, 2), axes=("data", "model")):
     """Small mesh for CPU tests (requires >= prod(shape) local devices)."""
-    return jax.make_mesh(shape, axes, axis_types=(AxisType.Auto,) * len(axes))
+    return make_mesh(shape, axes, axis_types=default_axis_types(len(axes)))
 
 
 def make_rules(mesh, overrides: dict | None = None) -> MeshRules:

@@ -123,8 +123,9 @@ def run_fedrl(cfg: FedRLConfig, key) -> tuple[Any, dict, CostLedger]:
         env_state, traj = _rollout(cfg, params_m, env_state, rk, cfg.minibatch)
         grads, losses = _agent_grads(cfg, params_m, traj, env_state)
         offset = jnp.mod(k, tau)
-        grads = strat.transform(grads, offset)
-        params_m = jax.tree.map(lambda p, g: p - cfg.eta * g, params_m, grads)
+        # Transform + SGD; on kernel backends this is the fused flat path
+        # through decay_accum_pallas / consensus_step_pallas (dispatch layer).
+        params_m = strat.local_update(params_m, grads, offset, cfg.eta)
         k = k + 1
 
         def do_sync(p):

@@ -1,3 +1,4 @@
+from repro.utils import compat
 from repro.utils.pytree import (
     tree_add,
     tree_axpy,
@@ -9,6 +10,7 @@ from repro.utils.pytree import (
 )
 
 __all__ = [
+    "compat",
     "tree_add",
     "tree_axpy",
     "tree_dot",

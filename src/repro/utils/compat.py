@@ -1,0 +1,69 @@
+"""JAX version-compatibility shims.
+
+Supported range: JAX 0.4.3x (this container ships 0.4.37) through the
+0.5/0.6/0.7 line. Everything here is feature-detected at import from the
+module surface only — no jax device state is touched at import time, so the
+launch modules (which must set XLA_FLAGS before first device init) can import
+this safely.
+
+The two API cliffs we paper over:
+  * ``jax.sharding.AxisType`` (and ``jax.make_mesh(..., axis_types=...)``)
+    only exist on newer JAX; 0.4.x meshes are implicitly "auto" on every axis.
+  * ``jax.make_mesh`` itself predates 0.4.35; older still means building a
+    ``Mesh`` from ``mesh_utils.create_device_mesh`` by hand.
+"""
+from __future__ import annotations
+
+from typing import Optional, Sequence
+
+import jax
+
+try:  # JAX >= 0.5.x explicit-sharding API
+    from jax.sharding import AxisType  # noqa: F401
+    HAS_AXIS_TYPE = True
+except ImportError:  # JAX 0.4.x: every mesh axis behaves as "auto"
+    AxisType = None
+    HAS_AXIS_TYPE = False
+
+HAS_MAKE_MESH = hasattr(jax, "make_mesh")
+
+
+def default_axis_types(n_axes: int):
+    """(AxisType.Auto,) * n_axes on new JAX; None where the concept is absent."""
+    if HAS_AXIS_TYPE:
+        return (AxisType.Auto,) * n_axes
+    return None
+
+
+def make_mesh(
+    axis_shapes: Sequence[int],
+    axis_names: Sequence[str],
+    *,
+    axis_types: Optional[tuple] = None,
+    devices=None,
+):
+    """``jax.make_mesh`` across JAX versions.
+
+    ``axis_types`` is forwarded only when the installed JAX understands it
+    (0.4.x meshes are implicitly auto-sharded on every axis, which is exactly
+    what ``AxisType.Auto`` requests on newer JAX, so dropping it is lossless).
+    """
+    axis_shapes = tuple(axis_shapes)
+    axis_names = tuple(axis_names)
+    if HAS_MAKE_MESH:
+        kwargs = {}
+        if devices is not None:
+            kwargs["devices"] = devices
+        if HAS_AXIS_TYPE and axis_types is not None:
+            kwargs["axis_types"] = axis_types
+        try:
+            return jax.make_mesh(axis_shapes, axis_names, **kwargs)
+        except TypeError:
+            # e.g. a 0.4.x make_mesh that rejects an axis_types kwarg
+            kwargs.pop("axis_types", None)
+            return jax.make_mesh(axis_shapes, axis_names, **kwargs)
+    from jax.experimental import mesh_utils
+    from jax.sharding import Mesh
+
+    devs = mesh_utils.create_device_mesh(axis_shapes, devices=devices)
+    return Mesh(devs, axis_names)

@@ -1,0 +1,255 @@
+"""Backend-dispatch layer: kernel (interpret) vs pure-jnp parity + validation.
+
+The kernel path on CPU runs the Pallas bodies in interpret mode, so these
+tests prove the exact code the TPU compiles agrees with the jnp reference.
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import topology as T
+from repro.core.strategies import (
+    ConsensusStrategy,
+    DecayStrategy,
+    PeriodicStrategy,
+    make_strategy,
+)
+from repro.core.decay import exponential_decay
+from repro.kernels import dispatch
+from repro.kernels.consensus_step import consensus_step_pallas
+from repro.kernels.decay_accum import decay_accum_pallas
+
+TAUS = np.array([4, 2, 1])  # heterogeneous -> variation masks are non-trivial
+
+
+def _grads(m=3, seed=0):
+    k1, k2 = jax.random.split(jax.random.key(seed))
+    # leaf sizes chosen so n = 5*7 + 11 = 46: not a multiple of any block_n
+    return {
+        "w": jax.random.normal(k1, (m, 5, 7)),
+        "b": jax.random.normal(k2, (m, 11)),
+    }
+
+
+# --- backend resolution -------------------------------------------------------
+
+def test_resolve_backend():
+    assert dispatch.resolve_backend("jnp") == "jnp"
+    assert dispatch.resolve_backend("interpret") == "interpret"
+    expected = "pallas" if jax.default_backend() == "tpu" else "jnp"
+    assert dispatch.resolve_backend("auto") == expected
+    with pytest.raises(ValueError):
+        dispatch.resolve_backend("cuda")
+
+
+def test_strategy_rejects_unknown_backend():
+    with pytest.raises(ValueError):
+        PeriodicStrategy(tau=2, m=3, backend="nope")
+
+
+def test_make_strategy_passes_backend_through():
+    s = make_strategy("periodic", tau=4, m=3, backend="interpret")
+    assert s.backend == "interpret"
+    s = make_strategy("decay", tau=4, m=3, backend="jnp")
+    assert s.backend == "jnp"
+
+
+# --- flat <-> tree plumbing ---------------------------------------------------
+
+def test_stacked_ravel_roundtrip():
+    g = _grads()
+    flat, unravel = dispatch.stacked_ravel(g)
+    assert flat.shape == (3, 5 * 7 + 11)
+    back = unravel(flat)
+    np.testing.assert_array_equal(back["w"], g["w"])
+    np.testing.assert_array_equal(back["b"], g["b"])
+
+
+def test_stacked_ravel_rejects_mismatched_leading_axis():
+    bad = {"w": jnp.ones((3, 2)), "b": jnp.ones((4, 2))}
+    with pytest.raises(ValueError):
+        dispatch.stacked_ravel(bad)
+
+
+# --- dispatched primitive parity ---------------------------------------------
+
+@pytest.mark.parametrize("n", [100, 46, 4096])  # includes non-multiple-of-block
+def test_decay_accum_interpret_matches_jnp_1d(n):
+    ks = jax.random.split(jax.random.key(n), 2)
+    acc = jax.random.normal(ks[0], (n,))
+    g = jax.random.normal(ks[1], (n,))
+    a = dispatch.decay_accum(acc, g, 0.7, backend="jnp")
+    b = dispatch.decay_accum(acc, g, 0.7, backend="interpret", block_n=64)
+    np.testing.assert_allclose(a, b, atol=1e-6)
+
+
+def test_decay_accum_per_agent_coefficients():
+    m, n = 5, 37  # n deliberately not a multiple of block_n
+    ks = jax.random.split(jax.random.key(0), 3)
+    acc = jax.random.normal(ks[0], (m, n))
+    g = jax.random.normal(ks[1], (m, n))
+    d = jax.random.uniform(ks[2], (m,))
+    a = dispatch.decay_accum(acc, g, d, backend="jnp")
+    b = dispatch.decay_accum(acc, g, d, backend="interpret", block_n=16)
+    np.testing.assert_allclose(a, b, atol=1e-6)
+
+
+def test_scale_rows_parity():
+    g = jax.random.normal(jax.random.key(1), (4, 53))
+    w = jnp.asarray([1.0, 0.5, 0.0, 2.0])
+    a = dispatch.scale_rows(g, w, backend="jnp")
+    b = dispatch.scale_rows(g, w, backend="interpret", block_n=32)
+    np.testing.assert_allclose(a, b, atol=1e-6)
+
+
+def test_scale_rows_rejects_bad_shapes():
+    with pytest.raises(ValueError):
+        dispatch.scale_rows(jnp.zeros(6), jnp.ones(3), backend="jnp")  # 1-D g
+    with pytest.raises(ValueError):
+        dispatch.scale_rows(jnp.zeros((3, 6)), jnp.ones(4), backend="jnp")
+
+
+def test_consensus_mix_parity():
+    m, n = 6, 101  # non-multiple of block_n
+    topo = T.ring(m)
+    p = jnp.asarray(T.mixing_matrix(topo, 0.25), jnp.float32)
+    g = jax.random.normal(jax.random.key(2), (m, n))
+    a = dispatch.consensus_mix(g, p, backend="jnp")
+    b = dispatch.consensus_mix(g, p, backend="interpret", block_n=32)
+    np.testing.assert_allclose(a, b, atol=1e-5)
+
+
+# --- strategy-level parity (the load-bearing contract) ------------------------
+
+def _strategy_pairs():
+    topo = T.ring(3)
+    builders = {
+        "masked": lambda b: PeriodicStrategy(tau=4, taus=TAUS, backend=b),
+        "decay": lambda b: DecayStrategy(
+            tau=4, taus=TAUS, decay=exponential_decay(0.9), backend=b
+        ),
+        "consensus": lambda b: ConsensusStrategy(
+            tau=4, topo=topo, eps=0.3, rounds=2, taus=TAUS, backend=b
+        ),
+        "consensus-unfused": lambda b: ConsensusStrategy(
+            tau=4, topo=topo, eps=0.3, rounds=2, taus=TAUS, fused=False, backend=b
+        ),
+    }
+    return [(k, mk("jnp"), mk("interpret")) for k, mk in builders.items()]
+
+
+@pytest.mark.parametrize("name,s_jnp,s_kern", _strategy_pairs(),
+                         ids=lambda v: v if isinstance(v, str) else "")
+def test_transform_kernel_matches_jnp(name, s_jnp, s_kern):
+    g = _grads()
+    for offset in range(4):
+        a = s_jnp.transform(g, offset)
+        b = s_kern.transform(g, offset)
+        np.testing.assert_allclose(a["w"], b["w"], atol=1e-5, err_msg=f"{name}@{offset}")
+        np.testing.assert_allclose(a["b"], b["b"], atol=1e-5, err_msg=f"{name}@{offset}")
+
+
+@pytest.mark.parametrize("name,s_jnp,s_kern", _strategy_pairs(),
+                         ids=lambda v: v if isinstance(v, str) else "")
+def test_flat_update_kernel_matches_jnp(name, s_jnp, s_kern):
+    g = _grads(seed=3)
+    g_flat, _ = dispatch.stacked_ravel(g)
+    params = jax.random.normal(jax.random.key(4), g_flat.shape)
+    for offset in range(4):
+        a = s_jnp.flat_update(params, g_flat, offset, 0.05)
+        b = s_kern.flat_update(params, g_flat, offset, 0.05)
+        np.testing.assert_allclose(a, b, atol=1e-5, err_msg=f"{name}@{offset}")
+
+
+def test_flat_update_matches_tree_reference():
+    """Fused flat path == transform-then-SGD in tree space (same semantics)."""
+    s = DecayStrategy(tau=4, taus=TAUS, decay=exponential_decay(0.8), backend="jnp")
+    g = _grads(seed=5)
+    params = _grads(seed=6)
+    eta = 0.1
+    p_flat, unravel = dispatch.stacked_ravel(params)
+    g_flat, _ = dispatch.stacked_ravel(g)
+    for offset in range(4):
+        tg = s.transform(g, offset)
+        ref = jax.tree.map(lambda p, gg: p - eta * gg, params, tg)
+        out = unravel(s.flat_update(p_flat, g_flat, offset, eta, backend="interpret"))
+        np.testing.assert_allclose(ref["w"], out["w"], atol=1e-5)
+        np.testing.assert_allclose(ref["b"], out["b"], atol=1e-5)
+
+
+@pytest.mark.parametrize("name,s_jnp,s_kern", _strategy_pairs(),
+                         ids=lambda v: v if isinstance(v, str) else "")
+def test_local_update_kernel_matches_jnp(name, s_jnp, s_kern):
+    """The driver entry point: tree-space local step, both backends agree."""
+    g = _grads(seed=8)
+    params = _grads(seed=9)
+    for offset in range(4):
+        a = s_jnp.local_update(params, g, offset, 0.05)
+        b = s_kern.local_update(params, g, offset, 0.05)
+        np.testing.assert_allclose(a["w"], b["w"], atol=1e-5, err_msg=f"{name}@{offset}")
+        np.testing.assert_allclose(a["b"], b["b"], atol=1e-5, err_msg=f"{name}@{offset}")
+
+
+def test_transform_inside_scan_traced_offset():
+    """Kernel path must trace under lax.scan with a traced period offset."""
+    s = DecayStrategy(tau=4, taus=TAUS, decay=exponential_decay(0.9),
+                      backend="interpret")
+    s_ref = DecayStrategy(tau=4, taus=TAUS, decay=exponential_decay(0.9),
+                          backend="jnp")
+    g = _grads(seed=7)
+    g_flat, _ = dispatch.stacked_ravel(g)
+
+    def run(strat):
+        def body(carry, offset):
+            return strat.flat_update(carry, g_flat, offset, 0.1), None
+        out, _ = jax.lax.scan(body, jnp.zeros_like(g_flat), jnp.arange(4))
+        return out
+
+    np.testing.assert_allclose(run(s_ref), run(s), atol=1e-5)
+
+
+# --- kernel shape/dtype validation (no silent mis-tiling) ---------------------
+
+def test_decay_accum_rejects_shape_mismatch():
+    with pytest.raises(ValueError):
+        decay_accum_pallas(jnp.zeros(8), jnp.zeros(9), 1.0, interpret=True)
+    with pytest.raises(ValueError):
+        decay_accum_pallas(jnp.zeros((2, 4)), jnp.zeros((2, 4)), 1.0, interpret=True)
+
+
+def test_decay_accum_rejects_dtype_mismatch():
+    with pytest.raises(ValueError):
+        decay_accum_pallas(jnp.zeros(8, jnp.float32), jnp.zeros(8, jnp.bfloat16),
+                           1.0, interpret=True)
+
+
+def test_decay_accum_rejects_nonscalar_d():
+    with pytest.raises(ValueError):
+        decay_accum_pallas(jnp.zeros(8), jnp.zeros(8), jnp.ones(2), interpret=True)
+
+
+def test_consensus_rejects_bad_mixing_shape():
+    g = jnp.zeros((4, 16))
+    with pytest.raises(ValueError):
+        consensus_step_pallas(g, jnp.eye(5), interpret=True)  # would mis-tile
+    with pytest.raises(ValueError):
+        consensus_step_pallas(g, jnp.eye(3), interpret=True)
+    with pytest.raises(ValueError):
+        consensus_step_pallas(jnp.zeros(16), jnp.eye(4), interpret=True)
+
+
+def test_consensus_rejects_integer_mixing():
+    with pytest.raises(ValueError):
+        consensus_step_pallas(jnp.zeros((4, 16)), jnp.eye(4, dtype=jnp.int32),
+                              interpret=True)
+
+
+def test_dispatch_decay_accum_rejects_bad_d_rank():
+    with pytest.raises(ValueError):
+        dispatch.decay_accum(jnp.zeros(8), jnp.zeros(8), jnp.ones(3), backend="jnp")
+
+
+def test_dispatch_consensus_mix_rejects_bad_shapes():
+    with pytest.raises(ValueError):
+        dispatch.consensus_mix(jnp.zeros((4, 8)), jnp.eye(6), backend="jnp")

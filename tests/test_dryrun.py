@@ -10,6 +10,8 @@ import sys
 
 import pytest
 
+pytestmark = pytest.mark.slow  # subprocess lower+compile; minutes, not ms
+
 ROOT = os.path.join(os.path.dirname(__file__), "..")
 
 SCRIPT = r"""
@@ -18,7 +20,7 @@ os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
 os.environ.pop("JAX_PLATFORMS", None)
 import dataclasses, json, sys
 import jax
-from jax.sharding import AxisType
+from repro.utils.compat import default_axis_types, make_mesh
 from repro.configs import get_arch, SHAPE_REGISTRY, InputShape
 from repro.launch.mesh import make_rules
 from repro.launch.fedtrain import (FedTrainConfig, init_train_state,
@@ -32,8 +34,8 @@ from repro.analysis.hlo_stats import collective_stats
 
 arch, kind = sys.argv[1], sys.argv[2]
 cfg = get_arch(arch).reduced()
-mesh = jax.make_mesh((2, 2, 2), ("pod", "data", "model"),
-                     axis_types=(AxisType.Auto,) * 3)
+mesh = make_mesh((2, 2, 2), ("pod", "data", "model"),
+                 axis_types=default_axis_types(3))
 rules = make_rules(mesh, {"seq": ("model",)})
 shape = InputShape("t", 32, 8, kind)
 fed = FedTrainConfig(strategy="consensus", tau=4)
@@ -67,7 +69,7 @@ def _run(arch, kind):
     env = dict(os.environ, PYTHONPATH=os.path.join(ROOT, "src"))
     env.pop("JAX_PLATFORMS", None)
     r = subprocess.run([sys.executable, "-c", SCRIPT, arch, kind],
-                       capture_output=True, text=True, env=env, timeout=420)
+                       capture_output=True, text=True, env=env, timeout=1800)
     assert r.returncode == 0, r.stderr[-3000:]
     return json.loads(r.stdout.strip().splitlines()[-1])
 

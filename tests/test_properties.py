@@ -1,4 +1,8 @@
 """Property-based tests (hypothesis) on system invariants."""
+import pytest
+
+pytest.importorskip("hypothesis", reason="hypothesis not installed")
+
 import jax
 import jax.numpy as jnp
 import numpy as np
