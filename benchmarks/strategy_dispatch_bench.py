@@ -6,6 +6,13 @@ and flat parameter sizes n. Emits the run.py ``name,us_per_call,derived`` CSV
 lines and writes a JSON comparison to ``experiments/bench/strategy_dispatch.json``
 so the speedup lands in the bench trajectory.
 
+The ``flat_carry`` section times the PR-2 driver architecture directly: a
+tau-step inner scan + server average where the carry is the flat (m, n)
+matrix (ravel once, per-agent tree views only inside the grad closure)
+against the PR-1 ravel-per-step form (tree carry, ``local_update`` re-ravels
+params+grads every step). Both run the same dispatch backend, so the delta
+isolates the carry layout.
+
 On a TPU host the kernel side is compiled Pallas (backend ``pallas``); on CPU
 it falls back to interpret mode, where the numbers track harness overhead and
 correctness rather than hardware speedup — the JSON records which mode ran.
@@ -22,10 +29,78 @@ from benchmarks.common import OUT_DIR, emit, time_us
 from repro.core import topology as T
 from repro.core.decay import exponential_decay
 from repro.core.strategies import ConsensusStrategy, DecayStrategy
+from repro.kernels import dispatch
 
 M_SWEEP = (5, 20, 100)
 N_FULL = (4096, 65536)
 N_QUICK = (1024,)
+
+
+def _bench_flat_carry(ns, iters, kernel_backend, tau):
+    """Flat-carry scan vs PR-1 ravel-per-step scan, same kernel backend."""
+    eta = 1e-2
+    rows = []
+
+    def grad_fn(p):
+        # cheap stand-in for the user grad closure: forces the per-agent
+        # tree view to actually materialise
+        return jax.tree.map(lambda x: 0.1 * x + 1.0, p)
+
+    for m in M_SWEEP:
+        strat = DecayStrategy(
+            tau=tau, m=m, decay=exponential_decay(0.9), backend=kernel_backend
+        )
+        for n in ns:
+            half = n // 2
+            tree = {
+                "w": jax.random.normal(jax.random.key(0), (m, half)),
+                "b": jax.random.normal(jax.random.key(1), (m, n - half)),
+            }
+            flat, spec = dispatch.stacked_ravel_spec(tree)
+
+            @jax.jit
+            def flat_carry(f, s=strat):
+                def body(f, off):
+                    g = jax.vmap(
+                        lambda row: spec.ravel_one(grad_fn(spec.unravel_one(row)))
+                    )(f)
+                    return s.flat_update(f, g, off, eta), None
+
+                out, _ = jax.lax.scan(body, f, jnp.arange(tau))
+                row = s.flat_server_average(out)
+                return jnp.broadcast_to(row[None, :], out.shape)
+
+            @jax.jit
+            def ravel_per_step(t, s=strat):
+                def body(t, off):
+                    g = jax.vmap(grad_fn)(t)
+                    return s.local_update(t, g, off, eta), None
+
+                out, _ = jax.lax.scan(body, t, jnp.arange(tau))
+                avg = s.server_average(out)
+                return jax.tree.map(
+                    lambda l: jnp.broadcast_to(l, (m,) + l.shape), avg
+                )
+
+            us_flat = time_us(flat_carry, flat, iters=iters)
+            us_ravel = time_us(ravel_per_step, tree, iters=iters)
+            row = {
+                "m": m,
+                "n": n,
+                "tau": tau,
+                "kernel_backend": kernel_backend,
+                "us_flat_carry": us_flat,
+                "us_ravel_per_step": us_ravel,
+                # > 1 means the flat carry beats the PR-1 ravel-per-step form
+                "flat_carry_speedup": us_ravel / us_flat,
+            }
+            rows.append(row)
+            emit(
+                f"dispatch/flat_carry/m{m}/n{n}",
+                us_flat,
+                f"ravel={us_ravel:.1f}us x{row['flat_carry_speedup']:.2f}",
+            )
+    return rows
 
 
 def run(quick: bool = False) -> None:
@@ -72,6 +147,7 @@ def run(quick: bool = False) -> None:
                     row["us_kernel"],
                     f"jnp={row['us_jnp']:.1f}us x{row['kernel_speedup_vs_jnp']:.2f}",
                 )
+    flat_rows = _bench_flat_carry(ns, iters, kernel_backend, tau)
     os.makedirs(OUT_DIR, exist_ok=True)
     path = os.path.join(OUT_DIR, "strategy_dispatch.json")
     with open(path, "w") as f:
@@ -80,6 +156,7 @@ def run(quick: bool = False) -> None:
                 "device_backend": jax.default_backend(),
                 "kernel_backend": kernel_backend,
                 "rows": rows,
+                "flat_carry": flat_rows,
             },
             f,
             indent=2,

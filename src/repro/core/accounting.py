@@ -26,6 +26,21 @@ class CostLedger:
         self.w1_events += per["w1"] * n_periods
         self.w2_events += per["w2"] * n_periods
 
+    def add_partial_period(self, strategy, n_offsets: int) -> None:
+        """Bill a trailing partial period of ``n_offsets`` local steps.
+
+        Runs whose total update count is not a multiple of tau still pay for
+        the local updates (and gossip) of the unfinished period plus the
+        final aggregation read; a no-op when ``n_offsets`` is 0.
+        """
+        if n_offsets == 0:
+            return
+        per = strategy.comm_events_partial_period(n_offsets)
+        self.c1_events += per["c1"]
+        self.c2_events += per["c2"]
+        self.w1_events += per["w1"]
+        self.w2_events += per["w2"]
+
     def psi0(self, c1: float, c2: float, w1: float = 0.0, w2: float = 0.0) -> float:
         """Total resource cost; equals eq. (7) (or (27) with gossip events)."""
         return (

@@ -12,6 +12,19 @@ loss into this signature; supervised tasks wrap a mini-batch loss.
 The full run is a single jitted lax.scan over periods (inner scan over the
 tau offsets), so even the paper-scale experiment (U=500 epochs) runs in
 seconds on CPU for MLP policies.
+
+Two carry layouts:
+
+  * jnp backend, plain SGD — the original tree-space reference path,
+    bit-for-bit unchanged.
+  * kernel backends (pallas/interpret), or any run with ``cfg.optimizer``
+    set — the **flat carry**: params are raveled to one ``(m, n)`` matrix at
+    run start and stay flat across both scans. Each local step unravels a
+    cached per-agent *view* for the user's grad closure and ravels only the
+    returned grads; the transform + optimizer update and the server
+    averaging (``row_mean``) all run on the flat buffers through the
+    dispatch layer. No per-step params ravel/unravel round-trip survives in
+    the scan body — the win PR 1 left on the table.
 """
 from __future__ import annotations
 
@@ -24,6 +37,8 @@ import numpy as np
 
 from repro.core.accounting import CostLedger
 from repro.core.strategies import AggregationStrategy
+from repro.kernels import dispatch
+from repro.optim.flat import FlatOptimizer, server_average_state
 from repro.utils.pytree import tree_l2_norm
 
 
@@ -40,11 +55,22 @@ class FmarlConfig:
     eta: float
     n_periods: int
     eval_every: int = 1          # evaluate server grad-norm every this many periods
+    optimizer: Optional[FlatOptimizer] = None  # None = plain SGD (reference)
 
 
 def _broadcast(server_params, m: int):
     return jax.tree.map(
         lambda leaf: jnp.broadcast_to(leaf, (m,) + leaf.shape), server_params
+    )
+
+
+def _use_flat_carry(cfg) -> bool:
+    """Flat (m, n) carry on kernel backends and whenever an optimizer is set
+    (the fused optimizer updates only exist on flat buffers — the jnp backend
+    then runs the fp32 flat reference ops)."""
+    return (
+        dispatch.is_kernel_backend(cfg.strategy.backend)
+        or cfg.optimizer is not None
     )
 
 
@@ -60,6 +86,13 @@ def run_fmarl(
     Returns (final FmarlState, metrics dict of stacked per-period arrays,
     CostLedger).
     """
+    if _use_flat_carry(cfg):
+        return _run_fmarl_flat(cfg, init_params, local_grad_fn, key, eval_grad_fn)
+    return _run_fmarl_tree(cfg, init_params, local_grad_fn, key, eval_grad_fn)
+
+
+def _run_fmarl_tree(cfg, init_params, local_grad_fn, key, eval_grad_fn):
+    """Pure-jnp tree-space reference path (bit-identical to the original)."""
     strat = cfg.strategy
     m, tau = strat.m, strat.tau
     params_m = _broadcast(init_params, m)
@@ -79,8 +112,6 @@ def run_fmarl(
         grads_m, aux = jax.vmap(
             lambda p, k, i: local_grad_fn(p, k, i, step)
         )(params_m, keys, agent_ids)
-        # Transform + SGD; on kernel backends this runs the fused
-        # decay_accum_pallas / consensus_step_pallas flat path.
         params_m = strat.local_update(params_m, grads_m, offset, cfg.eta)
         return (params_m, step + 1, key), aux
 
@@ -103,6 +134,67 @@ def run_fmarl(
 
     final_state, metrics = jax.lax.scan(period, state, None, length=cfg.n_periods)
 
+    ledger = CostLedger()
+    ledger.add_periods(strat, cfg.n_periods)
+    return final_state, metrics, ledger
+
+
+def _run_fmarl_flat(cfg, init_params, local_grad_fn, key, eval_grad_fn):
+    """Flat-carry path: the scan state is one (m, n) matrix (+ fp32 opt
+    accumulators); trees only materialise as the per-agent closure view and
+    at period-boundary evals."""
+    strat = cfg.strategy
+    m, tau = strat.m, strat.tau
+    opt = cfg.optimizer
+    flat, spec = dispatch.stacked_ravel_spec(_broadcast(init_params, m))
+    opt_state = opt.init(flat) if opt is not None else {}
+    agent_ids = jnp.arange(m)
+
+    def local_step(carry, offset):
+        flat, opt_state, step, key = carry
+        key, sub = jax.random.split(key)
+        keys = jax.random.split(sub, m)
+
+        def one(row, k, i):
+            g_tree, aux = local_grad_fn(spec.unravel_one(row), k, i, step)
+            return spec.ravel_one(g_tree), aux
+
+        g_flat, aux = jax.vmap(one)(flat, keys, agent_ids)
+        if opt is None:
+            flat = strat.flat_update(flat, g_flat, offset, cfg.eta)
+        else:
+            flat, opt_state = strat.flat_opt_step(
+                flat, g_flat, offset, cfg.eta, opt, opt_state
+            )
+        return (flat, opt_state, step + 1, key), aux
+
+    def period(carry, _):
+        (flat, opt_state, step, key), aux = jax.lax.scan(
+            local_step, carry, jnp.arange(tau)
+        )
+        row = strat.flat_server_average(flat)
+        flat = jnp.broadcast_to(row[None, :], flat.shape)
+        if opt is not None:
+            opt_state = server_average_state(strat, opt_state)
+
+        metrics = {"mean_aux": jax.tree.map(jnp.mean, aux)}
+        if eval_grad_fn is not None:
+            key, sub = jax.random.split(key)
+            g = eval_grad_fn(spec.unravel_one(row), sub)
+            metrics["server_grad_sq_norm"] = tree_l2_norm(g) ** 2
+        return (flat, opt_state, step, key), metrics
+
+    carry = (flat, opt_state, jnp.zeros((), jnp.int32), key)
+    (flat, opt_state, step, key), metrics = jax.lax.scan(
+        period, carry, None, length=cfg.n_periods
+    )
+
+    final_state = FmarlState(
+        params_m=spec.unravel(flat),
+        server_params=spec.unravel_one(flat[0]),
+        step=step,
+        key=key,
+    )
     ledger = CostLedger()
     ledger.add_periods(strat, cfg.n_periods)
     return final_state, metrics, ledger

@@ -129,6 +129,28 @@ class AggregationStrategy:
         p_flat, unravel = dispatch.stacked_ravel(params_m)
         return unravel(self.flat_update(p_flat, g_flat, offset, eta))
 
+    def flat_opt_step(self, params, g, offset, eta, opt, opt_state, *,
+                      backend: Optional[str] = None):
+        """Fused transform + optimizer update on the flat (m, n) carry.
+
+        The within-period weight (mask x decay) folds into the gradient
+        before moment accumulation (see ``dispatch.flat_opt_update``), so the
+        whole weighted momentum/Adam local step is one bandwidth pass.
+        Returns ``(params, opt_state)``.
+        """
+        b = backend if backend is not None else self.backend
+        return opt.update(params, g, self.weight(offset), opt_state, eta,
+                          backend=b)
+
+    def flat_server_average(self, flat, *, backend: Optional[str] = None):
+        """Eq. (11) on the flat carry: the (n,) mean over the agent axis.
+
+        Broadcast the returned server row back over axis 0 to re-seed the
+        replicas; ``dispatch.row_mean`` accumulates in fp32 on every backend.
+        """
+        b = backend if backend is not None else self.backend
+        return dispatch.row_mean(flat, backend=b)
+
     def server_average(self, params_m):
         """Eq. (11): periodic averaging = mean over the replica axis."""
         avg = jax.tree.map(lambda leaf: jnp.mean(leaf, axis=0), params_m)
@@ -140,6 +162,26 @@ class AggregationStrategy:
         return {
             "c1": self.m,                      # each agent uploads once per period
             "c2": int(np.sum(self.taus)),      # tau_i local updates each
+            "w1": 0,
+            "w2": 0,
+        }
+
+    def comm_events_partial_period(self, n_offsets: int) -> dict:
+        """Event counts for a trailing partial period of ``n_offsets`` steps.
+
+        Only the first ``n_offsets`` mask columns of local updates run (C2);
+        the final server read still aggregates every replica, so it bills the
+        per-agent upload (C1) exactly like a full-period sync.
+        """
+        n_offsets = int(n_offsets)
+        if not 0 <= n_offsets < self.tau:
+            raise ValueError(
+                f"partial period must satisfy 0 <= n_offsets < tau={self.tau}, "
+                f"got {n_offsets}"
+            )
+        return {
+            "c1": self.m if n_offsets else 0,
+            "c2": int(np.asarray(self.mask)[:, :n_offsets].sum()),
             "w1": 0,
             "w2": 0,
         }
@@ -309,6 +351,20 @@ class ConsensusStrategy(AggregationStrategy):
         b = backend if backend is not None else self.backend
         mixed = self.flat_transform(g, offset, backend=b)
         return dispatch.decay_accum(params, mixed, -eta, backend=b)
+
+    def flat_opt_step(self, params, g, offset, eta, opt, opt_state, *,
+                      backend: Optional[str] = None):
+        """Masked gossip mix (mask folded into P^E) then the optimizer pass."""
+        b = backend if backend is not None else self.backend
+        mixed = self.flat_transform(g, offset, backend=b)
+        return opt.update(params, mixed, 1.0, opt_state, eta, backend=b)
+
+    def comm_events_partial_period(self, n_offsets: int) -> dict:
+        base = AggregationStrategy.comm_events_partial_period(self, n_offsets)
+        gossip = int(self.topo.degrees.sum()) * self.rounds * int(n_offsets)
+        base["w1"] = gossip
+        base["w2"] = gossip
+        return base
 
     def comm_events_per_period(self) -> dict:
         base = AggregationStrategy.comm_events_per_period(self)

@@ -8,11 +8,16 @@ federated drivers route the hot-path transforms through.
 from repro.kernels import dispatch
 from repro.kernels.dispatch import (
     BACKENDS,
+    OPT_KINDS,
+    clear_caches,
     consensus_mix,
+    flat_opt_update,
     is_kernel_backend,
     resolve_backend,
+    row_mean,
     scale_rows,
     stacked_ravel,
+    stacked_ravel_spec,
 )
 
 # NOTE: dispatch.decay_accum is deliberately NOT re-exported here: the package
@@ -22,10 +27,15 @@ from repro.kernels.dispatch import (
 
 __all__ = [
     "BACKENDS",
+    "OPT_KINDS",
+    "clear_caches",
     "consensus_mix",
     "dispatch",
+    "flat_opt_update",
     "is_kernel_backend",
     "resolve_backend",
+    "row_mean",
     "scale_rows",
     "stacked_ravel",
+    "stacked_ravel_spec",
 ]

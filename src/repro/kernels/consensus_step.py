@@ -20,7 +20,16 @@ from jax.experimental import pallas as pl
 def _consensus_kernel(p_ref, g_ref, o_ref):
     p = p_ref[...]                       # (m, m) fp32
     g = g_ref[...].astype(jnp.float32)   # (m, bn)
-    o_ref[...] = (p @ g).astype(o_ref.dtype)
+    # Full-fp32 accumulation: without preferred_element_type/HIGHEST the MXU
+    # runs fp32 matmuls as truncated-bf16 passes, which drifts from the jnp
+    # reference (and loses mantissa on bf16/fp16 gradient buffers).
+    out = jax.lax.dot_general(
+        p, g,
+        dimension_numbers=(((1,), (0,)), ((), ())),
+        preferred_element_type=jnp.float32,
+        precision=jax.lax.Precision.HIGHEST,
+    )
+    o_ref[...] = out.astype(o_ref.dtype)
 
 
 @functools.partial(jax.jit, static_argnames=("block_n", "interpret"))

@@ -16,8 +16,11 @@ from jax.experimental.pallas import tpu as pltpu
 
 
 def _decay_accum_kernel(d_ref, acc_ref, g_ref, o_ref):
+    # fp32 accumulation regardless of the buffer dtype (d rides in SMEM as
+    # fp32); only the output is cast back, matching the jnp reference.
     d = d_ref[0]
-    o_ref[...] = acc_ref[...] + d * g_ref[...].astype(acc_ref.dtype)
+    out = acc_ref[...].astype(jnp.float32) + d * g_ref[...].astype(jnp.float32)
+    o_ref[...] = out.astype(o_ref.dtype)
 
 
 @functools.partial(jax.jit, static_argnames=("block_n", "interpret"))
@@ -46,7 +49,7 @@ def decay_accum_pallas(acc, g, d, *, block_n: int = 4096, interpret: bool = Fals
         acc = jnp.pad(acc, (0, pad))
         g = jnp.pad(g, (0, pad))
     np_ = acc.shape[0]
-    d_arr = jnp.asarray([d], acc.dtype)
+    d_arr = jnp.asarray(d, jnp.float32).reshape(1)
     out = pl.pallas_call(
         _decay_accum_kernel,
         grid=(np_ // block_n,),

@@ -1,15 +1,16 @@
 """Backend dispatch: route the federated hot-path transforms to the kernels.
 
 The within-period gradient transforms (variation mask / decay weighting /
-consensus gossip) and the local SGD update are the per-step work of
-Algorithms 1 & 2. This module is the single switch that decides how they
-execute:
+consensus gossip), the local optimizer update, and the server averaging step
+are the per-step work of Algorithms 1 & 2. This module is the single switch
+that decides how they execute:
 
   * ``jnp``       — pure-jnp reference path (tree ops / matmul). Always
                     available; the allclose target for everything else.
   * ``pallas``    — compiled Pallas TPU kernels (``decay_accum_pallas``,
-                    ``consensus_step_pallas``): one fused bandwidth-bound
-                    pass over the flat parameter buffers.
+                    ``consensus_step_pallas``, ``row_mean_pallas``,
+                    ``momentum_update_pallas`` / ``adam_update_pallas``): one
+                    fused bandwidth-bound pass over flat parameter buffers.
   * ``interpret`` — the same Pallas kernels in interpret mode. Runs the
                     kernel bodies as traced jax on CPU; used for parity tests
                     and CPU debugging of the kernel path.
@@ -19,11 +20,23 @@ Strategies carry a ``backend=`` field (default ``auto``) so every existing
 call site keeps working; the drivers resolve it once at trace time.
 
 The kernel path works on flat ``(m, n)`` matrices — m agents by n parameters.
-``stacked_ravel`` flattens a replica pytree to that form (and back) with the
-unravel closure cached per (treedef, shapes, dtypes), so the per-step cost is
-one reshape+concatenate, not a re-derivation of the tree structure.
+Since PR 2 the *drivers* also keep their scan carry in that form (ravel once
+at run start, unravel only where user code needs trees), so the per-step cost
+on kernel backends is one ravel of the gradients the user closure returns —
+no params round-trip. ``stacked_ravel_spec`` hands out the cached
+flatten/unflatten closures (full-stack and per-agent views); the cache is a
+bounded LRU keyed on (treedef, per-agent shapes, dtypes) and can be emptied
+with ``clear_caches()``.
+
+Numerics: every dispatched primitive accumulates in fp32 on every backend
+(inputs are upcast, outputs cast back to the input dtype), so bf16/fp16
+gradient buffers stay bit-comparable between the jnp reference and the
+kernel path, and a later bf16-buffer mode slots in without parity drift.
 """
 from __future__ import annotations
+
+import collections
+from typing import Callable, NamedTuple
 
 import jax
 import jax.flatten_util
@@ -34,6 +47,8 @@ import jax.numpy as jnp
 # importable on JAX builds where jax.experimental.pallas fails to import.
 
 BACKENDS = ("auto", "jnp", "pallas", "interpret")
+
+OPT_KINDS = ("sgd", "momentum", "adam")
 
 
 def resolve_backend(backend: str = "auto") -> str:
@@ -51,15 +66,64 @@ def is_kernel_backend(backend: str) -> bool:
 
 # --- flat <-> pytree plumbing -------------------------------------------------
 
-_UNRAVEL_CACHE: dict = {}
+class FlatSpec(NamedTuple):
+    """Cached flatten/unflatten closures for one replica-pytree structure.
+
+    ``unravel`` maps the full ``(m, n)`` matrix back to the stacked tree;
+    ``unravel_one`` maps a single ``(n,)`` row to a per-agent tree (the view
+    rollout/grad closures receive on the flat-carry path); ``ravel_one`` is
+    its inverse for the gradients those closures return.
+    """
+
+    unravel: Callable
+    unravel_one: Callable
+    ravel_one: Callable
 
 
-def stacked_ravel(tree_m):
-    """Flatten an (m, ...)-leaved replica pytree to an ``(m, n)`` matrix.
+# Bounded LRU: keyed on live treedef objects, so an unbounded dict would
+# pin every tree structure ever raveled (and grow across tests / long
+# sessions). 64 distinct (treedef, shapes, dtypes) structures is far beyond
+# what one process legitimately cycles through.
+_UNRAVEL_CACHE_MAXSIZE = 64
+_UNRAVEL_CACHE: "collections.OrderedDict" = collections.OrderedDict()
 
-    Returns ``(flat, unravel)`` where ``unravel`` maps an ``(m, n)`` matrix
-    back to the original tree structure. The unravel closure depends only on
-    (treedef, per-agent leaf shapes, dtypes) and is cached on that key.
+
+def clear_caches() -> None:
+    """Drop all cached unravel closures (tests; releases treedef refs)."""
+    _UNRAVEL_CACHE.clear()
+
+
+def _ravel_one(tree) -> jnp.ndarray:
+    return jax.flatten_util.ravel_pytree(tree)[0]
+
+
+def _flat_spec(leaves, treedef) -> FlatSpec:
+    key = (treedef, tuple((l.shape[1:], jnp.dtype(l.dtype).name) for l in leaves))
+    spec = _UNRAVEL_CACHE.get(key)
+    if spec is None:
+        template = jax.tree.unflatten(
+            treedef, [jnp.zeros(l.shape[1:], l.dtype) for l in leaves]
+        )
+        _, unravel_one = jax.flatten_util.ravel_pytree(template)
+        spec = FlatSpec(
+            unravel=jax.vmap(unravel_one),
+            unravel_one=unravel_one,
+            ravel_one=_ravel_one,
+        )
+        _UNRAVEL_CACHE[key] = spec
+        if len(_UNRAVEL_CACHE) > _UNRAVEL_CACHE_MAXSIZE:
+            _UNRAVEL_CACHE.popitem(last=False)
+    else:
+        _UNRAVEL_CACHE.move_to_end(key)
+    return spec
+
+
+def stacked_ravel_spec(tree_m):
+    """Flatten an (m, ...)-leaved replica pytree to ``(flat, FlatSpec)``.
+
+    ``flat`` is the ``(m, n)`` matrix; the spec carries the cached unflatten
+    closures (see :class:`FlatSpec`). The cache key is (treedef, per-agent
+    leaf shapes, dtypes) in a bounded LRU.
     """
     leaves, treedef = jax.tree.flatten(tree_m)
     if not leaves:
@@ -71,15 +135,20 @@ def stacked_ravel(tree_m):
                 f"stacked_ravel: every leaf needs leading agent axis {m}, "
                 f"got shape {l.shape}"
             )
-    key = (treedef, tuple((l.shape[1:], jnp.dtype(l.dtype).name) for l in leaves))
-    if key not in _UNRAVEL_CACHE:
-        template = jax.tree.unflatten(
-            treedef, [jnp.zeros(l.shape[1:], l.dtype) for l in leaves]
-        )
-        _, unravel_one = jax.flatten_util.ravel_pytree(template)
-        _UNRAVEL_CACHE[key] = jax.vmap(unravel_one)
-    flat = jax.vmap(lambda t: jax.flatten_util.ravel_pytree(t)[0])(tree_m)
-    return flat, _UNRAVEL_CACHE[key]
+    spec = _flat_spec(leaves, treedef)
+    flat = jax.vmap(_ravel_one)(tree_m)
+    return flat, spec
+
+
+def stacked_ravel(tree_m):
+    """Flatten an (m, ...)-leaved replica pytree to an ``(m, n)`` matrix.
+
+    Returns ``(flat, unravel)`` where ``unravel`` maps an ``(m, n)`` matrix
+    back to the original tree structure. See ``stacked_ravel_spec`` for the
+    full set of cached views.
+    """
+    flat, spec = stacked_ravel_spec(tree_m)
+    return flat, spec.unravel
 
 
 # --- dispatched primitives ----------------------------------------------------
@@ -89,7 +158,8 @@ def decay_accum(acc, g, d, *, backend: str = "auto", block_n: int = 4096):
 
     ``acc``/``g``: ``(n,)`` or ``(m, n)``; ``d``: scalar, or ``(m,)`` per-agent
     coefficients when the inputs are ``(m, n)`` (the kernel is vmapped over
-    the agent axis).
+    the agent axis). Accumulates in fp32 on every backend; the result is cast
+    back to ``acc.dtype``.
     """
     b = resolve_backend(backend)
     if acc.ndim not in (1, 2) or acc.shape != g.shape:
@@ -102,7 +172,7 @@ def decay_accum(acc, g, d, *, backend: str = "auto", block_n: int = 4096):
         raise ValueError(
             f"decay_accum: acc/g dtypes must match, got {acc.dtype} vs {g.dtype}"
         )
-    d_arr = jnp.asarray(d, acc.dtype)
+    d_arr = jnp.asarray(d, jnp.float32)
     if d_arr.ndim not in (0, 1) or (d_arr.ndim == 1 and acc.ndim != 2):
         raise ValueError(
             f"decay_accum: d must be scalar or (m,) with (m, n) inputs, "
@@ -110,7 +180,8 @@ def decay_accum(acc, g, d, *, backend: str = "auto", block_n: int = 4096):
         )
     if b == "jnp":
         d_b = d_arr[:, None] if d_arr.ndim == 1 else d_arr
-        return acc + d_b * g
+        out = acc.astype(jnp.float32) + d_b * g.astype(jnp.float32)
+        return out.astype(acc.dtype)
     from repro.kernels.decay_accum import decay_accum_pallas
 
     interp = b == "interpret"
@@ -136,19 +207,24 @@ def scale_rows(g, w, *, backend: str = "auto", block_n: int = 4096):
     b = resolve_backend(backend)
     if g.ndim != 2:
         raise ValueError(f"scale_rows: g must be (m, n), got {g.shape}")
-    w_arr = jnp.asarray(w, g.dtype)
+    w_arr = jnp.asarray(w, jnp.float32)
     if w_arr.shape != (g.shape[0],):
         raise ValueError(
             f"scale_rows: w must be ({g.shape[0]},) for g {g.shape}, "
             f"got {w_arr.shape}"
         )
     if b == "jnp":
-        return g * w_arr[:, None]
+        return (g.astype(jnp.float32) * w_arr[:, None]).astype(g.dtype)
     return decay_accum(g, g, w_arr - 1.0, backend=b, block_n=block_n)
 
 
 def consensus_mix(g, mixing, *, backend: str = "auto", block_n: int = 2048):
-    """One (possibly fused-E, possibly mask-folded) gossip mix: ``mixing @ g``."""
+    """One (possibly fused-E, possibly mask-folded) gossip mix: ``mixing @ g``.
+
+    Both backends accumulate the matmul in fp32 at HIGHEST precision (the
+    MXU's default fp32 path truncates operands to bf16 passes, which would
+    drift from the CPU reference) and cast back to ``g.dtype``.
+    """
     b = resolve_backend(backend)
     if g.ndim != 2:
         raise ValueError(f"consensus_mix: g must be (m, n), got {g.shape}")
@@ -159,9 +235,173 @@ def consensus_mix(g, mixing, *, backend: str = "auto", block_n: int = 2048):
             f"got {mixing.shape}"
         )
     if b == "jnp":
-        return (mixing.astype(jnp.float32) @ g.astype(jnp.float32)).astype(g.dtype)
+        out = jnp.matmul(
+            mixing.astype(jnp.float32),
+            g.astype(jnp.float32),
+            precision=jax.lax.Precision.HIGHEST,
+        )
+        return out.astype(g.dtype)
     from repro.kernels.consensus_step import consensus_step_pallas
 
     return consensus_step_pallas(
         g, mixing, block_n=block_n, interpret=(b == "interpret")
     )
+
+
+def row_mean(g, *, backend: str = "auto", block_n: int = 4096):
+    """Server averaging (eq. 11) on the flat carry: mean over the agent axis.
+
+    ``g``: ``(m, n)``. Returns the ``(n,)`` server row (broadcast it back over
+    the agent axis to re-seed the replicas). Accumulates in fp32 on every
+    backend and casts back to ``g.dtype``.
+    """
+    b = resolve_backend(backend)
+    if g.ndim != 2:
+        raise ValueError(f"row_mean: g must be (m, n), got {g.shape}")
+    if b == "jnp":
+        return jnp.mean(g.astype(jnp.float32), axis=0).astype(g.dtype)
+    from repro.kernels.flat_update import row_mean_pallas
+
+    return row_mean_pallas(g, block_n=block_n, interpret=(b == "interpret"))
+
+
+def _check_opt_state(state, required, params, kind):
+    for name in required:
+        buf = state.get(name)
+        if buf is None:
+            raise ValueError(f"flat_opt_update[{kind}]: state needs {name!r}")
+        if name == "t":
+            continue
+        if buf.shape != params.shape:
+            raise ValueError(
+                f"flat_opt_update[{kind}]: state[{name!r}] shape {buf.shape} "
+                f"must match params {params.shape}"
+            )
+        if buf.dtype != jnp.float32:
+            raise ValueError(
+                f"flat_opt_update[{kind}]: state[{name!r}] must be an fp32 "
+                f"accumulator, got {buf.dtype}"
+            )
+
+
+def flat_opt_update(
+    params,
+    g,
+    w,
+    state,
+    *,
+    kind: str,
+    lr,
+    beta: float = 0.9,
+    nesterov: bool = False,
+    b1: float = 0.9,
+    b2: float = 0.95,
+    eps: float = 1e-8,
+    weight_decay: float = 0.0,
+    backend: str = "auto",
+    block_n: int = 4096,
+):
+    """Fused within-period-weighted optimizer update on flat buffers.
+
+    ``params``/``g``: matching ``(n,)`` or ``(m, n)`` buffers. ``w`` is the
+    strategy's per-step weight (variation mask x decay; scalar or ``(m,)``),
+    folded into the gradient *before* any moment accumulation — so a masked
+    agent's momentum genuinely does not advance. ``state`` holds the fp32
+    accumulators (see ``repro.optim.flat``):
+
+      * ``sgd``      — ``{}``; delegates to the fused :func:`decay_accum` pass.
+      * ``momentum`` — ``{"mu"}``; mu <- beta*mu + w*g, params -= lr*mu
+                       (nesterov: params -= lr*(beta*mu_new + w*g)),
+                       matching ``repro.optim.optimizers.momentum``.
+      * ``adam``     — ``{"mu", "nu", "t"}``; bias-corrected Adam(W) matching
+                       ``repro.optim.optimizers.adamw`` with fp32 state.
+
+    Returns ``(new_params, new_state)``. All math runs in fp32; params are
+    cast back to their own dtype (the moments stay fp32), so bf16 parameter /
+    gradient buffers lose nothing in the accumulators.
+    """
+    if kind not in OPT_KINDS:
+        raise ValueError(f"unknown optimizer kind {kind!r}; expected {OPT_KINDS}")
+    b = resolve_backend(backend)
+    if params.ndim not in (1, 2) or params.shape != g.shape:
+        raise ValueError(
+            f"flat_opt_update: params/g must be matching (n,) or (m, n) "
+            f"buffers, got {params.shape} vs {g.shape}"
+        )
+    w_arr = jnp.asarray(w, jnp.float32)
+    if w_arr.ndim not in (0, 1) or (w_arr.ndim == 1 and params.ndim != 2):
+        raise ValueError(
+            f"flat_opt_update: w must be scalar or (m,) with (m, n) inputs, "
+            f"got w shape {w_arr.shape} for input shape {params.shape}"
+        )
+
+    if kind == "sgd":
+        new_p = decay_accum(params, g, -lr * w_arr, backend=b, block_n=block_n)
+        return new_p, state
+
+    if kind == "momentum":
+        _check_opt_state(state, ("mu",), params, kind)
+        mu = state["mu"]
+        if b == "jnp":
+            w_b = w_arr[:, None] if w_arr.ndim == 1 else w_arr
+            wg = w_b * g.astype(jnp.float32)
+            new_mu = beta * mu + wg
+            upd = beta * new_mu + wg if nesterov else new_mu
+            new_p = (params.astype(jnp.float32) - lr * upd).astype(params.dtype)
+            return new_p, dict(state, mu=new_mu)
+        from repro.kernels.flat_update import momentum_update_pallas
+
+        interp = b == "interpret"
+        lr_arr = jnp.asarray(lr, jnp.float32)
+        if params.ndim == 2:
+            w_m = jnp.broadcast_to(w_arr, (params.shape[0],))
+            new_p, new_mu = jax.vmap(
+                lambda p, gi, mi, wi: momentum_update_pallas(
+                    p, gi, mi, wi, lr_arr, beta,
+                    nesterov=nesterov, block_n=block_n, interpret=interp,
+                )
+            )(params, g, mu, w_m)
+        else:
+            new_p, new_mu = momentum_update_pallas(
+                params, g, mu, w_arr, lr_arr, beta,
+                nesterov=nesterov, block_n=block_n, interpret=interp,
+            )
+        return new_p, dict(state, mu=new_mu)
+
+    # kind == "adam"
+    _check_opt_state(state, ("mu", "nu", "t"), params, kind)
+    mu, nu = state["mu"], state["nu"]
+    t = state["t"] + 1
+    tf = t.astype(jnp.float32)
+    bc1 = 1.0 - jnp.float32(b1) ** tf
+    bc2 = 1.0 - jnp.float32(b2) ** tf
+    if b == "jnp":
+        w_b = w_arr[:, None] if w_arr.ndim == 1 else w_arr
+        wg = w_b * g.astype(jnp.float32)
+        new_mu = b1 * mu + (1.0 - b1) * wg
+        new_nu = b2 * nu + (1.0 - b2) * jnp.square(wg)
+        p32 = params.astype(jnp.float32)
+        step = (new_mu / bc1) / (jnp.sqrt(new_nu / bc2) + eps)
+        step = step + weight_decay * p32
+        new_p = (p32 - lr * step).astype(params.dtype)
+        return new_p, dict(state, mu=new_mu, nu=new_nu, t=t)
+    from repro.kernels.flat_update import adam_update_pallas
+
+    interp = b == "interpret"
+    lr_arr = jnp.asarray(lr, jnp.float32)
+    if params.ndim == 2:
+        w_m = jnp.broadcast_to(w_arr, (params.shape[0],))
+        new_p, new_mu, new_nu = jax.vmap(
+            lambda p, gi, mi, vi, wi: adam_update_pallas(
+                p, gi, mi, vi, wi, lr_arr, bc1, bc2,
+                b1=b1, b2=b2, eps=eps, weight_decay=weight_decay,
+                block_n=block_n, interpret=interp,
+            )
+        )(params, g, mu, nu, w_m)
+    else:
+        new_p, new_mu, new_nu = adam_update_pallas(
+            params, g, mu, nu, w_arr, lr_arr, bc1, bc2,
+            b1=b1, b2=b2, eps=eps, weight_decay=weight_decay,
+            block_n=block_n, interpret=interp,
+        )
+    return new_p, dict(state, mu=new_mu, nu=new_nu, t=t)

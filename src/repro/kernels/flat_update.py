@@ -1,0 +1,223 @@
+"""Pallas TPU kernels for the flat-carry federated loop: server averaging
+(eq. 11) and the fused local optimizer updates.
+
+All three kernels are bandwidth-bound single passes over flat parameter
+buffers, tiled 1-D through VMEM like ``decay_accum_pallas``; scalars ride in
+SMEM. Accumulation is fp32 throughout: inputs are upcast on load, moment
+buffers are fp32 operands, and only the parameter output is cast back to the
+parameter dtype — so bf16 parameter/gradient buffers keep fp32-quality
+optimizer state (the prerequisite for the bf16-buffer mode on the roadmap).
+
+  * ``row_mean_pallas``        — (m, n) -> (n,) mean over the agent axis:
+                                 the server averaging reduction.
+  * ``momentum_update_pallas`` — mu <- beta*mu + w*g; p <- p - lr*mu
+                                 (optionally Nesterov), one fused pass.
+  * ``adam_update_pallas``     — bias-corrected Adam(W) step with fp32
+                                 mu/nu moments, one fused pass.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+
+def _pad1(x, pad):
+    return jnp.pad(x, (0, pad)) if pad else x
+
+
+# --- server averaging ---------------------------------------------------------
+
+def _row_mean_kernel(g_ref, o_ref):
+    o_ref[...] = jnp.mean(g_ref[...].astype(jnp.float32), axis=0).astype(
+        o_ref.dtype
+    )
+
+
+@functools.partial(jax.jit, static_argnames=("block_n", "interpret"))
+def row_mean_pallas(g, *, block_n: int = 4096, interpret: bool = False):
+    """g: (m, n) flat replica buffers. Returns the (n,) mean over agents."""
+    if g.ndim != 2:
+        raise ValueError(f"row_mean_pallas: g must be (m, n), got {g.shape}")
+    if block_n < 1:
+        raise ValueError(f"row_mean_pallas: block_n must be >= 1, got {block_n}")
+    m, n = g.shape
+    if n == 0:
+        return jnp.zeros((0,), g.dtype)
+    block_n = min(block_n, n)
+    pad = (-n) % block_n
+    gp = jnp.pad(g, ((0, 0), (0, pad))) if pad else g
+    np_ = gp.shape[1]
+    out = pl.pallas_call(
+        _row_mean_kernel,
+        grid=(np_ // block_n,),
+        in_specs=[pl.BlockSpec((m, block_n), lambda i: (0, i))],
+        out_specs=pl.BlockSpec((block_n,), lambda i: (i,)),
+        out_shape=jax.ShapeDtypeStruct((np_,), g.dtype),
+        interpret=interpret,
+    )(gp)
+    return out[:n] if pad else out
+
+
+# --- fused momentum update ----------------------------------------------------
+
+def _momentum_kernel(s_ref, p_ref, g_ref, mu_ref, op_ref, omu_ref, *, nesterov):
+    w, lr, beta = s_ref[0], s_ref[1], s_ref[2]
+    wg = w * g_ref[...].astype(jnp.float32)
+    mu = beta * mu_ref[...] + wg
+    upd = beta * mu + wg if nesterov else mu
+    omu_ref[...] = mu
+    op_ref[...] = (p_ref[...].astype(jnp.float32) - lr * upd).astype(op_ref.dtype)
+
+
+@functools.partial(
+    jax.jit, static_argnames=("beta", "nesterov", "block_n", "interpret")
+)
+def momentum_update_pallas(
+    p, g, mu, w, lr, beta,
+    *, nesterov: bool = False, block_n: int = 4096, interpret: bool = False,
+):
+    """One fused heavy-ball step on flat (n,) buffers.
+
+    p/g: (n,) params and (already-transformed) grads; mu: (n,) fp32 momentum;
+    w: scalar within-period weight folded into g; lr/beta: scalars.
+    Returns (new_p, new_mu).
+    """
+    if p.ndim != 1 or p.shape != g.shape or p.shape != mu.shape:
+        raise ValueError(
+            f"momentum_update_pallas: p/g/mu must be identical (n,) buffers, "
+            f"got {p.shape} / {g.shape} / {mu.shape}"
+        )
+    if p.dtype != g.dtype:
+        raise ValueError(
+            f"momentum_update_pallas: p/g dtypes must match, got "
+            f"{p.dtype} vs {g.dtype}"
+        )
+    if mu.dtype != jnp.float32:
+        raise ValueError(
+            f"momentum_update_pallas: mu must be an fp32 accumulator, "
+            f"got {mu.dtype}"
+        )
+    if jnp.ndim(w) != 0 or jnp.ndim(lr) != 0:
+        raise ValueError("momentum_update_pallas: w and lr must be scalars")
+    if block_n < 1:
+        raise ValueError(
+            f"momentum_update_pallas: block_n must be >= 1, got {block_n}"
+        )
+    n = p.shape[0]
+    if n == 0:
+        return p, mu
+    block_n = min(block_n, n)
+    pad = (-n) % block_n
+    pp, gp, mup = _pad1(p, pad), _pad1(g, pad), _pad1(mu, pad)
+    np_ = pp.shape[0]
+    scal = jnp.stack(
+        [jnp.asarray(w, jnp.float32), jnp.asarray(lr, jnp.float32),
+         jnp.asarray(beta, jnp.float32)]
+    )
+    blk = pl.BlockSpec((block_n,), lambda i: (i,))
+    new_p, new_mu = pl.pallas_call(
+        functools.partial(_momentum_kernel, nesterov=nesterov),
+        grid=(np_ // block_n,),
+        in_specs=[pl.BlockSpec(memory_space=pltpu.SMEM), blk, blk, blk],
+        out_specs=[blk, blk],
+        out_shape=[
+            jax.ShapeDtypeStruct((np_,), p.dtype),
+            jax.ShapeDtypeStruct((np_,), jnp.float32),
+        ],
+        interpret=interpret,
+    )(scal, pp, gp, mup)
+    if pad:
+        return new_p[:n], new_mu[:n]
+    return new_p, new_mu
+
+
+# --- fused Adam(W) update -----------------------------------------------------
+
+def _adam_kernel(s_ref, p_ref, g_ref, mu_ref, nu_ref, op_ref, omu_ref, onu_ref):
+    w, lr = s_ref[0], s_ref[1]
+    b1, b2, eps, wd = s_ref[2], s_ref[3], s_ref[4], s_ref[5]
+    bc1, bc2 = s_ref[6], s_ref[7]
+    wg = w * g_ref[...].astype(jnp.float32)
+    mu = b1 * mu_ref[...] + (1.0 - b1) * wg
+    nu = b2 * nu_ref[...] + (1.0 - b2) * wg * wg
+    p32 = p_ref[...].astype(jnp.float32)
+    step = (mu / bc1) / (jnp.sqrt(nu / bc2) + eps) + wd * p32
+    omu_ref[...] = mu
+    onu_ref[...] = nu
+    op_ref[...] = (p32 - lr * step).astype(op_ref.dtype)
+
+
+@functools.partial(
+    jax.jit,
+    static_argnames=("b1", "b2", "eps", "weight_decay", "block_n", "interpret"),
+)
+def adam_update_pallas(
+    p, g, mu, nu, w, lr, bc1, bc2,
+    *,
+    b1: float = 0.9,
+    b2: float = 0.95,
+    eps: float = 1e-8,
+    weight_decay: float = 0.0,
+    block_n: int = 4096,
+    interpret: bool = False,
+):
+    """One fused bias-corrected Adam(W) step on flat (n,) buffers.
+
+    p/g: (n,); mu/nu: (n,) fp32 moments; w: scalar within-period weight;
+    lr: scalar; bc1/bc2: precomputed bias corrections 1-b^t (scalars — the
+    step counter lives outside the kernel). Returns (new_p, new_mu, new_nu).
+    """
+    if p.ndim != 1 or not (p.shape == g.shape == mu.shape == nu.shape):
+        raise ValueError(
+            f"adam_update_pallas: p/g/mu/nu must be identical (n,) buffers, "
+            f"got {p.shape} / {g.shape} / {mu.shape} / {nu.shape}"
+        )
+    if p.dtype != g.dtype:
+        raise ValueError(
+            f"adam_update_pallas: p/g dtypes must match, got "
+            f"{p.dtype} vs {g.dtype}"
+        )
+    if mu.dtype != jnp.float32 or nu.dtype != jnp.float32:
+        raise ValueError(
+            f"adam_update_pallas: mu/nu must be fp32 accumulators, got "
+            f"{mu.dtype} / {nu.dtype}"
+        )
+    for name, s in (("w", w), ("lr", lr), ("bc1", bc1), ("bc2", bc2)):
+        if jnp.ndim(s) != 0:
+            raise ValueError(f"adam_update_pallas: {name} must be a scalar")
+    if block_n < 1:
+        raise ValueError(f"adam_update_pallas: block_n must be >= 1, got {block_n}")
+    n = p.shape[0]
+    if n == 0:
+        return p, mu, nu
+    block_n = min(block_n, n)
+    pad = (-n) % block_n
+    pp, gp = _pad1(p, pad), _pad1(g, pad)
+    mup, nup = _pad1(mu, pad), _pad1(nu, pad)
+    np_ = pp.shape[0]
+    scal = jnp.stack(
+        [jnp.asarray(w, jnp.float32), jnp.asarray(lr, jnp.float32),
+         jnp.float32(b1), jnp.float32(b2), jnp.float32(eps),
+         jnp.float32(weight_decay), jnp.asarray(bc1, jnp.float32),
+         jnp.asarray(bc2, jnp.float32)]
+    )
+    blk = pl.BlockSpec((block_n,), lambda i: (i,))
+    new_p, new_mu, new_nu = pl.pallas_call(
+        _adam_kernel,
+        grid=(np_ // block_n,),
+        in_specs=[pl.BlockSpec(memory_space=pltpu.SMEM), blk, blk, blk, blk],
+        out_specs=[blk, blk, blk],
+        out_shape=[
+            jax.ShapeDtypeStruct((np_,), p.dtype),
+            jax.ShapeDtypeStruct((np_,), jnp.float32),
+            jax.ShapeDtypeStruct((np_,), jnp.float32),
+        ],
+        interpret=interpret,
+    )(scal, pp, gp, mup, nup)
+    if pad:
+        return new_p[:n], new_mu[:n], new_nu[:n]
+    return new_p, new_mu, new_nu

@@ -5,14 +5,19 @@ from repro.optim.optimizers import (
     sgd,
     momentum,
 )
+from repro.optim.flat import FlatOptimizer, flat_adam, flat_momentum, flat_sgd
 from repro.optim.schedules import constant_lr, cosine_lr, warmup_cosine_lr
 
 __all__ = [
+    "FlatOptimizer",
     "Optimizer",
     "adamw",
     "clip_by_global_norm",
     "constant_lr",
     "cosine_lr",
+    "flat_adam",
+    "flat_momentum",
+    "flat_sgd",
     "momentum",
     "sgd",
     "warmup_cosine_lr",

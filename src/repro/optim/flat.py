@@ -1,0 +1,95 @@
+"""Flat-buffer optimizers for the federated hot path.
+
+``repro.optim.optimizers`` holds the pytree reference optimizers; this module
+is their flat-carry counterpart: state lives as fp32 ``(m, n)`` accumulator
+matrices next to the flat parameter carry, and the update is one fused pass
+through ``repro.kernels.dispatch.flat_opt_update`` (Pallas on kernel
+backends, fp32 jnp reference elsewhere). The within-period weight (variation
+mask x decay, eq. 10) is an explicit argument folded into the gradient
+*before* moment accumulation, so a masked agent's momentum does not advance —
+the flat drivers pass it straight from ``AggregationStrategy.weight``.
+
+A ``FlatOptimizer`` is a frozen hashable spec, so the drivers can close over
+it inside jit without it becoming a traced value.
+"""
+from __future__ import annotations
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels import dispatch
+
+
+@dataclasses.dataclass(frozen=True)
+class FlatOptimizer:
+    """Optimizer spec for flat (m, n) parameter buffers.
+
+    kind: 'sgd' | 'momentum' | 'adam' (see ``dispatch.flat_opt_update`` for
+    the exact update rules — they mirror ``repro.optim.optimizers``).
+    ``block_n`` tiles the Pallas kernels; ignored on the jnp backend.
+    """
+
+    kind: str
+    beta: float = 0.9          # momentum
+    nesterov: bool = False     # momentum
+    b1: float = 0.9            # adam
+    b2: float = 0.95           # adam
+    eps: float = 1e-8          # adam
+    weight_decay: float = 0.0  # adam
+    block_n: int = 4096
+
+    def __post_init__(self):
+        if self.kind not in dispatch.OPT_KINDS:
+            raise ValueError(
+                f"unknown optimizer kind {self.kind!r}; expected one of "
+                f"{dispatch.OPT_KINDS}"
+            )
+
+    def init(self, flat) -> dict:
+        """fp32 accumulator state for a flat (n,) or (m, n) parameter buffer."""
+        z = lambda: jnp.zeros(flat.shape, jnp.float32)
+        if self.kind == "sgd":
+            return {}
+        if self.kind == "momentum":
+            return {"mu": z()}
+        return {"mu": z(), "nu": z(), "t": jnp.zeros((), jnp.int32)}
+
+    def update(self, params, g, w, state, lr, *, backend: str = "auto"):
+        """One fused weighted step: returns ``(new_params, new_state)``."""
+        return dispatch.flat_opt_update(
+            params, g, w, state,
+            kind=self.kind, lr=lr,
+            beta=self.beta, nesterov=self.nesterov,
+            b1=self.b1, b2=self.b2, eps=self.eps,
+            weight_decay=self.weight_decay,
+            backend=backend, block_n=self.block_n,
+        )
+
+
+def server_average_state(strat, opt_state):
+    """Server-sync the fp32 accumulators alongside the params (FedAvg-style):
+    every (m, n) moment matrix collapses to its row mean, re-broadcast;
+    shared scalars (adam's t) pass through."""
+    def avg(leaf):
+        if leaf.ndim != 2:
+            return leaf
+        row = strat.flat_server_average(leaf)
+        return jnp.broadcast_to(row[None, :], leaf.shape)
+
+    return jax.tree.map(avg, opt_state)
+
+
+def flat_sgd() -> FlatOptimizer:
+    return FlatOptimizer(kind="sgd")
+
+
+def flat_momentum(beta: float = 0.9, nesterov: bool = False) -> FlatOptimizer:
+    return FlatOptimizer(kind="momentum", beta=beta, nesterov=nesterov)
+
+
+def flat_adam(b1: float = 0.9, b2: float = 0.95, eps: float = 1e-8,
+              weight_decay: float = 0.0) -> FlatOptimizer:
+    return FlatOptimizer(kind="adam", b1=b1, b2=b2, eps=eps,
+                         weight_decay=weight_decay)

@@ -10,11 +10,19 @@ virtual agent averages the replicas (eq. 11).
 
 The whole run is one jitted scan (epochs x updates x P env steps), so the
 paper-scale experiment runs in seconds-to-minutes on CPU.
+
+Carry layouts mirror ``repro.core.fmarl``: the jnp backend with plain SGD
+keeps the original tree-space reference (bit-identical); kernel backends —
+or any run with ``cfg.optimizer`` set — keep the policy replicas as one flat
+``(m, n)`` matrix across every scan. Each update step unravels one cached
+tree view for the rollout/grad closures and ravels only the gradients back;
+the local update, the periodic sync (``row_mean``), and the optimizer
+accumulators all stay flat through the dispatch layer.
 """
 from __future__ import annotations
 
 import dataclasses
-from typing import Any
+from typing import Any, Optional
 
 import jax
 import jax.numpy as jnp
@@ -22,6 +30,8 @@ import numpy as np
 
 from repro.core.accounting import CostLedger
 from repro.core.strategies import AggregationStrategy
+from repro.kernels import dispatch
+from repro.optim.flat import FlatOptimizer, server_average_state
 from repro.rl.env import EnvConfig, env_reset, env_step, get_obs
 from repro.rl.policy import init_policy, policy_value, sample_action
 from repro.rl.ppo import LOSSES, gae
@@ -41,6 +51,7 @@ class FedRLConfig:
     gamma: float = 0.99
     lam: float = 0.95
     eval_seed: int = 1234
+    optimizer: Optional[FlatOptimizer] = None  # None = plain SGD (reference)
 
     def __post_init__(self):
         if self.epoch_len % self.minibatch:
@@ -96,19 +107,43 @@ def _agent_grads(cfg: FedRLConfig, params_m, traj, env_state):
 
 def _eval_grad_norm(cfg: FedRLConfig, server_params):
     """Expected gradient norm ||grad F(theta_bar)||^2 on a fixed eval stream
-    (Table II metric: fixed sample distribution, deterministic seed)."""
-    key = jax.random.key(cfg.eval_seed)
-    env_state = env_reset(cfg.env, key)
+    (Table II metric: fixed sample distribution, deterministic seed).
+
+    The reset and rollout streams are decorrelated: reusing one key for both
+    made the eval trajectory's action noise a deterministic function of the
+    initial env state, biasing the fixed-sample estimate."""
+    k_reset, k_roll = jax.random.split(jax.random.key(cfg.eval_seed))
+    env_state = env_reset(cfg.env, k_reset)
     m = cfg.env.n_rl
     params_m = jax.tree.map(lambda l: jnp.broadcast_to(l, (m,) + l.shape),
                             server_params)
-    env_state, traj = _rollout(cfg, params_m, env_state, key, cfg.minibatch)
+    env_state, traj = _rollout(cfg, params_m, env_state, k_roll, cfg.minibatch)
     grads, _ = _agent_grads(cfg, params_m, traj, env_state)
     g_mean = jax.tree.map(lambda x: jnp.mean(x, axis=0), grads)
     return tree_l2_norm(g_mean) ** 2
 
 
+def _finish_ledger(strat, n_updates: int) -> CostLedger:
+    """Bill full periods plus any trailing partial one (the old
+    ``n_updates // tau`` silently dropped the remainder's local updates)."""
+    full, rem = divmod(n_updates, strat.tau)
+    ledger = CostLedger()
+    ledger.add_periods(strat, full)
+    ledger.add_partial_period(strat, rem)
+    return ledger
+
+
 def run_fedrl(cfg: FedRLConfig, key) -> tuple[Any, dict, CostLedger]:
+    if (
+        dispatch.is_kernel_backend(cfg.strategy.backend)
+        or cfg.optimizer is not None
+    ):
+        return _run_fedrl_flat(cfg, key)
+    return _run_fedrl_tree(cfg, key)
+
+
+def _run_fedrl_tree(cfg: FedRLConfig, key) -> tuple[Any, dict, CostLedger]:
+    """Tree-space reference path (bit-identical to the original jnp driver)."""
     strat = cfg.strategy
     m, tau = strat.m, strat.tau
     updates_per_epoch = cfg.epoch_len // cfg.minibatch
@@ -123,8 +158,6 @@ def run_fedrl(cfg: FedRLConfig, key) -> tuple[Any, dict, CostLedger]:
         env_state, traj = _rollout(cfg, params_m, env_state, rk, cfg.minibatch)
         grads, losses = _agent_grads(cfg, params_m, traj, env_state)
         offset = jnp.mod(k, tau)
-        # Transform + SGD; on kernel backends this is the fused flat path
-        # through decay_accum_pallas / consensus_step_pallas (dispatch layer).
         params_m = strat.local_update(params_m, grads, offset, cfg.eta)
         k = k + 1
 
@@ -160,9 +193,81 @@ def run_fedrl(cfg: FedRLConfig, key) -> tuple[Any, dict, CostLedger]:
     )
     server = strat.server_average(params_m)
 
-    n_updates = cfg.n_epochs * updates_per_epoch
-    ledger = CostLedger()
-    ledger.add_periods(strat, n_updates // tau)
+    ledger = _finish_ledger(strat, cfg.n_epochs * updates_per_epoch)
+    return server, jax.tree.map(np.asarray, jax.device_get(metrics)), ledger
+
+
+def _run_fedrl_flat(cfg: FedRLConfig, key) -> tuple[Any, dict, CostLedger]:
+    """Flat-carry path: replicas live as one (m, n) matrix across all scans."""
+    strat = cfg.strategy
+    m, tau = strat.m, strat.tau
+    opt = cfg.optimizer
+    updates_per_epoch = cfg.epoch_len // cfg.minibatch
+
+    key, pk = jax.random.split(key)
+    init = init_policy(pk, OBS_DIM)
+    flat, spec = dispatch.stacked_ravel_spec(
+        jax.tree.map(lambda l: jnp.broadcast_to(l, (m,) + l.shape), init)
+    )
+    opt_state = opt.init(flat) if opt is not None else {}
+
+    def update(carry, _):
+        flat, opt_state, env_state, k, key = carry
+        key, rk = jax.random.split(key)
+        params_m = spec.unravel(flat)   # the rollout/grad closures' tree view
+        env_state, traj = _rollout(cfg, params_m, env_state, rk, cfg.minibatch)
+        grads, losses = _agent_grads(cfg, params_m, traj, env_state)
+        g_flat = jax.vmap(spec.ravel_one)(grads)
+        offset = jnp.mod(k, tau)
+        if opt is None:
+            flat = strat.flat_update(flat, g_flat, offset, cfg.eta)
+        else:
+            flat, opt_state = strat.flat_opt_step(
+                flat, g_flat, offset, cfg.eta, opt, opt_state
+            )
+        k = k + 1
+
+        def do_sync(args):
+            f, s = args
+            row = strat.flat_server_average(f)
+            return (
+                jnp.broadcast_to(row[None, :], f.shape),
+                server_average_state(strat, s),
+            )
+
+        synced = jnp.equal(jnp.mod(k, tau), 0)
+        flat, opt_state = jax.lax.cond(
+            synced, do_sync, lambda args: args, (flat, opt_state)
+        )
+        nas = jnp.mean(traj["rew"])
+        return (flat, opt_state, env_state, k, key), {
+            "nas": nas, "loss": losses.mean(), "synced": synced,
+        }
+
+    def epoch(carry, _):
+        flat, opt_state, k, key = carry
+        key, ek = jax.random.split(key)
+        env_state = env_reset(cfg.env, ek)
+        (flat, opt_state, _, k, key), ms = jax.lax.scan(
+            update, (flat, opt_state, env_state, k, key), None,
+            length=updates_per_epoch,
+        )
+        server = spec.unravel_one(strat.flat_server_average(flat))
+        grad_sq = _eval_grad_norm(cfg, server)
+        out = {
+            "nas": ms["nas"].mean(),
+            "loss": ms["loss"].mean(),
+            "server_grad_sq_norm": grad_sq,
+        }
+        return (flat, opt_state, k, key), out
+
+    carry = (flat, opt_state, jnp.zeros((), jnp.int32), key)
+    (flat, opt_state, k, key), metrics = jax.lax.scan(
+        epoch, carry, None, length=cfg.n_epochs
+    )
+    server = spec.unravel_one(strat.flat_server_average(flat))
+
+    ledger = _finish_ledger(strat, cfg.n_epochs * updates_per_epoch)
     return server, jax.tree.map(np.asarray, jax.device_get(metrics)), ledger
 
 

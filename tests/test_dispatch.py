@@ -57,6 +57,32 @@ def test_make_strategy_passes_backend_through():
 
 # --- flat <-> tree plumbing ---------------------------------------------------
 
+def test_stacked_ravel_spec_views():
+    g = _grads()
+    flat, spec = dispatch.stacked_ravel_spec(g)
+    assert flat.shape == (3, 5 * 7 + 11)
+    one = spec.unravel_one(flat[1])
+    np.testing.assert_array_equal(one["w"], g["w"][1])
+    np.testing.assert_array_equal(one["b"], g["b"][1])
+    np.testing.assert_array_equal(spec.ravel_one(one), flat[1])
+    back = spec.unravel(flat)
+    np.testing.assert_array_equal(back["w"], g["w"])
+
+
+def test_unravel_cache_is_bounded_lru():
+    dispatch.clear_caches()
+    assert len(dispatch._UNRAVEL_CACHE) == 0
+    dispatch.stacked_ravel(_grads())
+    assert len(dispatch._UNRAVEL_CACHE) == 1
+    dispatch.stacked_ravel(_grads(seed=1))  # same structure -> cache hit
+    assert len(dispatch._UNRAVEL_CACHE) == 1
+    for i in range(dispatch._UNRAVEL_CACHE_MAXSIZE + 5):
+        dispatch.stacked_ravel({"x": jnp.zeros((2, i + 1))})
+    assert len(dispatch._UNRAVEL_CACHE) <= dispatch._UNRAVEL_CACHE_MAXSIZE
+    dispatch.clear_caches()
+    assert len(dispatch._UNRAVEL_CACHE) == 0
+
+
 def test_stacked_ravel_roundtrip():
     g = _grads()
     flat, unravel = dispatch.stacked_ravel(g)
@@ -118,6 +144,169 @@ def test_consensus_mix_parity():
     a = dispatch.consensus_mix(g, p, backend="jnp")
     b = dispatch.consensus_mix(g, p, backend="interpret", block_n=32)
     np.testing.assert_allclose(a, b, atol=1e-5)
+
+
+@pytest.mark.parametrize("dtype", [jnp.bfloat16, jnp.float16])
+def test_consensus_mix_low_precision_parity(dtype):
+    """Kernel path must accumulate the gossip matmul in fp32 like the jnp
+    reference — bf16/fp16 gradient buffers must not drift between backends."""
+    m, n = 6, 101
+    topo = T.ring(m)
+    p = jnp.asarray(T.mixing_matrix(topo, 0.25), jnp.float32)
+    g = jax.random.normal(jax.random.key(11), (m, n)).astype(dtype)
+    a = dispatch.consensus_mix(g, p, backend="jnp")
+    b = dispatch.consensus_mix(g, p, backend="interpret", block_n=32)
+    np.testing.assert_array_equal(
+        np.asarray(a, np.float32), np.asarray(b, np.float32)
+    )
+
+
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+def test_decay_accum_low_precision_parity(dtype):
+    acc = jax.random.normal(jax.random.key(0), (77,)).astype(dtype)
+    g = jax.random.normal(jax.random.key(1), (77,)).astype(dtype)
+    a = dispatch.decay_accum(acc, g, 0.3, backend="jnp")
+    b = dispatch.decay_accum(acc, g, 0.3, backend="interpret", block_n=16)
+    if dtype == jnp.bfloat16:
+        # fp32 accumulation then one bf16 rounding: bit-identical paths
+        np.testing.assert_array_equal(
+            np.asarray(a, np.float32), np.asarray(b, np.float32)
+        )
+    else:
+        # fp32: XLA may fuse the FMA differently between paths (1-ulp)
+        np.testing.assert_allclose(a, b, atol=1e-6)
+
+
+# --- row_mean (server averaging, eq. 11) --------------------------------------
+
+@pytest.mark.parametrize("n", [46, 128, 1000])  # includes non-multiple-of-block
+def test_row_mean_parity(n):
+    g = jax.random.normal(jax.random.key(n), (5, n))
+    a = dispatch.row_mean(g, backend="jnp")
+    b = dispatch.row_mean(g, backend="interpret", block_n=32)
+    assert a.shape == (n,)
+    np.testing.assert_allclose(a, b, atol=1e-6)
+    np.testing.assert_allclose(a, jnp.mean(g, axis=0), atol=1e-6)
+
+
+def test_row_mean_bf16_accumulates_fp32():
+    # 33 agents at values that round badly in bf16: an fp32 accumulation of
+    # the mean is exact here, a bf16 one is not.
+    g = jnp.full((33, 40), 0.1, jnp.bfloat16)
+    a = dispatch.row_mean(g, backend="jnp")
+    b = dispatch.row_mean(g, backend="interpret", block_n=16)
+    np.testing.assert_array_equal(
+        np.asarray(a, np.float32), np.asarray(b, np.float32)
+    )
+
+
+def test_row_mean_rejects_1d():
+    with pytest.raises(ValueError):
+        dispatch.row_mean(jnp.zeros(8), backend="jnp")
+
+
+# --- flat_opt_update (fused optimizer pass) -----------------------------------
+
+def _opt_buffers(m=4, n=53, seed=0):
+    ks = jax.random.split(jax.random.key(seed), 3)
+    p = jax.random.normal(ks[0], (m, n))
+    g = jax.random.normal(ks[1], (m, n))
+    w = jax.random.uniform(ks[2], (m,))
+    return p, g, w
+
+
+def test_flat_opt_update_sgd_matches_decay_accum():
+    p, g, w = _opt_buffers()
+    out, state = dispatch.flat_opt_update(p, g, w, {}, kind="sgd", lr=0.1,
+                                          backend="jnp")
+    ref = dispatch.decay_accum(p, g, -0.1 * w, backend="jnp")
+    np.testing.assert_allclose(out, ref, atol=1e-7)
+    assert state == {}
+
+
+@pytest.mark.parametrize("nesterov", [False, True])
+def test_flat_opt_update_momentum_parity(nesterov):
+    p, g, w = _opt_buffers(seed=1)
+    state = {"mu": jnp.zeros(p.shape, jnp.float32)}
+    pa, pb, sa, sb = p, p, dict(state), dict(state)
+    for _ in range(3):
+        pa, sa = dispatch.flat_opt_update(
+            pa, g, w, sa, kind="momentum", lr=0.05, beta=0.9,
+            nesterov=nesterov, backend="jnp")
+        pb, sb = dispatch.flat_opt_update(
+            pb, g, w, sb, kind="momentum", lr=0.05, beta=0.9,
+            nesterov=nesterov, backend="interpret", block_n=16)
+    np.testing.assert_allclose(pa, pb, atol=1e-5)
+    np.testing.assert_allclose(sa["mu"], sb["mu"], atol=1e-5)
+
+
+def test_flat_opt_update_momentum_matches_tree_optimizer():
+    """The flat momentum rule must equal repro.optim.optimizers.momentum
+    applied leaf-wise (with w folded into the grads first)."""
+    from repro.optim.optimizers import momentum as tree_momentum
+
+    p, g, w = _opt_buffers(seed=2)
+    opt = tree_momentum(0.9)
+    tree_state = opt.init(p)
+    flat_state = {"mu": jnp.zeros(p.shape, jnp.float32)}
+    pt, pf = p, p
+    for _ in range(3):
+        wg = g * w[:, None]
+        pt, tree_state = opt.apply(wg, tree_state, pt, 0.05)
+        pf, flat_state = dispatch.flat_opt_update(
+            pf, g, w, flat_state, kind="momentum", lr=0.05, beta=0.9,
+            backend="jnp")
+    np.testing.assert_allclose(pt, pf, atol=1e-6)
+
+
+def test_flat_opt_update_adam_parity():
+    p, g, w = _opt_buffers(seed=3)
+    z = jnp.zeros(p.shape, jnp.float32)
+    sa = {"mu": z, "nu": z, "t": jnp.zeros((), jnp.int32)}
+    sb = {"mu": z, "nu": z, "t": jnp.zeros((), jnp.int32)}
+    pa, pb = p, p
+    for _ in range(3):
+        pa, sa = dispatch.flat_opt_update(pa, g, w, sa, kind="adam", lr=0.01,
+                                          backend="jnp")
+        pb, sb = dispatch.flat_opt_update(pb, g, w, sb, kind="adam", lr=0.01,
+                                          backend="interpret", block_n=16)
+    assert int(sa["t"]) == int(sb["t"]) == 3
+    np.testing.assert_allclose(pa, pb, atol=1e-5)
+    np.testing.assert_allclose(sa["nu"], sb["nu"], atol=1e-5)
+
+
+def test_flat_opt_update_adam_matches_tree_adamw():
+    from repro.optim.optimizers import adamw
+
+    p, g, w = _opt_buffers(seed=4)
+    opt = adamw(b1=0.9, b2=0.95, eps=1e-8)
+    tree_state = opt.init(p)
+    z = jnp.zeros(p.shape, jnp.float32)
+    flat_state = {"mu": z, "nu": z, "t": jnp.zeros((), jnp.int32)}
+    pt, pf = p, p
+    for _ in range(3):
+        wg = g * w[:, None]
+        pt, tree_state = opt.apply(wg, tree_state, pt, 0.01)
+        pf, flat_state = dispatch.flat_opt_update(
+            pf, g, w, flat_state, kind="adam", lr=0.01, b1=0.9, b2=0.95,
+            backend="jnp")
+    np.testing.assert_allclose(pt, pf, atol=1e-6)
+
+
+def test_flat_opt_update_validation():
+    p = jnp.zeros((3, 8))
+    with pytest.raises(ValueError):
+        dispatch.flat_opt_update(p, p, 1.0, {}, kind="rmsprop", lr=0.1)
+    with pytest.raises(ValueError):  # missing state buffer
+        dispatch.flat_opt_update(p, p, 1.0, {}, kind="momentum", lr=0.1,
+                                 backend="jnp")
+    with pytest.raises(ValueError):  # non-fp32 accumulator
+        dispatch.flat_opt_update(
+            p, p, 1.0, {"mu": jnp.zeros((3, 8), jnp.bfloat16)},
+            kind="momentum", lr=0.1, backend="jnp")
+    with pytest.raises(ValueError):  # shape mismatch
+        dispatch.flat_opt_update(p, jnp.zeros((3, 9)), 1.0, {}, kind="sgd",
+                                 lr=0.1, backend="jnp")
 
 
 # --- strategy-level parity (the load-bearing contract) ------------------------

@@ -1,0 +1,240 @@
+"""Flat-carry federated loop: driver-level parity, jaxpr shape, accounting.
+
+The PR-2 contract: on kernel backends both drivers keep the replica state as
+one flat (m, n) matrix across the whole scan — ravel once at run start,
+per-agent tree views only where user closures need them — and the result
+matches the tree-space jnp reference. The jaxpr test pins the structural
+claim: the inner scan body carries no per-step ravel of the *parameters*
+(the gradients the user closure returns are the only thing flattened).
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import topology as T
+from repro.core.decay import exponential_decay
+from repro.core.fmarl import FmarlConfig, run_fmarl
+from repro.core.strategies import ConsensusStrategy, DecayStrategy, make_strategy
+from repro.kernels import dispatch
+from repro.optim.flat import flat_adam, flat_momentum, flat_sgd
+from repro.rl import FIGURE_EIGHT, FedRLConfig, run_fedrl
+
+TAUS = np.array([4, 4, 3, 2, 2, 1])  # A2: non-increasing, heterogeneous
+
+
+def _quadratic_grad(p, k, i, step):
+    g = jax.tree.map(lambda x: x + 0.05 * jax.random.normal(k, x.shape), p)
+    return g, {"loss": sum(jnp.sum(x**2) for x in jax.tree.leaves(p))}
+
+
+def _eval_grad(p, k):
+    return p
+
+
+# n = 8*9 + 7 = 79: deliberately not a multiple of any kernel block_n
+INIT = {"w": jnp.ones((8, 9)), "b": jnp.ones(7)}
+
+
+def _fmarl_strategies():
+    topo = T.ring(6)
+    return {
+        "decay": lambda b: DecayStrategy(
+            tau=4, taus=TAUS, decay=exponential_decay(0.9), backend=b
+        ),
+        "consensus": lambda b: ConsensusStrategy(
+            tau=4, topo=topo, eps=0.3, rounds=2, taus=TAUS, backend=b
+        ),
+    }
+
+
+@pytest.mark.parametrize("name", ["decay", "consensus"])
+def test_fmarl_flat_scan_matches_tree_reference(name):
+    mk = _fmarl_strategies()[name]
+    outs, states = {}, {}
+    for b in ("jnp", "interpret"):
+        cfg = FmarlConfig(strategy=mk(b), eta=0.05, n_periods=5)
+        state, metrics, ledger = run_fmarl(
+            cfg, INIT, _quadratic_grad, jax.random.key(0), _eval_grad
+        )
+        outs[b] = np.asarray(metrics["server_grad_sq_norm"])
+        states[b] = state
+    np.testing.assert_allclose(outs["jnp"], outs["interpret"], rtol=1e-4)
+    # the final replica/server pytrees agree too (flat carry unravels cleanly)
+    for leaf_a, leaf_b in zip(
+        jax.tree.leaves(states["jnp"].params_m),
+        jax.tree.leaves(states["interpret"].params_m),
+    ):
+        np.testing.assert_allclose(leaf_a, leaf_b, atol=1e-5)
+    for leaf_a, leaf_b in zip(
+        jax.tree.leaves(states["jnp"].server_params),
+        jax.tree.leaves(states["interpret"].server_params),
+    ):
+        np.testing.assert_allclose(leaf_a, leaf_b, atol=1e-5)
+
+
+@pytest.mark.parametrize("name", ["decay", "consensus"])
+def test_fedrl_flat_scan_matches_tree_reference(name):
+    topo = T.random_regularish(7, 3, 4, seed=0)
+    builders = {
+        "decay": lambda b: make_strategy(
+            "decay", tau=3, m=7, decay=exponential_decay(0.9), backend=b
+        ),
+        "consensus": lambda b: make_strategy(
+            "consensus", tau=3, topo=topo, eps=0.1, rounds=1, m=7, backend=b
+        ),
+    }
+    outs = {}
+    for b in ("jnp", "interpret"):
+        cfg = FedRLConfig(env=FIGURE_EIGHT, strategy=builders[name](b),
+                          n_epochs=2, epoch_len=60, minibatch=20, eta=3e-3)
+        _, metrics, _ = run_fedrl(cfg, jax.random.key(0))
+        outs[b] = metrics
+    np.testing.assert_allclose(outs["jnp"]["nas"], outs["interpret"]["nas"],
+                               rtol=1e-4)
+    np.testing.assert_allclose(
+        outs["jnp"]["server_grad_sq_norm"],
+        outs["interpret"]["server_grad_sq_norm"],
+        rtol=1e-3,
+    )
+
+
+@pytest.mark.parametrize("opt", [flat_sgd(), flat_momentum(0.9), flat_adam()],
+                         ids=lambda o: o.kind)
+def test_fmarl_optimizer_backends_agree(opt):
+    """The flat optimizer path (momentum/adam fp32 accumulators) is the same
+    on the jnp reference and the interpret kernel path."""
+    outs = {}
+    for b in ("jnp", "interpret"):
+        strat = make_strategy("periodic", tau=3, m=6, backend=b)
+        cfg = FmarlConfig(strategy=strat, eta=0.05, n_periods=4, optimizer=opt)
+        _, metrics, _ = run_fmarl(cfg, INIT, _quadratic_grad,
+                                  jax.random.key(0), _eval_grad)
+        outs[b] = np.asarray(metrics["server_grad_sq_norm"])
+        assert np.all(np.isfinite(outs[b]))
+    np.testing.assert_allclose(outs["jnp"], outs["interpret"], rtol=1e-4)
+
+
+def test_fedrl_optimizer_runs_finite():
+    strat = make_strategy("periodic", tau=3, m=7, backend="jnp")
+    cfg = FedRLConfig(env=FIGURE_EIGHT, strategy=strat, n_epochs=2,
+                      epoch_len=60, minibatch=20, eta=1e-3,
+                      optimizer=flat_adam())
+    _, metrics, _ = run_fedrl(cfg, jax.random.key(0))
+    assert np.all(np.isfinite(metrics["server_grad_sq_norm"]))
+    assert np.all(np.isfinite(metrics["nas"]))
+
+
+# --- structural claim: no per-step params ravel in the scan body ---------------
+
+def test_flat_scan_body_drops_params_ravel():
+    """Count concatenate ops in the scanned step jaxpr: the flat carry keeps
+    exactly the gradient ravel (1 concatenate for a 2-leaf tree), while the
+    PR-1 ravel-per-step form also re-flattened the params every step (2)."""
+    strat = DecayStrategy(tau=4, taus=np.array([4, 2, 1]),
+                          decay=exponential_decay(0.9), backend="interpret")
+    tree = {
+        "w": jax.random.normal(jax.random.key(0), (3, 8, 8)),
+        "b": jax.random.normal(jax.random.key(1), (3, 16)),
+    }
+    flat, spec = dispatch.stacked_ravel_spec(tree)
+
+    def grad_fn(p):
+        return jax.tree.map(lambda x: 0.1 * x + 1.0, p)
+
+    def flat_step(f, offset):
+        g = jax.vmap(lambda row: spec.ravel_one(grad_fn(spec.unravel_one(row))))(f)
+        return strat.flat_update(f, g, offset, 0.1), None
+
+    def ravel_per_step(t, offset):   # the PR-1 hot path, for comparison
+        g = jax.vmap(grad_fn)(t)
+        return strat.local_update(t, g, offset, 0.1), None
+
+    jaxpr_flat = str(jax.make_jaxpr(
+        lambda f: jax.lax.scan(flat_step, f, jnp.arange(4)))(flat))
+    jaxpr_tree = str(jax.make_jaxpr(
+        lambda t: jax.lax.scan(ravel_per_step, t, jnp.arange(4)))(tree))
+    n_flat = jaxpr_flat.count("concatenate")
+    n_tree = jaxpr_tree.count("concatenate")
+    assert n_flat == 1, f"flat scan body should only ravel grads, saw {n_flat}"
+    assert n_tree == 2, f"ravel-per-step comparison changed shape, saw {n_tree}"
+
+
+# --- communication-cost accounting (trailing partial period) -------------------
+
+def test_fedrl_ledger_counts_trailing_partial_period():
+    """6 epochs x 1 update with tau=4 = one full period + 2 trailing local
+    steps; the old ``n_updates // tau`` dropped the trailing C2 events."""
+    strat = make_strategy("periodic", tau=4, m=7)
+    cfg = FedRLConfig(env=FIGURE_EIGHT, strategy=strat, n_epochs=6,
+                      epoch_len=20, minibatch=20, eta=1e-3)
+    _, _, ledger = run_fedrl(cfg, jax.random.key(0))
+    # 6 updates = 1 full period (m uploads, m*tau local steps) + partial of 2
+    assert ledger.c2_events == 7 * 4 + 7 * 2
+    assert ledger.c1_events == 7 + 7  # final aggregation read bills uploads
+
+
+def test_fedrl_ledger_exact_periods_unchanged():
+    strat = make_strategy("periodic", tau=3, m=7)
+    cfg = FedRLConfig(env=FIGURE_EIGHT, strategy=strat, n_epochs=4,
+                      epoch_len=60, minibatch=20, eta=1e-3)
+    _, _, ledger = run_fedrl(cfg, jax.random.key(0))
+    assert ledger.c1_events == 7 * 4
+    assert ledger.c2_events == 7 * 3 * 4
+
+
+def test_fedrl_consensus_partial_period_bills_gossip():
+    topo = T.random_regularish(7, 3, 4, seed=0)
+    strat = make_strategy("consensus", tau=4, topo=topo, eps=0.1, rounds=2, m=7)
+    cfg = FedRLConfig(env=FIGURE_EIGHT, strategy=strat, n_epochs=6,
+                      epoch_len=20, minibatch=20, eta=1e-3)
+    _, _, ledger = run_fedrl(cfg, jax.random.key(0))
+    gossip_per_step = int(topo.degrees.sum()) * 2
+    assert ledger.w1_events == gossip_per_step * 6  # all 6 local steps billed
+    assert ledger.w1_events == ledger.w2_events
+
+
+def test_fmarl_ledger_stays_exact():
+    strat = make_strategy("periodic", tau=5, m=6, backend="interpret")
+    cfg = FmarlConfig(strategy=strat, eta=0.1, n_periods=3)
+    _, _, ledger = run_fmarl(cfg, INIT, _quadratic_grad, jax.random.key(0),
+                             _eval_grad)
+    assert ledger.c1_events == 6 * 3
+    assert ledger.c2_events == 6 * 5 * 3
+
+
+def test_partial_period_accounting_validation():
+    strat = make_strategy("periodic", tau=4, m=3)
+    with pytest.raises(ValueError):
+        strat.comm_events_partial_period(4)  # must be < tau
+    with pytest.raises(ValueError):
+        strat.comm_events_partial_period(-1)
+    assert strat.comm_events_partial_period(0) == {
+        "c1": 0, "c2": 0, "w1": 0, "w2": 0
+    }
+
+
+# --- eval stream decorrelation (the PRNG-key reuse fix) ------------------------
+
+def test_eval_grad_norm_uses_decorrelated_streams():
+    """_eval_grad_norm must split the eval seed: reset and rollout streams
+    were previously the same key, correlating the eval trajectory's action
+    noise with the initial env state."""
+    import repro.rl.fedrl as fedrl_mod
+
+    strat = make_strategy("periodic", tau=2, m=7)
+    cfg = FedRLConfig(env=FIGURE_EIGHT, strategy=strat)
+    server = fedrl_mod.init_policy(jax.random.key(5), fedrl_mod.OBS_DIM)
+    a = fedrl_mod._eval_grad_norm(cfg, server)
+    b = fedrl_mod._eval_grad_norm(cfg, server)
+    np.testing.assert_allclose(a, b)  # still deterministic in eval_seed
+    c = fedrl_mod._eval_grad_norm(
+        dataclasses_replace(cfg, eval_seed=999), server
+    )
+    assert not np.allclose(a, c)  # and actually seed-dependent
+
+
+def dataclasses_replace(cfg, **kw):
+    import dataclasses
+
+    return dataclasses.replace(cfg, **kw)
