@@ -1,0 +1,134 @@
+"""Fleet rollout engine bench: env steps/sec vs (m, B) against the old path.
+
+Times the batched heterogeneous-fleet engine (``repro.rl.rollout``, vmapped
+over m agents x B parallel envs) against the legacy single-shared-env rollout
+(``repro.rl.fedrl._rollout``: one env, m RL vehicles, un-batched) on the
+figure-eight scenario. Throughput is counted in *env steps per second* —
+each of the fleet's m*B environments advancing one tick is one env step, the
+single path advances exactly one env per tick — so the ratio is the real
+experience-collection speedup the batched engine buys on this host.
+
+Measurement: this box is heavily cpu-share-throttled, so the two sides of
+each comparison are timed *interleaved* (alternating rounds, best-of) —
+sequential blocks land in different throttling windows and skew the ratio
+either way by 30%+.
+
+Emits the run.py ``name,us_per_call,derived`` CSV lines and writes
+``experiments/bench/rollout_fleet.json``.
+"""
+from __future__ import annotations
+
+import json
+import os
+import time
+
+import jax
+import jax.numpy as jnp
+
+from benchmarks.common import OUT_DIR, emit
+from repro.core.strategies import make_strategy
+from repro.rl import FIGURE_EIGHT, FedRLConfig, fleet_reset, fleet_rollout
+from repro.rl.env import OBS_DIM, env_reset, perturb_params
+from repro.rl.fedrl import _rollout
+from repro.rl.policy import init_policy
+
+M_SWEEP = (5, 7)
+B_SWEEP = (1, 4, 8)
+N_STEPS = 256  # long enough that per-call dispatch overhead is noise
+HETERO = 0.2
+REPEATS = 4   # interleaved best-of rounds
+
+
+def _policy_m(m):
+    pol = init_policy(jax.random.key(2), OBS_DIM)
+    return jax.tree.map(lambda l: jnp.broadcast_to(l, (m,) + l.shape), pol)
+
+
+def _single_fn():
+    """Legacy path: one shared env, m = n_rl agents, no batching."""
+    env = FIGURE_EIGHT
+    cfg = FedRLConfig(env=env, strategy=make_strategy("sync", m=env.n_rl,
+                                                      backend="jnp"))
+    params_m = _policy_m(env.n_rl)
+    state = env_reset(env, jax.random.key(1))
+
+    @jax.jit
+    def roll(state, key):
+        state, traj = _rollout(cfg, params_m, state, key, N_STEPS)
+        return state, traj["rew"]
+
+    return roll, state
+
+
+def _fleet_fn(m, b):
+    env = FIGURE_EIGHT
+    params_m = perturb_params(env, jax.random.key(0), m, HETERO)
+    pol_m = _policy_m(m)
+    state = fleet_reset(env, params_m, jax.random.key(1), b)
+
+    @jax.jit
+    def roll(state, key):
+        state, traj = fleet_rollout(env, params_m, pol_m, state, key, N_STEPS)
+        return state, traj["rew"]
+
+    return roll, state
+
+
+def _interleaved_best_us(sides, iters):
+    """Best per-call us for each (fn, arg) side, alternating rounds."""
+    key = jax.random.key(3)
+    for fn, arg in sides:
+        jax.block_until_ready(fn(arg, key))  # compile
+    best = [float("inf")] * len(sides)
+    for _ in range(REPEATS):
+        for i, (fn, arg) in enumerate(sides):
+            t0 = time.perf_counter()
+            for _ in range(iters):
+                out = fn(arg, key)
+            jax.block_until_ready(out)
+            best[i] = min(best[i], (time.perf_counter() - t0) / iters * 1e6)
+    return best
+
+
+def run(quick: bool = False) -> None:
+    iters = 2 if quick else 4
+    single = _single_fn()
+    rows = []
+    for m in M_SWEEP[:1] if quick else M_SWEEP:
+        for b in B_SWEEP[:2] if quick else B_SWEEP:
+            us_single, us_fleet = _interleaved_best_us(
+                [single, _fleet_fn(m, b)], iters
+            )
+            single_sps = N_STEPS / (us_single * 1e-6)
+            sps = N_STEPS * m * b / (us_fleet * 1e-6)
+            row = {
+                "m": m,
+                "B": b,
+                "hetero": HETERO,
+                "steps_per_sec_fleet": sps,
+                "steps_per_sec_single": single_sps,
+                # > 1 means the batched engine collects experience faster
+                "speedup_vs_single": sps / single_sps,
+            }
+            rows.append(row)
+            emit(f"rollout_fleet/m{m}/B{b}", us_fleet,
+                 f"{sps:.0f} steps/s x{row['speedup_vs_single']:.1f} "
+                 f"(single {single_sps:.0f})")
+    os.makedirs(OUT_DIR, exist_ok=True)
+    path = os.path.join(OUT_DIR, "rollout_fleet.json")
+    with open(path, "w") as f:
+        json.dump(
+            {
+                "device_backend": jax.default_backend(),
+                "scenario": "figure_eight",
+                "n_steps": N_STEPS,
+                "rows": rows,
+            },
+            f,
+            indent=2,
+        )
+    print(f"# wrote {path}")
+
+
+if __name__ == "__main__":
+    run(quick=True)

@@ -19,7 +19,7 @@ def main() -> None:
                     help="reduced configs (CI-speed)")
     ap.add_argument("--only", default=None,
                     help="run a single bench: table2|fig4|fig5|fig6|fig789|"
-                         "bounds|roofline|kernels|dispatch")
+                         "bounds|roofline|kernels|dispatch|rollout_fleet")
     args = ap.parse_args()
 
     from benchmarks import (  # imported lazily so --only is cheap
@@ -29,6 +29,7 @@ def main() -> None:
         fig6_consensus,
         fig789_optimizers,
         kernel_bench,
+        rollout_fleet_bench,
         roofline_bench,
         strategy_dispatch_bench,
         table2,
@@ -38,6 +39,7 @@ def main() -> None:
         "bounds": bounds_bench.run,          # paper §V analysis
         "kernels": kernel_bench.run,         # kernel layer
         "dispatch": strategy_dispatch_bench.run,  # jnp vs kernel strategy step
+        "rollout_fleet": rollout_fleet_bench.run,  # batched fleet vs single env
         "roofline": roofline_bench.run,      # §Roofline from dry-run artifacts
         "table2": table2.run,                # paper Table II
         "fig4": fig4_variation.run,          # paper Fig. 4

@@ -1,9 +1,17 @@
-"""End-to-end driver (paper's own experiment): federated MARL on the
-figure-eight traffic env — train shared policies for a few hundred periods
-with periodic / decay / consensus aggregation and compare expected gradient
-norm + NAS (the Table II/Fig. 4-6 quantities).
+"""End-to-end driver (paper's own experiment): federated MARL on the traffic
+scenarios — train shared policies for a few hundred periods with periodic /
+decay / consensus aggregation and compare expected gradient norm + NAS (the
+Table II/Fig. 4-6 quantities).
 
   PYTHONPATH=src python examples/fmarl_traffic.py [--epochs 60] [--scenario merge]
+
+The heterogeneous-fleet path (the paper's asynchronous-MDP setting) switches
+on with ``--num-envs``:
+
+  # 7 agents, each owning 8 parallel copies of its own perturbed MDP,
+  # kernel-dispatch path forced through interpret mode:
+  PYTHONPATH=src python examples/fmarl_traffic.py \
+      --num-envs 8 --hetero 0.2 --backend interpret
 """
 import argparse
 
@@ -13,42 +21,71 @@ import numpy as np
 from repro.core import make_strategy, uniform_taus
 from repro.core.decay import exponential_decay
 from repro.core import topology as T
-from repro.rl import FIGURE_EIGHT, MERGE, FedRLConfig, run_fedrl
+from repro.rl import FedRLConfig, get_scenario, make_fleet, run_fedrl
 from repro.rl.fedrl import expected_gradient_norm
+from repro.rl.scenarios import SCENARIOS
 
 
 def main():
     ap = argparse.ArgumentParser()
     ap.add_argument("--epochs", type=int, default=40)
     ap.add_argument("--scenario", default="figure_eight",
-                    choices=["figure_eight", "merge"])
+                    choices=sorted(SCENARIOS))
     ap.add_argument("--algo", default="ppo", choices=["ppo", "trpo", "tac"])
+    ap.add_argument("--num-envs", type=int, default=0,
+                    help="B parallel envs per agent; 0 = legacy shared env")
+    ap.add_argument("--hetero", type=float, default=None,
+                    help="per-agent param perturbation scale (fleet mode; "
+                         "default: the scenario's preset)")
+    ap.add_argument("--backend", default="auto",
+                    choices=["auto", "jnp", "pallas", "interpret"],
+                    help="dispatch backend for the federated hot path")
+    ap.add_argument("--agents", type=int, default=0,
+                    help="fleet size m (fleet mode; default: the scenario's "
+                         "RL-vehicle count, matching the paper's Table II)")
     args = ap.parse_args()
 
-    env = FIGURE_EIGHT if args.scenario == "figure_eight" else MERGE
-    m, tau = env.n_rl, 10
-    topo = (T.random_regularish(m, 3, min(4, m - 1), seed=0)
-            if m > 4 else T.chain(m))
-    eps = 0.9 / topo.max_degree
+    env = get_scenario(args.scenario).cfg
+    fleet = args.num_envs > 0
+    if not fleet and (args.hetero is not None or args.agents):
+        ap.error("--hetero/--agents only apply to the fleet path; "
+                 "add --num-envs >= 1")
+    m = (args.agents or env.n_rl) if fleet else env.n_rl
+    env_params = None
+    if fleet:
+        env, env_params = make_fleet(args.scenario, m, jax.random.key(42),
+                                     hetero=args.hetero)
+    tau = 10
     runs = {
-        "IRL tau=1": make_strategy("sync", m=m),
-        "IRL tau=10": make_strategy("periodic", tau=tau, m=m),
+        "IRL tau=1": make_strategy("sync", m=m, backend=args.backend),
+        "IRL tau=10": make_strategy("periodic", tau=tau, m=m,
+                                    backend=args.backend),
         "IRL tau=1~10 (variation)": make_strategy(
-            "periodic", tau=tau, taus=uniform_taus(1, tau, m, seed=0)),
+            "periodic", tau=tau, taus=uniform_taus(1, tau, m, seed=0),
+            backend=args.backend),
         "DIRL lam=0.95": make_strategy(
             "decay", tau=tau, taus=uniform_taus(1, tau, m, seed=0),
-            decay=exponential_decay(0.95)),
-        f"CIRL E=1 mu2={T.mu2(topo):.2f}": make_strategy(
-            "consensus", tau=tau, topo=topo, eps=eps, rounds=1, m=m),
+            decay=exponential_decay(0.95), backend=args.backend),
     }
-    print(f"scenario={env.name} agents={m} algo={args.algo} "
-          f"epochs={args.epochs}")
+    if m >= 2:  # gossip needs a topology (ring_attenuation has n_rl=1)
+        topo = (T.random_regularish(m, 3, min(4, m - 1), seed=0)
+                if m > 4 else T.chain(m))
+        eps = 0.9 / topo.max_degree
+        runs[f"CIRL E=1 mu2={T.mu2(topo):.2f}"] = make_strategy(
+            "consensus", tau=tau, topo=topo, eps=eps, rounds=1, m=m,
+            backend=args.backend)
+    mode = (f"fleet m={m} B={args.num_envs} hetero="
+            f"{args.hetero if args.hetero is not None else 'preset'}"
+            if fleet else f"shared-env m={m}")
+    print(f"scenario={env.name} {mode} algo={args.algo} "
+          f"backend={args.backend} epochs={args.epochs}")
     print(f"{'method':28s} {'E||gradF||^2':>12s} {'NAS(start->end)':>18s} "
           f"{'C1':>7s} {'W1':>8s}")
     for name, strat in runs.items():
         cfg = FedRLConfig(env=env, strategy=strat, eta=3e-3,
                           n_epochs=args.epochs, epoch_len=100, minibatch=20,
-                          algo=args.algo)
+                          algo=args.algo, num_envs=args.num_envs,
+                          env_params=env_params)
         _, metrics, ledger = run_fedrl(cfg, jax.random.key(0))
         nas0 = float(np.mean(metrics["nas"][:3]))
         nas1 = float(np.mean(metrics["nas"][-3:]))

@@ -56,6 +56,14 @@ class FmarlConfig:
     n_periods: int
     eval_every: int = 1          # evaluate server grad-norm every this many periods
     optimizer: Optional[FlatOptimizer] = None  # None = plain SGD (reference)
+    # storage dtype of the flat params/grad buffers (None = fp32); e.g.
+    # "bfloat16" halves carry bandwidth — dispatch primitives and optimizer
+    # moments still accumulate in fp32, closures see an fp32 tree view.
+    buffer_dtype: Optional[str] = None
+
+    def __post_init__(self):
+        if self.buffer_dtype is not None:
+            jnp.dtype(self.buffer_dtype)  # fail fast on typos
 
 
 def _broadcast(server_params, m: int):
@@ -65,12 +73,14 @@ def _broadcast(server_params, m: int):
 
 
 def _use_flat_carry(cfg) -> bool:
-    """Flat (m, n) carry on kernel backends and whenever an optimizer is set
-    (the fused optimizer updates only exist on flat buffers — the jnp backend
-    then runs the fp32 flat reference ops)."""
+    """Flat (m, n) carry on kernel backends and whenever an optimizer or a
+    non-default buffer dtype is set (the fused optimizer updates and the bf16
+    storage mode only exist on flat buffers — the jnp backend then runs the
+    fp32 flat reference ops)."""
     return (
         dispatch.is_kernel_backend(cfg.strategy.backend)
         or cfg.optimizer is not None
+        or cfg.buffer_dtype is not None
     )
 
 
@@ -146,9 +156,16 @@ def _run_fmarl_flat(cfg, init_params, local_grad_fn, key, eval_grad_fn):
     strat = cfg.strategy
     m, tau = strat.m, strat.tau
     opt = cfg.optimizer
+    dtype = jnp.dtype(cfg.buffer_dtype) if cfg.buffer_dtype is not None else None
     flat, spec = dispatch.stacked_ravel_spec(_broadcast(init_params, m))
+    if dtype is not None:
+        flat = flat.astype(dtype)
     opt_state = opt.init(flat) if opt is not None else {}
     agent_ids = jnp.arange(m)
+
+    def view_one(row):
+        """fp32 per-agent tree view of one flat carry row."""
+        return spec.unravel_one(dispatch.compute_view(row, dtype))
 
     def local_step(carry, offset):
         flat, opt_state, step, key = carry
@@ -156,10 +173,12 @@ def _run_fmarl_flat(cfg, init_params, local_grad_fn, key, eval_grad_fn):
         keys = jax.random.split(sub, m)
 
         def one(row, k, i):
-            g_tree, aux = local_grad_fn(spec.unravel_one(row), k, i, step)
+            g_tree, aux = local_grad_fn(view_one(row), k, i, step)
             return spec.ravel_one(g_tree), aux
 
         g_flat, aux = jax.vmap(one)(flat, keys, agent_ids)
+        if dtype is not None:
+            g_flat = g_flat.astype(dtype)
         if opt is None:
             flat = strat.flat_update(flat, g_flat, offset, cfg.eta)
         else:
@@ -180,7 +199,7 @@ def _run_fmarl_flat(cfg, init_params, local_grad_fn, key, eval_grad_fn):
         metrics = {"mean_aux": jax.tree.map(jnp.mean, aux)}
         if eval_grad_fn is not None:
             key, sub = jax.random.split(key)
-            g = eval_grad_fn(spec.unravel_one(row), sub)
+            g = eval_grad_fn(view_one(row), sub)
             metrics["server_grad_sq_norm"] = tree_l2_norm(g) ** 2
         return (flat, opt_state, step, key), metrics
 
@@ -189,9 +208,10 @@ def _run_fmarl_flat(cfg, init_params, local_grad_fn, key, eval_grad_fn):
         period, carry, None, length=cfg.n_periods
     )
 
+    flat32 = dispatch.compute_view(flat, dtype)
     final_state = FmarlState(
-        params_m=spec.unravel(flat),
-        server_params=spec.unravel_one(flat[0]),
+        params_m=spec.unravel(flat32),
+        server_params=spec.unravel_one(flat32[0]),
         step=step,
         key=key,
     )

@@ -140,6 +140,17 @@ def stacked_ravel_spec(tree_m):
     return flat, spec
 
 
+def compute_view(buf, storage_dtype):
+    """fp32 compute view of a flat carry buffer.
+
+    The single policy point for the reduced-precision buffer mode: when a
+    storage dtype is set (e.g. bf16 carries), user-facing tree views upcast
+    to fp32 before unraveling; with the default fp32 storage it is the
+    identity. Both drivers route every unravel through this.
+    """
+    return buf.astype(jnp.float32) if storage_dtype is not None else buf
+
+
 def stacked_ravel(tree_m):
     """Flatten an (m, ...)-leaved replica pytree to an ``(m, n)`` matrix.
 

@@ -1,22 +1,55 @@
-from repro.rl.env import EnvConfig, FIGURE_EIGHT, MERGE, env_reset, env_step, get_obs
+from repro.rl.env import (
+    EnvConfig,
+    EnvParams,
+    FIGURE_EIGHT,
+    MERGE,
+    broadcast_params,
+    env_reset,
+    env_step,
+    get_obs,
+    perturb_params,
+    stack_params,
+)
 from repro.rl.policy import init_policy, policy_apply, policy_value
-from repro.rl.ppo import gae, ppo_loss, trpo_kl_loss, tac_loss
+from repro.rl.ppo import gae, minibatch_epoch_grad, ppo_loss, tac_loss, trpo_kl_loss
+from repro.rl.rollout import (
+    fleet_flatten,
+    fleet_gae,
+    fleet_last_values,
+    fleet_reset,
+    fleet_rollout,
+)
+from repro.rl.scenarios import SCENARIOS, Scenario, get_scenario, make_fleet
 from repro.rl.fedrl import FedRLConfig, run_fedrl
 
 __all__ = [
     "EnvConfig",
+    "EnvParams",
     "FIGURE_EIGHT",
     "FedRLConfig",
     "MERGE",
+    "SCENARIOS",
+    "Scenario",
+    "broadcast_params",
     "env_reset",
     "env_step",
+    "fleet_flatten",
+    "fleet_gae",
+    "fleet_last_values",
+    "fleet_reset",
+    "fleet_rollout",
     "gae",
     "get_obs",
+    "get_scenario",
     "init_policy",
+    "make_fleet",
+    "minibatch_epoch_grad",
+    "perturb_params",
     "policy_apply",
     "policy_value",
     "ppo_loss",
     "run_fedrl",
+    "stack_params",
     "tac_loss",
     "trpo_kl_loss",
 ]

@@ -11,13 +11,34 @@ scenarios (documented in DESIGN.md §3):
 * MERGE — 50 vehicles on a longer ring with a periodic slow zone emulating
   merge friction; 5 RL-controlled.
 
+Further presets (ring attenuation / mixed-v_max fleets) live in
+``repro.rl.scenarios``.
+
 Collisions (gap < min_gap) force a brake-slam on the offender and incur a
 penalty, as in the paper's setup.
+
+Static/dynamic split
+--------------------
+
+``EnvConfig`` holds only *static structure* — scenario name, vehicle count,
+which vehicles are RL-controlled — plus Python-float defaults for the
+dynamics. The dynamics themselves live in :class:`EnvParams`, a pytree of jnp
+scalars, so every env function vmaps over stacked parameter axes:
+
+    params_m = perturb_params(cfg, key, m, scale=0.2)   # (m,) leaves
+    reset = jax.vmap(lambda p, k: env_reset(cfg, k, params=p))
+
+is a fleet of m *heterogeneous* MDPs (different ``zone_vmax``, IDM constants,
+``dt`` — the paper's asynchronous-MDP knob), and a second vmap over a (B,)
+axis gives B parallel rollout envs per agent (see ``repro.rl.rollout``).
+All three entry points (``env_reset`` / ``env_step`` / ``get_obs``) take an
+optional ``params``; omitting it uses ``cfg.default_params()`` so existing
+single-env call sites are unchanged.
 """
 from __future__ import annotations
 
 import dataclasses
-from typing import NamedTuple
+from typing import NamedTuple, Optional, Sequence
 
 import jax
 import jax.numpy as jnp
@@ -25,8 +46,42 @@ import jax.numpy as jnp
 OBS_DIM = 6
 
 
+class EnvParams(NamedTuple):
+    """Dynamic environment parameters: a pytree of jnp scalars (or stacked
+    (m,)/(m, B) arrays under vmap). Everything the physics reads per step."""
+
+    length: jnp.ndarray        # ring circumference (m)
+    dt: jnp.ndarray
+    v_max: jnp.ndarray
+    a_max: jnp.ndarray         # RL acceleration scale (m/s^2)
+    min_gap: jnp.ndarray       # collision threshold (m)
+    crash_penalty: jnp.ndarray
+    # IDM params for background vehicles
+    idm_v0: jnp.ndarray
+    idm_T: jnp.ndarray
+    idm_a: jnp.ndarray
+    idm_b: jnp.ndarray
+    idm_s0: jnp.ndarray
+    # bottleneck: [start, end) zone with reduced speed limit
+    zone_start: jnp.ndarray
+    zone_end: jnp.ndarray
+    zone_vmax: jnp.ndarray
+
+
+# EnvParams fields that make physical sense to perturb per agent when building
+# a heterogeneous fleet (the asynchronous-MDP knob). Structure stays static.
+HETERO_FIELDS = ("dt", "v_max", "idm_v0", "idm_T", "idm_a", "idm_b", "zone_vmax")
+
+
 @dataclasses.dataclass(frozen=True)
 class EnvConfig:
+    """Static scenario structure + Python-float defaults for the dynamics.
+
+    The fields below ``rl_indices`` are *defaults*: ``default_params()``
+    packs them into an :class:`EnvParams` pytree, which is what the physics
+    actually consumes (and what heterogeneous fleets perturb per agent).
+    """
+
     name: str
     n_vehicles: int
     rl_indices: tuple          # which vehicles are RL-controlled
@@ -50,6 +105,56 @@ class EnvConfig:
     @property
     def n_rl(self) -> int:
         return len(self.rl_indices)
+
+    def default_params(self) -> EnvParams:
+        """The scalar defaults as an EnvParams pytree of f32 jnp scalars."""
+        return EnvParams(**{
+            f: jnp.asarray(getattr(self, f), jnp.float32)
+            for f in EnvParams._fields
+        })
+
+
+def _resolve(cfg: EnvConfig, params: Optional[EnvParams]) -> EnvParams:
+    return params if params is not None else cfg.default_params()
+
+
+def stack_params(params_list: Sequence[EnvParams]) -> EnvParams:
+    """Stack per-agent EnvParams into one pytree with a leading (m,) axis."""
+    return jax.tree.map(lambda *ls: jnp.stack(ls), *params_list)
+
+
+def broadcast_params(params: EnvParams, shape: tuple) -> EnvParams:
+    """Tile an EnvParams pytree along new leading axes (e.g. (m,) or (m, B))."""
+    return jax.tree.map(
+        lambda l: jnp.broadcast_to(l, tuple(shape) + l.shape), params
+    )
+
+
+def perturb_params(
+    cfg: EnvConfig,
+    key,
+    m: int,
+    scale: float,
+    fields: Sequence[str] = HETERO_FIELDS,
+) -> EnvParams:
+    """Heterogeneous fleet builder: (m,)-stacked EnvParams, each listed field
+    multiplied per agent by ``1 + scale * U(-1, 1)`` (floored at 0.1 so dt
+    and IDM constants stay physical). ``scale=0`` returns m identical copies.
+    """
+    base = cfg.default_params()
+    fields = tuple(fields)
+    unknown = set(fields) - set(EnvParams._fields)
+    if unknown:
+        raise ValueError(f"perturb_params: unknown fields {sorted(unknown)}")
+    keys = dict(zip(fields, jax.random.split(key, len(fields))))
+    out = {}
+    for f in EnvParams._fields:
+        v = jnp.broadcast_to(getattr(base, f), (m,))
+        if f in keys and scale:
+            u = jax.random.uniform(keys[f], (m,), minval=-1.0, maxval=1.0)
+            v = v * jnp.maximum(1.0 + scale * u, 0.1)
+        out[f] = v
+    return EnvParams(**out)
 
 
 FIGURE_EIGHT = EnvConfig(
@@ -81,75 +186,95 @@ class EnvState(NamedTuple):
     crashed: jnp.ndarray  # () bool
 
 
-def env_reset(cfg: EnvConfig, key) -> EnvState:
+def env_reset(cfg: EnvConfig, key, params: Optional[EnvParams] = None) -> EnvState:
+    p = _resolve(cfg, params)
     n = cfg.n_vehicles
-    spacing = cfg.length / n
+    spacing = p.length / n
     jitter = jax.random.uniform(key, (n,), minval=-0.2, maxval=0.2) * spacing
-    x = jnp.sort((jnp.arange(n) * spacing + jitter) % cfg.length)
+    x = jnp.sort((jnp.arange(n) * spacing + jitter) % p.length)
     v = jnp.zeros(n) + 0.5
     return EnvState(x=x, v=v, crashed=jnp.zeros((), bool))
 
 
-def _gaps(cfg: EnvConfig, x):
-    """Leader gap per vehicle on the ring (order-preserving by construction)."""
-    order = jnp.argsort(x)
-    x_sorted = x[order]
-    lead_sorted = jnp.roll(x_sorted, -1)
-    gap_sorted = (lead_sorted - x_sorted) % cfg.length
-    gaps = jnp.zeros_like(x).at[order].set(gap_sorted)
-    leader = jnp.zeros(cfg.n_vehicles, jnp.int32).at[order].set(jnp.roll(order, -1))
-    follower = jnp.zeros(cfg.n_vehicles, jnp.int32).at[order].set(jnp.roll(order, 1))
+def _gaps(cfg: EnvConfig, p: EnvParams, x):
+    """Leader gap per vehicle on the ring.
+
+    Ring order is invariant by construction: ``env_reset`` sorts positions so
+    vehicle i's leader is i+1 (mod n) forever — vehicles emergency-brake
+    before they could cross. That makes the gap computation a static roll +
+    modulo (no per-step argsort/scatter), which is what lets the fleet engine
+    vectorize across thousands of batched envs; the values are identical to
+    the former sort-based form whenever the order invariant holds.
+    """
+    n = cfg.n_vehicles
+    idx = jnp.arange(n, dtype=jnp.int32)
+    leader = jnp.roll(idx, -1)
+    follower = jnp.roll(idx, 1)
+    gaps = (x[leader] - x) % p.length
     return gaps, leader, follower
 
 
-def _idm_accel(cfg: EnvConfig, v, gap, v_lead):
+def _idm_accel(p: EnvParams, v, gap, v_lead):
     dv = v - v_lead
-    s_star = cfg.idm_s0 + v * cfg.idm_T + v * dv / (2.0 * jnp.sqrt(cfg.idm_a * cfg.idm_b))
+    s_star = p.idm_s0 + v * p.idm_T + v * dv / (2.0 * jnp.sqrt(p.idm_a * p.idm_b))
     s_star = jnp.maximum(s_star, 0.0)
-    return cfg.idm_a * (1.0 - (v / cfg.idm_v0) ** 4 - (s_star / jnp.maximum(gap, 0.1)) ** 2)
+    return p.idm_a * (1.0 - (v / p.idm_v0) ** 4 - (s_star / jnp.maximum(gap, 0.1)) ** 2)
 
 
-def _zone_limit(cfg: EnvConfig, x):
-    inz = (x >= cfg.zone_start) & (x < cfg.zone_end)
-    return jnp.where(inz, cfg.zone_vmax, cfg.v_max)
+def _zone_limit(p: EnvParams, x):
+    inz = (x >= p.zone_start) & (x < p.zone_end)
+    return jnp.where(inz, p.zone_vmax, p.v_max)
 
 
-def get_obs(cfg: EnvConfig, state: EnvState) -> jnp.ndarray:
+def get_obs(cfg: EnvConfig, state: EnvState,
+            params: Optional[EnvParams] = None) -> jnp.ndarray:
     """(n_rl, 6): [own pos/L, own v/vmax, lead gap/L, lead v/vmax, fol gap/L, fol v/vmax]."""
-    gaps, leader, follower = _gaps(cfg, state.x)
+    p = _resolve(cfg, params)
+    gaps, leader, follower = _gaps(cfg, p, state.x)
     idx = jnp.asarray(cfg.rl_indices)
     fol_gap = gaps[follower][idx]
     return jnp.stack(
         [
-            state.x[idx] / cfg.length,
-            state.v[idx] / cfg.v_max,
-            gaps[idx] / cfg.length,
-            state.v[leader[idx]] / cfg.v_max,
-            fol_gap / cfg.length,
-            state.v[follower[idx]] / cfg.v_max,
+            state.x[idx] / p.length,
+            state.v[idx] / p.v_max,
+            gaps[idx] / p.length,
+            state.v[leader[idx]] / p.v_max,
+            fol_gap / p.length,
+            state.v[follower[idx]] / p.v_max,
         ],
         axis=-1,
     )
 
 
-def env_step(cfg: EnvConfig, state: EnvState, rl_accel):
+def env_step(cfg: EnvConfig, state: EnvState, rl_accel,
+             params: Optional[EnvParams] = None):
     """rl_accel: (n_rl,) in [-1, 1]. Returns (state, reward, crashed_now)."""
-    gaps, leader, _ = _gaps(cfg, state.x)
-    accel = _idm_accel(cfg, state.v, gaps, state.v[leader])
+    p = _resolve(cfg, params)
+    gaps, leader, _ = _gaps(cfg, p, state.x)
+    accel = _idm_accel(p, state.v, gaps, state.v[leader])
     idx = jnp.asarray(cfg.rl_indices)
-    accel = accel.at[idx].set(jnp.clip(rl_accel, -1.0, 1.0) * cfg.a_max)
+    accel = accel.at[idx].set(jnp.clip(rl_accel, -1.0, 1.0) * p.a_max)
 
     # emergency brake if about to collide (paper: slam brakes before crash)
-    ttc_brake = gaps < (cfg.min_gap + state.v * cfg.dt * 2.0)
-    accel = jnp.where(ttc_brake, -cfg.idm_b * 2.0, accel)
+    ttc_brake = gaps < (p.min_gap + state.v * p.dt * 2.0)
+    accel = jnp.where(ttc_brake, -p.idm_b * 2.0, accel)
 
-    v = jnp.clip(state.v + accel * cfg.dt, 0.0, _zone_limit(cfg, state.x))
-    x = (state.x + v * cfg.dt) % cfg.length
+    v = jnp.clip(state.v + accel * p.dt, 0.0, _zone_limit(p, state.x))
+    # No-overtaking guard: cap speed so a vehicle cannot cross its leader in
+    # one step — this makes the static ring order of _gaps an invariant
+    # rather than an assumption. The bound only binds inside the crash band
+    # (gap < ~v*dt), where the emergency brake has already fired.
+    v = jnp.minimum(v, gaps / p.dt + v[leader])
+    x = (state.x + v * p.dt) % p.length
 
-    new_gaps, _, _ = _gaps(cfg, x)
-    crashed_now = jnp.any(new_gaps < cfg.min_gap * 0.5)
+    new_gaps, _, _ = _gaps(cfg, p, x)
+    # A residual crossing is still possible when the leader itself was
+    # clamped below its one-pass candidate speed; latch it as a crash (the
+    # wrapped modulo gap would otherwise read ~length and hide it).
+    crossed = gaps + (v[leader] - v) * p.dt < 0.0
+    crashed_now = jnp.any(new_gaps < p.min_gap * 0.5) | jnp.any(crossed)
     crashed = state.crashed | crashed_now
     # NAS reward shared by the team, zeroed after a crash
-    nas = jnp.mean(v) / cfg.v_max
-    reward = jnp.where(crashed, -cfg.crash_penalty, nas)
+    nas = jnp.mean(v) / p.v_max
+    reward = jnp.where(crashed, -p.crash_penalty, nas)
     return EnvState(x=x, v=v, crashed=crashed), reward, crashed_now

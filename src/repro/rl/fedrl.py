@@ -1,23 +1,34 @@
 """Federated MARL driver: paper Algorithms 1 & 2 on the traffic envs.
 
-m federated agents = the RL-controlled vehicles. Each agent owns a policy
-replica (leading axis m); one shared environment is stepped with every
-vehicle acting under *its own* current replica (exactly the paper's setting —
-agents interact through traffic while learning locally). Every P transitions
-each agent takes one local SGD step on its own minibatch; the strategy applies
-variation masks / decay / consensus gossip; every tau local updates the
-virtual agent averages the replicas (eq. 11).
+Two rollout regimes share the same federated machinery:
 
-The whole run is one jitted scan (epochs x updates x P env steps), so the
-paper-scale experiment runs in seconds-to-minutes on CPU.
+* **Legacy shared env** (``num_envs=0``, the default): m federated agents =
+  the RL-controlled vehicles of ONE environment. Every vehicle acts under its
+  own current replica (agents interact through traffic while learning
+  locally). This path is bit-identical to the original driver.
+* **Heterogeneous fleet** (``num_envs >= 1`` or ``env_params`` set): agent i
+  owns its *own* environment — an ``EnvParams`` row, possibly perturbed per
+  agent (the paper's asynchronous/heterogeneous-MDP setting) — with B
+  parallel rollout copies stepped by ``repro.rl.rollout``. Trajectory
+  buffers come back shaped (m, B, P, ...), and each local update runs the
+  PPO minibatch-epoch loop (``ppo_epochs`` x ``n_minibatches``) over the
+  B*P*n_rl transitions, reported to the strategy as a pseudo-gradient.
+
+Every P transitions each agent takes one local update on its own data; the
+strategy applies variation masks / decay / consensus gossip; every tau local
+updates the virtual agent averages the replicas (eq. 11). The whole run is
+one jitted scan (epochs x updates x P env steps).
 
 Carry layouts mirror ``repro.core.fmarl``: the jnp backend with plain SGD
 keeps the original tree-space reference (bit-identical); kernel backends —
-or any run with ``cfg.optimizer`` set — keep the policy replicas as one flat
-``(m, n)`` matrix across every scan. Each update step unravels one cached
-tree view for the rollout/grad closures and ravels only the gradients back;
-the local update, the periodic sync (``row_mean``), and the optimizer
-accumulators all stay flat through the dispatch layer.
+or any run with ``cfg.optimizer`` or ``cfg.buffer_dtype`` set — keep the
+policy replicas as one flat ``(m, n)`` matrix across every scan. Each update
+step unravels one cached tree view for the rollout/grad closures and ravels
+only the gradients back; the local update, the periodic sync (``row_mean``),
+and the optimizer accumulators all stay flat through the dispatch layer.
+With ``buffer_dtype="bfloat16"`` the flat params/grad buffers are stored in
+bf16 end to end (the dispatch primitives and optimizer moments still
+accumulate in fp32; closures see an fp32 tree view).
 """
 from __future__ import annotations
 
@@ -29,13 +40,29 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.core.accounting import CostLedger
+from repro.core.fmarl import _use_flat_carry
 from repro.core.strategies import AggregationStrategy
 from repro.kernels import dispatch
 from repro.optim.flat import FlatOptimizer, server_average_state
-from repro.rl.env import EnvConfig, env_reset, env_step, get_obs
+from repro.rl.env import (
+    EnvConfig,
+    EnvParams,
+    broadcast_params,
+    env_reset,
+    env_step,
+    get_obs,
+)
 from repro.rl.policy import init_policy, policy_value, sample_action
-from repro.rl.ppo import LOSSES, gae
+from repro.rl.ppo import LOSSES, gae, minibatch_epoch_grad
 from repro.rl.env import OBS_DIM
+from repro.rl.rollout import (
+    fleet_flatten,
+    fleet_gae,
+    fleet_last_values,
+    fleet_reset,
+    fleet_rollout,
+)
+from repro.sharding import shard_agents
 from repro.utils.pytree import tree_l2_norm
 
 
@@ -52,14 +79,52 @@ class FedRLConfig:
     lam: float = 0.95
     eval_seed: int = 1234
     optimizer: Optional[FlatOptimizer] = None  # None = plain SGD (reference)
+    # --- heterogeneous fleet (repro.rl.rollout) ---
+    num_envs: int = 0            # B parallel envs per agent; 0 = legacy shared env
+    env_params: Optional[EnvParams] = None  # (m,)-stacked per-agent MDPs
+    ppo_epochs: int = 1          # PPO epochs per local update (fleet path)
+    n_minibatches: int = 1       # PPO minibatches per epoch (fleet path)
+    # --- flat-carry storage dtype (None = fp32); e.g. "bfloat16" ---
+    buffer_dtype: Optional[str] = None
+
+    @property
+    def fleet(self) -> bool:
+        return self.num_envs > 0 or self.env_params is not None
+
+    @property
+    def B(self) -> int:
+        return max(self.num_envs, 1)
 
     def __post_init__(self):
         if self.epoch_len % self.minibatch:
             raise ValueError("T must divide into P-sized steps")
-        if self.env.n_rl != self.strategy.m:
+        if self.fleet:
+            if self.env_params is not None:
+                m_p = jax.tree.leaves(self.env_params)[0].shape[0]
+                if m_p != self.strategy.m:
+                    raise ValueError(
+                        f"env_params carries {m_p} agents, strategy m="
+                        f"{self.strategy.m}"
+                    )
+            d = self.B * self.minibatch * self.env.n_rl
+            if d % self.n_minibatches:
+                raise ValueError(
+                    f"{d} fleet transitions per update do not split into "
+                    f"{self.n_minibatches} minibatches"
+                )
+        elif self.env.n_rl != self.strategy.m:
             raise ValueError(
                 f"strategy m={self.strategy.m} must equal n_rl={self.env.n_rl}"
             )
+        if self.buffer_dtype is not None:
+            jnp.dtype(self.buffer_dtype)  # fail fast on typos
+
+
+def _fleet_params(cfg: FedRLConfig) -> EnvParams:
+    """The (m,)-stacked per-agent EnvParams (homogeneous broadcast if unset)."""
+    if cfg.env_params is not None:
+        return cfg.env_params
+    return broadcast_params(cfg.env.default_params(), (cfg.strategy.m,))
 
 
 def _rollout(cfg: FedRLConfig, params_m, env_state, key, n_steps: int):
@@ -105,20 +170,89 @@ def _agent_grads(cfg: FedRLConfig, params_m, traj, env_state):
     return grads, losses
 
 
-def _eval_grad_norm(cfg: FedRLConfig, server_params):
+def _fleet_grads(cfg: FedRLConfig, params_m, env_params, traj, env_state, key,
+                 *, epochs: int, n_minibatches: int):
+    """Per-agent pseudo-gradients from the (m, B, P, ...) fleet trajectories.
+
+    GAE runs per (env, vehicle) stream, the streams flatten to one
+    B*P*n_rl transition batch per agent, and each agent's gradient is the
+    PPO minibatch-epoch pseudo-gradient (plain gradient when 1x1).
+    """
+    loss_fn = LOSSES[cfg.algo]
+    last_val = fleet_last_values(cfg.env, env_params, params_m, env_state)
+    adv, ret = fleet_gae(traj["rew"], traj["val"], last_val,
+                         gamma=cfg.gamma, lam=cfg.lam)
+    data = fleet_flatten({
+        "obs": traj["obs"], "act": traj["act"],
+        "logp_old": traj["logp_old"], "adv": adv, "ret": ret,
+    })
+    keys = jax.random.split(key, cfg.strategy.m)
+
+    def one(params_i, data_i, k):
+        return minibatch_epoch_grad(
+            loss_fn, params_i, data_i, k,
+            epochs=epochs, n_minibatches=n_minibatches, lr=cfg.eta,
+        )
+
+    grads, losses = jax.vmap(one)(params_m, data, keys)
+    return grads, losses
+
+
+def _collect(cfg: FedRLConfig, env_params, params_m, env_state, key):
+    """One local-update batch of experience + per-agent gradients.
+
+    Returns ``(env_state, grads_m, losses, nas)``. The legacy shared-env
+    branch reproduces the original key discipline exactly (one rollout key);
+    the fleet branch additionally splits a minibatch-shuffle key.
+    """
+    if cfg.fleet:
+        rk, gk = jax.random.split(key)
+        env_state, traj = fleet_rollout(
+            cfg.env, env_params, params_m, env_state, rk, cfg.minibatch
+        )
+        grads, losses = _fleet_grads(
+            cfg, params_m, env_params, traj, env_state, gk,
+            epochs=cfg.ppo_epochs, n_minibatches=cfg.n_minibatches,
+        )
+    else:
+        env_state, traj = _rollout(cfg, params_m, env_state, key, cfg.minibatch)
+        grads, losses = _agent_grads(cfg, params_m, traj, env_state)
+    return env_state, grads, losses, jnp.mean(traj["rew"])
+
+
+def _reset(cfg: FedRLConfig, env_params, key):
+    if cfg.fleet:
+        return fleet_reset(cfg.env, env_params, key, cfg.B)
+    return env_reset(cfg.env, key)
+
+
+def _eval_grad_norm(cfg: FedRLConfig, server_params, env_params=None):
     """Expected gradient norm ||grad F(theta_bar)||^2 on a fixed eval stream
     (Table II metric: fixed sample distribution, deterministic seed).
 
     The reset and rollout streams are decorrelated: reusing one key for both
     made the eval trajectory's action noise a deterministic function of the
-    initial env state, biasing the fixed-sample estimate."""
+    initial env state, biasing the fixed-sample estimate. On the fleet path
+    the metric is the *plain* gradient over each agent's batch (no inner
+    minibatch epochs — the metric estimates grad F, not a PPO displacement).
+    """
     k_reset, k_roll = jax.random.split(jax.random.key(cfg.eval_seed))
-    env_state = env_reset(cfg.env, k_reset)
-    m = cfg.env.n_rl
+    m = cfg.strategy.m if cfg.fleet else cfg.env.n_rl
     params_m = jax.tree.map(lambda l: jnp.broadcast_to(l, (m,) + l.shape),
                             server_params)
-    env_state, traj = _rollout(cfg, params_m, env_state, k_roll, cfg.minibatch)
-    grads, _ = _agent_grads(cfg, params_m, traj, env_state)
+    if cfg.fleet:
+        env_state = fleet_reset(cfg.env, env_params, k_reset, cfg.B)
+        k_roll, gk = jax.random.split(k_roll)
+        env_state, traj = fleet_rollout(
+            cfg.env, env_params, params_m, env_state, k_roll, cfg.minibatch
+        )
+        grads, _ = _fleet_grads(cfg, params_m, env_params, traj, env_state,
+                                gk, epochs=1, n_minibatches=1)
+    else:
+        env_state = env_reset(cfg.env, k_reset)
+        env_state, traj = _rollout(cfg, params_m, env_state, k_roll,
+                                   cfg.minibatch)
+        grads, _ = _agent_grads(cfg, params_m, traj, env_state)
     g_mean = jax.tree.map(lambda x: jnp.mean(x, axis=0), grads)
     return tree_l2_norm(g_mean) ** 2
 
@@ -134,10 +268,7 @@ def _finish_ledger(strat, n_updates: int) -> CostLedger:
 
 
 def run_fedrl(cfg: FedRLConfig, key) -> tuple[Any, dict, CostLedger]:
-    if (
-        dispatch.is_kernel_backend(cfg.strategy.backend)
-        or cfg.optimizer is not None
-    ):
+    if _use_flat_carry(cfg):  # the one carry-selection predicate, shared
         return _run_fedrl_flat(cfg, key)
     return _run_fedrl_tree(cfg, key)
 
@@ -147,6 +278,7 @@ def _run_fedrl_tree(cfg: FedRLConfig, key) -> tuple[Any, dict, CostLedger]:
     strat = cfg.strategy
     m, tau = strat.m, strat.tau
     updates_per_epoch = cfg.epoch_len // cfg.minibatch
+    env_params = _fleet_params(cfg) if cfg.fleet else None
 
     key, pk = jax.random.split(key)
     init = init_policy(pk, OBS_DIM)
@@ -155,8 +287,9 @@ def _run_fedrl_tree(cfg: FedRLConfig, key) -> tuple[Any, dict, CostLedger]:
     def update(carry, _):
         params_m, env_state, k, key = carry
         key, rk = jax.random.split(key)
-        env_state, traj = _rollout(cfg, params_m, env_state, rk, cfg.minibatch)
-        grads, losses = _agent_grads(cfg, params_m, traj, env_state)
+        env_state, grads, losses, nas = _collect(
+            cfg, env_params, params_m, env_state, rk
+        )
         offset = jnp.mod(k, tau)
         params_m = strat.local_update(params_m, grads, offset, cfg.eta)
         k = k + 1
@@ -167,19 +300,18 @@ def _run_fedrl_tree(cfg: FedRLConfig, key) -> tuple[Any, dict, CostLedger]:
 
         synced = jnp.equal(jnp.mod(k, tau), 0)
         params_m = jax.lax.cond(synced, do_sync, lambda p: p, params_m)
-        nas = jnp.mean(traj["rew"])
         return (params_m, env_state, k, key), {"nas": nas, "loss": losses.mean(),
                                                "synced": synced}
 
     def epoch(carry, _):
         params_m, k, key = carry
         key, ek = jax.random.split(key)
-        env_state = env_reset(cfg.env, ek)
+        env_state = _reset(cfg, env_params, ek)
         (params_m, _, k, key), ms = jax.lax.scan(
             update, (params_m, env_state, k, key), None, length=updates_per_epoch
         )
         server = strat.server_average(params_m)
-        grad_sq = _eval_grad_norm(cfg, server)
+        grad_sq = _eval_grad_norm(cfg, server, env_params)
         out = {
             "nas": ms["nas"].mean(),
             "loss": ms["loss"].mean(),
@@ -198,26 +330,44 @@ def _run_fedrl_tree(cfg: FedRLConfig, key) -> tuple[Any, dict, CostLedger]:
 
 
 def _run_fedrl_flat(cfg: FedRLConfig, key) -> tuple[Any, dict, CostLedger]:
-    """Flat-carry path: replicas live as one (m, n) matrix across all scans."""
+    """Flat-carry path: replicas live as one (m, n) matrix across all scans.
+
+    ``cfg.buffer_dtype`` selects the storage dtype of the flat params/grad
+    buffers (bf16 mode); the per-agent tree views handed to the rollout/grad
+    closures are always fp32, and the dispatch primitives + optimizer moments
+    accumulate in fp32 regardless.
+    """
     strat = cfg.strategy
     m, tau = strat.m, strat.tau
     opt = cfg.optimizer
+    dtype = jnp.dtype(cfg.buffer_dtype) if cfg.buffer_dtype is not None else None
     updates_per_epoch = cfg.epoch_len // cfg.minibatch
+    env_params = _fleet_params(cfg) if cfg.fleet else None
 
     key, pk = jax.random.split(key)
     init = init_policy(pk, OBS_DIM)
     flat, spec = dispatch.stacked_ravel_spec(
         jax.tree.map(lambda l: jnp.broadcast_to(l, (m,) + l.shape), init)
     )
+    if dtype is not None:
+        flat = flat.astype(dtype)
     opt_state = opt.init(flat) if opt is not None else {}
+
+    def tree_view(f):
+        """The closures' fp32 per-agent tree view of the flat carry."""
+        return spec.unravel(dispatch.compute_view(f, dtype))
 
     def update(carry, _):
         flat, opt_state, env_state, k, key = carry
+        flat = shard_agents(flat)
         key, rk = jax.random.split(key)
-        params_m = spec.unravel(flat)   # the rollout/grad closures' tree view
-        env_state, traj = _rollout(cfg, params_m, env_state, rk, cfg.minibatch)
-        grads, losses = _agent_grads(cfg, params_m, traj, env_state)
+        params_m = tree_view(flat)
+        env_state, grads, losses, nas = _collect(
+            cfg, env_params, params_m, env_state, rk
+        )
         g_flat = jax.vmap(spec.ravel_one)(grads)
+        if dtype is not None:
+            g_flat = g_flat.astype(dtype)
         offset = jnp.mod(k, tau)
         if opt is None:
             flat = strat.flat_update(flat, g_flat, offset, cfg.eta)
@@ -239,21 +389,23 @@ def _run_fedrl_flat(cfg: FedRLConfig, key) -> tuple[Any, dict, CostLedger]:
         flat, opt_state = jax.lax.cond(
             synced, do_sync, lambda args: args, (flat, opt_state)
         )
-        nas = jnp.mean(traj["rew"])
         return (flat, opt_state, env_state, k, key), {
             "nas": nas, "loss": losses.mean(), "synced": synced,
         }
 
+    def server_view(f):
+        row = strat.flat_server_average(f)
+        return spec.unravel_one(dispatch.compute_view(row, dtype))
+
     def epoch(carry, _):
         flat, opt_state, k, key = carry
         key, ek = jax.random.split(key)
-        env_state = env_reset(cfg.env, ek)
+        env_state = _reset(cfg, env_params, ek)
         (flat, opt_state, _, k, key), ms = jax.lax.scan(
             update, (flat, opt_state, env_state, k, key), None,
             length=updates_per_epoch,
         )
-        server = spec.unravel_one(strat.flat_server_average(flat))
-        grad_sq = _eval_grad_norm(cfg, server)
+        grad_sq = _eval_grad_norm(cfg, server_view(flat), env_params)
         out = {
             "nas": ms["nas"].mean(),
             "loss": ms["loss"].mean(),
@@ -265,7 +417,7 @@ def _run_fedrl_flat(cfg: FedRLConfig, key) -> tuple[Any, dict, CostLedger]:
     (flat, opt_state, k, key), metrics = jax.lax.scan(
         epoch, carry, None, length=cfg.n_epochs
     )
-    server = spec.unravel_one(strat.flat_server_average(flat))
+    server = server_view(flat)
 
     ledger = _finish_ledger(strat, cfg.n_epochs * updates_per_epoch)
     return server, jax.tree.map(np.asarray, jax.device_get(metrics)), ledger

@@ -72,3 +72,49 @@ def tac_loss(params, traj, *, clip=0.2, vf_coef=0.5, tsallis_coef=0.01):
 
 
 LOSSES = {"ppo": ppo_loss, "trpo": trpo_kl_loss, "tac": tac_loss}
+
+
+def minibatch_epoch_grad(loss_fn, params, data, key, *, epochs: int = 1,
+                         n_minibatches: int = 1, lr: float = 1e-3):
+    """PPO-style minibatch-epoch local optimization as a pseudo-gradient.
+
+    ``data`` holds one agent's transition batch (leaves lead with D
+    transitions). Runs ``epochs`` shuffled passes of SGD over
+    ``n_minibatches`` minibatches — the classic PPO update loop — starting
+    from ``params``, then reports the accumulated displacement as a gradient,
+    ``g = (params - params_new) / lr``, so the federated strategies can
+    weight/gossip/apply it exactly like a single-step gradient
+    (``p - lr * g == params_new`` for the identity transform).
+
+    With ``epochs == n_minibatches == 1`` this *is* ``value_and_grad`` — no
+    shuffle, no inner loop — so the default config degenerates to the plain
+    stochastic gradient of Algorithms 1 & 2. Returns ``(grad, mean_loss)``.
+    """
+    if epochs == 1 and n_minibatches == 1:
+        loss, g = jax.value_and_grad(loss_fn)(params, data)
+        return g, loss
+    d = jax.tree.leaves(data)[0].shape[0]
+    if d % n_minibatches:
+        raise ValueError(
+            f"minibatch_epoch_grad: {d} transitions do not split into "
+            f"{n_minibatches} minibatches"
+        )
+    mb = d // n_minibatches
+
+    def one_epoch(p, k):
+        perm = jax.random.permutation(k, d)
+        batches = jax.tree.map(
+            lambda x: x[perm].reshape((n_minibatches, mb) + x.shape[1:]), data
+        )
+
+        def step(p, batch):
+            loss, g = jax.value_and_grad(loss_fn)(p, batch)
+            return jax.tree.map(lambda a, b: a - lr * b, p, g), loss
+
+        return jax.lax.scan(step, p, batches)
+
+    new_params, losses = jax.lax.scan(
+        one_epoch, params, jax.random.split(key, epochs)
+    )
+    g = jax.tree.map(lambda a, b: (a - b) / lr, params, new_params)
+    return g, losses.mean()

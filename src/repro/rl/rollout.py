@@ -1,0 +1,120 @@
+"""Vectorized heterogeneous-fleet rollout engine.
+
+The paper's setting is m *independent* agents undergoing heterogeneous,
+asynchronous MDPs. This module realises it: agent i owns its own environment
+instance — an :class:`~repro.rl.env.EnvParams` pytree row, possibly different
+from every other agent's (``perturb_params`` / ``repro.rl.scenarios``) — and
+B parallel rollout copies of it. One ``lax.scan`` over time, two ``vmap``
+levels over (m, B), and every trajectory buffer comes out shaped
+``(m, B, P, ...)``:
+
+    obs       (m, B, P, n_rl, OBS_DIM)
+    act       (m, B, P, n_rl, act_dim)
+    logp_old  (m, B, P, n_rl)
+    val       (m, B, P, n_rl)
+    rew       (m, B, P)          — team NAS reward, shared within an env
+
+Within an env the agent's single policy drives every RL vehicle (parameter
+sharing), so richer envs just mean more transition streams per agent. The
+key discipline is documented so a per-agent Python-loop reference can
+reproduce the engine bit-for-bit (``tests/test_rollout_fleet.py``): each
+scan step splits one subkey into ``m * B`` env keys (row-major: agent i, env
+b gets ``keys[i * B + b]``), and each env splits its key into ``n_rl``
+per-vehicle action keys.
+
+Sharding: the ``(m, ...)`` agent axis of the scan carry is constrained to
+the opt-in ``agents`` rule (``repro.sharding.fleet_rules``); outside a rules
+context the constraint is the identity, so CPU/single-device runs are
+untouched.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.rl.env import EnvConfig, EnvParams, env_reset, env_step, get_obs
+from repro.rl.policy import policy_value, sample_action
+from repro.rl.ppo import gae
+from repro.sharding import shard_agents
+
+
+def fleet_reset(cfg: EnvConfig, env_params: EnvParams, key, num_envs: int):
+    """Reset an (m, B) fleet. ``env_params`` has (m,) leaves; returns an
+    EnvState whose leaves carry leading (m, B) axes."""
+    m = jax.tree.leaves(env_params)[0].shape[0]
+    keys = jax.random.split(key, m * num_envs).reshape((m, num_envs))
+    per_agent = jax.vmap(lambda p, k: env_reset(cfg, k, params=p),
+                         in_axes=(None, 0))
+    return jax.vmap(per_agent)(env_params, keys)
+
+
+def fleet_rollout(cfg: EnvConfig, env_params: EnvParams, policy_m,
+                  env_state, key, n_steps: int):
+    """Roll the whole fleet forward ``n_steps``.
+
+    ``env_params``: (m,)-leaved EnvParams; ``policy_m``: policy pytree with a
+    leading (m,) replica axis; ``env_state``: (m, B)-leaved EnvState.
+    Returns ``(env_state, traj)`` with traj buffers shaped (m, B, P, ...).
+    """
+    m, num_envs = env_state.x.shape[:2]
+    n_rl = cfg.n_rl
+
+    def one_env(pe, pol, state, k):
+        obs = get_obs(cfg, state, params=pe)                     # (n_rl, obs)
+        ks = jax.random.split(k, n_rl)
+        acts, logps = jax.vmap(sample_action, in_axes=(None, 0, 0))(pol, obs, ks)
+        vals = policy_value(pol, obs)                            # (n_rl,)
+        state, reward, _ = env_step(cfg, state, acts[:, 0], params=pe)
+        out = {"obs": obs, "act": acts, "logp_old": logps,
+               "val": vals, "rew": reward}
+        return state, out
+
+    over_b = jax.vmap(one_env, in_axes=(None, None, 0, 0))
+    over_mb = jax.vmap(over_b, in_axes=(0, 0, 0, 0))
+
+    def step(carry, _):
+        state, key = carry
+        key, sub = jax.random.split(key)
+        keys = jax.random.split(sub, m * num_envs).reshape((m, num_envs))
+        state, out = over_mb(env_params, policy_m, state, keys)
+        state = shard_agents(state)
+        return (state, key), out
+
+    (env_state, _), traj = jax.lax.scan(step, (env_state, key), None,
+                                        length=n_steps)
+    # time-major (P, m, B, ...) -> (m, B, P, ...)
+    traj = jax.tree.map(lambda x: jnp.moveaxis(x, 0, 2), traj)
+    return env_state, traj
+
+
+def fleet_last_values(cfg: EnvConfig, env_params: EnvParams, policy_m,
+                      env_state) -> jnp.ndarray:
+    """Bootstrap values for GAE at the rollout horizon: (m, B, n_rl)."""
+    def one(pol, pe, states):
+        return jax.vmap(
+            lambda s: policy_value(pol, get_obs(cfg, s, params=pe))
+        )(states)
+
+    return jax.vmap(one)(policy_m, env_params, env_state)
+
+
+def fleet_gae(rew, val, last_val, *, gamma: float, lam: float):
+    """GAE along the time axis of fleet buffers.
+
+    ``rew``: (m, B, P) shared team reward; ``val``: (m, B, P, n_rl);
+    ``last_val``: (m, B, n_rl). Returns (adv, ret), each (m, B, P, n_rl) —
+    one advantage stream per (env, vehicle).
+    """
+    per_vehicle = jax.vmap(
+        lambda r, v, lv: gae(r, v, lv, gamma=gamma, lam=lam),
+        in_axes=(None, 1, 0), out_axes=1,
+    )
+    return jax.vmap(jax.vmap(per_vehicle))(rew, val, last_val)
+
+
+def fleet_flatten(tree):
+    """Collapse (m, B, P, n_rl, ...) buffers to per-agent transition batches
+    (m, B*P*n_rl, ...) for the minibatch-epoch PPO update."""
+    return jax.tree.map(
+        lambda x: x.reshape((x.shape[0], -1) + x.shape[4:]), tree
+    )

@@ -1,9 +1,23 @@
 from repro.sharding.rules import (
+    FLEET_RULES,
     MeshRules,
     axes_to_spec,
     current_rules,
+    fleet_mesh,
+    fleet_rules,
     shard,
+    shard_agents,
     use_rules,
 )
 
-__all__ = ["MeshRules", "axes_to_spec", "current_rules", "shard", "use_rules"]
+__all__ = [
+    "FLEET_RULES",
+    "MeshRules",
+    "axes_to_spec",
+    "current_rules",
+    "fleet_mesh",
+    "fleet_rules",
+    "shard",
+    "shard_agents",
+    "use_rules",
+]

@@ -117,6 +117,51 @@ def shard(x, *logical_axes):
     return jax.lax.with_sharding_constraint(x, NamedSharding(r.mesh, spec))
 
 
+# --- federated fleet sharding (opt-in) ----------------------------------------
+#
+# The fleet engine (repro.rl.rollout) and the flat-carry drivers tag the
+# leading replica/agent axis of their buffers with the logical name "agents".
+# Activating `use_rules(fleet_rules())` shards that axis across devices —
+# rollout and local updates for different agents then run on different
+# devices, and only the server average / gossip mix communicates. Outside a
+# rules context every tag is the identity, so the default CPU path is
+# untouched.
+
+FLEET_RULES: dict[str, Optional[tuple]] = {
+    "agents": ("agents",),
+    "envs": None,              # B parallel envs per agent stay local
+}
+
+
+def fleet_mesh(n_agents_shards: Optional[int] = None) -> Mesh:
+    """1-D device mesh over the federated agent axis (all devices by default)."""
+    from repro.utils import compat
+
+    n = n_agents_shards or len(jax.devices())
+    return compat.make_mesh((n,), ("agents",))
+
+
+def fleet_rules(mesh: Optional[Mesh] = None) -> MeshRules:
+    """MeshRules sharding the federated agent axis; pair with ``use_rules``."""
+    return MeshRules(mesh=mesh if mesh is not None else fleet_mesh(),
+                     rules=dict(FLEET_RULES))
+
+
+def shard_agents(tree):
+    """Constrain the leading (m, ...) axis of every leaf to the "agents" rule.
+
+    Identity outside a rules context (and for scalar leaves), so it is safe
+    to leave in the hot path unconditionally.
+    """
+    if current_rules() is None:
+        return tree
+    return jax.tree.map(
+        lambda l: l if getattr(l, "ndim", 0) == 0
+        else shard(l, "agents", *((None,) * (l.ndim - 1))),
+        tree,
+    )
+
+
 def logical_axis_size(name: str) -> int:
     """Mesh extent a logical axis would shard over (1 outside a rules ctx)."""
     r = current_rules()

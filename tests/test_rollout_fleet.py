@@ -1,0 +1,329 @@
+"""Fleet rollout engine: loop-reference parity, shape contracts, driver parity.
+
+The contracts pinned here:
+
+* the vmapped heterogeneous-params engine reproduces a per-agent Python-loop
+  reference bit-close (same key discipline: one subkey per step split into
+  m*B env keys row-major, each env key split into n_rl action keys);
+* trajectory buffers come out shaped (m, B, P, ...);
+* the flat-carry driver matches the tree-space reference on a heterogeneous
+  fleet for decay and consensus strategies;
+* the bf16 gradient-buffer mode stays within parity tolerance of fp32.
+"""
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import topology as T
+from repro.core.decay import exponential_decay
+from repro.core.fmarl import FmarlConfig, run_fmarl
+from repro.core.strategies import make_strategy
+from repro.optim.flat import flat_adam
+from repro.rl import (
+    FedRLConfig,
+    FIGURE_EIGHT,
+    fleet_reset,
+    fleet_rollout,
+    get_scenario,
+    init_policy,
+    make_fleet,
+    minibatch_epoch_grad,
+    perturb_params,
+    run_fedrl,
+)
+from repro.rl.env import OBS_DIM, env_step, get_obs
+from repro.rl.policy import policy_value, sample_action
+from repro.rl.ppo import ppo_loss
+from repro.rl.scenarios import SCENARIOS
+
+M, B, P = 5, 4, 6
+
+
+def _fleet(m=M, scale=0.3, seed=0):
+    cfg, params_m = make_fleet("figure_eight", m, jax.random.key(seed),
+                               hetero=scale)
+    return cfg, params_m
+
+
+def _policy_m(m=M, seed=2):
+    pol = init_policy(jax.random.key(seed), OBS_DIM)
+    return jax.tree.map(lambda l: jnp.broadcast_to(l, (m,) + l.shape), pol)
+
+
+# --- engine vs per-agent Python-loop reference ---------------------------------
+
+def test_fleet_rollout_matches_python_loop_reference():
+    cfg, params_m = _fleet()
+    pol_m = _policy_m()
+    state0 = fleet_reset(cfg, params_m, jax.random.key(1), B)
+    state, traj = fleet_rollout(cfg, params_m, pol_m, state0,
+                                jax.random.key(3), P)
+
+    # reference: independent per-(agent, env) stepping, same key discipline
+    take = lambda tree, *idx: jax.tree.map(lambda l: l[idx], tree)
+    ref = {k: np.zeros_like(np.asarray(v)) for k, v in traj.items()}
+    final_x = np.zeros_like(np.asarray(state.x))
+    for i in range(M):
+        pe = take(params_m, i)
+        pol = take(pol_m, i)
+        for b in range(B):
+            st = take(state0, i, b)
+            key = jax.random.key(3)
+            for t in range(P):
+                key, sub = jax.random.split(key)
+                k = jax.random.split(sub, M * B)[i * B + b]
+                obs = get_obs(cfg, st, params=pe)
+                ks = jax.random.split(k, cfg.n_rl)
+                acts, logps = jax.vmap(
+                    sample_action, in_axes=(None, 0, 0))(pol, obs, ks)
+                vals = policy_value(pol, obs)
+                st, rew, _ = env_step(cfg, st, acts[:, 0], params=pe)
+                ref["obs"][i, b, t] = obs
+                ref["act"][i, b, t] = acts
+                ref["logp_old"][i, b, t] = logps
+                ref["val"][i, b, t] = vals
+                ref["rew"][i, b, t] = rew
+            final_x[i, b] = st.x
+    for name in traj:
+        np.testing.assert_allclose(np.asarray(traj[name]), ref[name],
+                                   rtol=1e-6, atol=1e-6, err_msg=name)
+    np.testing.assert_allclose(np.asarray(state.x), final_x,
+                               rtol=1e-6, atol=1e-6)
+
+
+# --- shape contracts -----------------------------------------------------------
+
+def test_trajectory_shape_contracts():
+    cfg, params_m = _fleet()
+    pol_m = _policy_m()
+    state = fleet_reset(cfg, params_m, jax.random.key(1), B)
+    assert state.x.shape == (M, B, cfg.n_vehicles)
+    assert state.crashed.shape == (M, B)
+    state, traj = fleet_rollout(cfg, params_m, pol_m, state,
+                                jax.random.key(3), P)
+    n_rl = cfg.n_rl
+    assert traj["obs"].shape == (M, B, P, n_rl, OBS_DIM)
+    assert traj["act"].shape == (M, B, P, n_rl, 1)
+    assert traj["logp_old"].shape == (M, B, P, n_rl)
+    assert traj["val"].shape == (M, B, P, n_rl)
+    assert traj["rew"].shape == (M, B, P)
+
+
+def test_heterogeneity_actually_diversifies_the_envs():
+    """Distinct per-agent params must yield distinct trajectories; scale=0
+    with identical resets would not."""
+    cfg, params_m = _fleet(scale=0.4)
+    pol_m = _policy_m()
+    state = fleet_reset(cfg, params_m, jax.random.key(1), B)
+    _, traj = fleet_rollout(cfg, params_m, pol_m, state, jax.random.key(3), P)
+    rew = np.asarray(traj["rew"])  # (m, B, P)
+    # every pair of agents sees different reward streams
+    for i in range(M):
+        for j in range(i + 1, M):
+            assert not np.allclose(rew[i], rew[j])
+
+
+# --- scenario registry ---------------------------------------------------------
+
+def test_scenario_registry_presets():
+    assert {"figure_eight", "merge", "ring_attenuation", "mixed_vmax"} <= set(
+        SCENARIOS
+    )
+    for name in SCENARIOS:
+        sc = get_scenario(name)
+        assert sc.cfg.n_rl >= 1
+        cfg, params = make_fleet(name, 6, jax.random.key(0))
+        assert jax.tree.leaves(params)[0].shape == (6,)
+    with pytest.raises(ValueError):
+        get_scenario("nope")
+
+
+def test_perturb_params_scale_and_determinism():
+    p0 = perturb_params(FIGURE_EIGHT, jax.random.key(0), 5, 0.0)
+    base = FIGURE_EIGHT.default_params()
+    for f, leaf in zip(p0._fields, p0):
+        np.testing.assert_allclose(leaf, np.full(5, getattr(base, f)))
+    p1 = perturb_params(FIGURE_EIGHT, jax.random.key(0), 5, 0.3)
+    p2 = perturb_params(FIGURE_EIGHT, jax.random.key(0), 5, 0.3)
+    np.testing.assert_allclose(p1.dt, p2.dt)
+    assert len(np.unique(np.asarray(p1.dt))) == 5  # genuinely per-agent
+    with pytest.raises(ValueError):
+        perturb_params(FIGURE_EIGHT, jax.random.key(0), 5, 0.3,
+                       fields=("not_a_field",))
+
+
+# --- minibatch-epoch PPO update ------------------------------------------------
+
+def _fake_batch(key, d=24):
+    ks = jax.random.split(key, 5)
+    return {
+        "obs": jax.random.normal(ks[0], (d, OBS_DIM)),
+        "act": 0.1 * jax.random.normal(ks[1], (d, 1)),
+        "logp_old": 0.1 * jax.random.normal(ks[2], (d,)),
+        "adv": jax.random.normal(ks[3], (d,)),
+        "ret": jax.random.normal(ks[4], (d,)),
+    }
+
+
+def test_minibatch_epoch_grad_degenerates_to_value_and_grad():
+    params = init_policy(jax.random.key(0), OBS_DIM)
+    data = _fake_batch(jax.random.key(1))
+    g1, l1 = minibatch_epoch_grad(ppo_loss, params, data, jax.random.key(2),
+                                  epochs=1, n_minibatches=1, lr=1e-2)
+    l2, g2 = jax.value_and_grad(ppo_loss)(params, data)
+    assert float(l1) == float(l2)
+    for a, b in zip(jax.tree.leaves(g1), jax.tree.leaves(g2)):
+        np.testing.assert_array_equal(a, b)
+
+
+def test_minibatch_epoch_grad_is_the_sgd_displacement():
+    """p - lr * g must equal the endpoint of the inner minibatch SGD loop."""
+    lr = 1e-2
+    params = init_policy(jax.random.key(0), OBS_DIM)
+    data = _fake_batch(jax.random.key(1))
+    g, _ = minibatch_epoch_grad(ppo_loss, params, data, jax.random.key(2),
+                                epochs=2, n_minibatches=3, lr=lr)
+    applied = jax.tree.map(lambda p, gg: p - lr * gg, params, g)
+    # replay the inner loop by hand
+    p = params
+    for k in jax.random.split(jax.random.key(2), 2):
+        perm = jax.random.permutation(k, 24)
+        shuf = jax.tree.map(lambda x: x[perm], data)
+        for mb in range(3):
+            batch = jax.tree.map(lambda x: x[mb * 8:(mb + 1) * 8], shuf)
+            gg = jax.grad(ppo_loss)(p, batch)
+            p = jax.tree.map(lambda a, b: a - lr * b, p, gg)
+    for a, b in zip(jax.tree.leaves(applied), jax.tree.leaves(p)):
+        np.testing.assert_allclose(a, b, rtol=1e-5, atol=1e-6)
+    with pytest.raises(ValueError):
+        minibatch_epoch_grad(ppo_loss, params, data, jax.random.key(2),
+                             epochs=1, n_minibatches=7, lr=lr)
+
+
+# --- federated drivers on a heterogeneous fleet --------------------------------
+
+def _fleet_cfg(strategy, **kw):
+    cfg, params_m = _fleet(m=strategy.m)
+    base = dict(env=cfg, strategy=strategy, n_epochs=2, epoch_len=40,
+                minibatch=20, eta=3e-3, num_envs=B, env_params=params_m)
+    base.update(kw)
+    return FedRLConfig(**base)
+
+
+@pytest.mark.parametrize("name", ["decay", "consensus"])
+def test_fedrl_fleet_flat_matches_tree_reference(name):
+    topo = T.random_regularish(M, 3, 4, seed=0)
+    builders = {
+        "decay": lambda b: make_strategy(
+            "decay", tau=3, m=M, decay=exponential_decay(0.9), backend=b
+        ),
+        "consensus": lambda b: make_strategy(
+            "consensus", tau=3, topo=topo, eps=0.1, rounds=1, m=M, backend=b
+        ),
+    }
+    outs = {}
+    for b in ("jnp", "interpret"):
+        cfg = _fleet_cfg(builders[name](b))
+        _, metrics, _ = run_fedrl(cfg, jax.random.key(0))
+        outs[b] = metrics
+    np.testing.assert_allclose(outs["jnp"]["nas"], outs["interpret"]["nas"],
+                               rtol=1e-4)
+    np.testing.assert_allclose(
+        outs["jnp"]["server_grad_sq_norm"],
+        outs["interpret"]["server_grad_sq_norm"],
+        rtol=1e-3,
+    )
+
+
+def test_fedrl_fleet_minibatch_epochs_run_finite():
+    strat = make_strategy("periodic", tau=2, m=M)
+    cfg = _fleet_cfg(strat, ppo_epochs=2, n_minibatches=4)
+    _, metrics, ledger = run_fedrl(cfg, jax.random.key(0))
+    assert np.all(np.isfinite(metrics["nas"]))
+    assert np.all(np.isfinite(metrics["server_grad_sq_norm"]))
+    assert ledger.c1_events > 0
+
+
+def test_fleet_config_validation():
+    strat = make_strategy("periodic", tau=2, m=M)
+    cfg_env, params_m = _fleet(m=M + 1)  # wrong agent count
+    with pytest.raises(ValueError):
+        FedRLConfig(env=cfg_env, strategy=strat, env_params=params_m)
+    cfg_env, params_m = _fleet(m=M)
+    with pytest.raises(ValueError):  # B*P*n_rl not divisible by minibatches
+        FedRLConfig(env=cfg_env, strategy=strat, num_envs=B,
+                    env_params=params_m, minibatch=20, n_minibatches=9)
+    # legacy validation unchanged: env has 7 RL vehicles, strategy m=5
+    with pytest.raises(ValueError):
+        FedRLConfig(env=FIGURE_EIGHT, strategy=strat)
+
+
+# --- bf16 gradient-buffer mode -------------------------------------------------
+
+def test_fmarl_bf16_buffer_parity_tolerance():
+    init = {"w": jnp.ones((8, 9)), "b": jnp.ones(7)}
+
+    def grad_fn(p, k, i, step):
+        g = jax.tree.map(lambda x: x + 0.05 * jax.random.normal(k, x.shape), p)
+        return g, {"loss": sum(jnp.sum(x**2) for x in jax.tree.leaves(p))}
+
+    outs = {}
+    for dt in (None, "bfloat16"):
+        strat = make_strategy("periodic", tau=3, m=6, backend="jnp")
+        cfg = FmarlConfig(strategy=strat, eta=0.05, n_periods=4,
+                          optimizer=flat_adam(), buffer_dtype=dt)
+        state, metrics, _ = run_fmarl(cfg, init, grad_fn, jax.random.key(0),
+                                      lambda p, k: p)
+        outs[dt] = np.asarray(metrics["server_grad_sq_norm"])
+        # bf16 is storage-only: the returned trees are fp32 views
+        assert all(l.dtype == jnp.float32
+                   for l in jax.tree.leaves(state.params_m))
+    assert np.all(np.isfinite(outs["bfloat16"]))
+    np.testing.assert_allclose(outs["bfloat16"], outs[None], rtol=0.05)
+
+
+def test_fedrl_bf16_buffer_parity_tolerance():
+    strat = make_strategy("periodic", tau=2, m=M)
+    ref = run_fedrl(_fleet_cfg(strat), jax.random.key(0))[1]
+    b16 = run_fedrl(_fleet_cfg(strat, buffer_dtype="bfloat16"),
+                    jax.random.key(0))[1]
+    assert np.all(np.isfinite(b16["nas"]))
+    np.testing.assert_allclose(b16["nas"], ref["nas"], rtol=0.05, atol=5e-3)
+    with pytest.raises(TypeError):
+        _fleet_cfg(strat, buffer_dtype="not_a_dtype")
+
+
+# --- opt-in agent-axis sharding ------------------------------------------------
+
+def test_fleet_rollout_under_agent_sharding_rules():
+    from repro import sharding
+
+    cfg, params_m = _fleet()
+    pol_m = _policy_m()
+    state = fleet_reset(cfg, params_m, jax.random.key(1), B)
+    _, traj_plain = fleet_rollout(cfg, params_m, pol_m, state,
+                                  jax.random.key(3), P)
+    mesh = sharding.fleet_mesh(1)  # single-device CI mesh
+    rules = sharding.fleet_rules(mesh)
+    assert rules.spec(("agents", None), (M, 3)) == jax.sharding.PartitionSpec(
+        "agents", None
+    )
+    with sharding.use_rules(rules):
+        _, traj_sharded = fleet_rollout(cfg, params_m, pol_m, state,
+                                        jax.random.key(3), P)
+    for a, b in zip(jax.tree.leaves(traj_plain), jax.tree.leaves(traj_sharded)):
+        np.testing.assert_allclose(a, b, rtol=1e-6, atol=1e-6)
+
+
+def test_fedrl_flat_driver_under_agent_sharding_rules():
+    from repro import sharding
+
+    strat = make_strategy("periodic", tau=2, m=M, backend="jnp")
+    cfg = _fleet_cfg(strat, optimizer=flat_adam())
+    ref = run_fedrl(cfg, jax.random.key(0))[1]
+    with sharding.use_rules(sharding.fleet_rules(sharding.fleet_mesh(1))):
+        sharded = run_fedrl(cfg, jax.random.key(0))[1]
+    np.testing.assert_allclose(ref["nas"], sharded["nas"], rtol=1e-5)
