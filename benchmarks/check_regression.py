@@ -1,0 +1,118 @@
+"""CI bench-regression gate: compare tracked metrics in the freshly emitted
+``experiments/bench/*.json`` against the committed baselines.
+
+  PYTHONPATH=src python -m benchmarks.check_regression \
+      [--baseline benchmarks/baselines/bench_baseline.json] \
+      [--bench-dir experiments/bench] [--update]
+
+The baseline file lists tracked metrics, each addressed by a bench JSON file
+plus a '/'-separated path into it (integer segments index lists, negative
+indices allowed). Three check kinds:
+
+* ``value`` + ``rtol`` (+ optional ``atol``) — numeric equivalence band for
+  statistics that should be stable across runs (seed-averaged grad norms).
+* ``min`` — lower bound, for ratios that must not collapse (the vmapped
+  sweep's speedup over the Python seed-loop; the flat-carry speedup). Kept
+  loose: CI machines are noisy, the gate is for regressions, not records.
+* ``max`` — upper bound (e.g. vmapped-vs-loop numeric deviation).
+
+Exit status 1 if any tracked metric is missing or out of band — this is what
+fails the ``bench-smoke`` CI job. ``--update`` rewrites the baseline's
+``value`` fields from the current bench output (bounds are left alone).
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import sys
+
+DEFAULT_BASELINE = os.path.join(
+    os.path.dirname(__file__), "baselines", "bench_baseline.json"
+)
+
+
+def resolve(doc, path: str):
+    """Walk a '/'-separated path; int segments index lists."""
+    node = doc
+    for seg in path.split("/"):
+        if isinstance(node, list):
+            node = node[int(seg)]
+        elif isinstance(node, dict):
+            node = node[seg]
+        else:
+            raise KeyError(seg)
+    return node
+
+
+def check_metric(entry: dict, cur: float):
+    """Returns (ok, detail) for one tracked metric."""
+    if "value" in entry:
+        ref = float(entry["value"])
+        rtol = float(entry.get("rtol", 0.1))
+        atol = float(entry.get("atol", 0.0))
+        band = rtol * abs(ref) + atol
+        ok = abs(cur - ref) <= band
+        return ok, f"ref={ref:.6g} band=+-{band:.3g}"
+    if "min" in entry:
+        return cur >= float(entry["min"]), f">= {entry['min']}"
+    if "max" in entry:
+        return cur <= float(entry["max"]), f"<= {entry['max']}"
+    return False, "baseline entry has no value/min/max"
+
+
+def main() -> int:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--baseline", default=DEFAULT_BASELINE)
+    ap.add_argument("--bench-dir", default="experiments/bench")
+    ap.add_argument("--update", action="store_true",
+                    help="rewrite baseline 'value' fields from current output")
+    args = ap.parse_args()
+
+    with open(args.baseline) as f:
+        baseline = json.load(f)
+
+    docs = {}
+    failures = 0
+    missing = 0
+    print(f"{'status':8s} {'metric':60s} {'current':>12s}  constraint")
+    for entry in baseline["metrics"]:
+        name = f"{entry['file']}:{entry['path']}"
+        try:
+            if entry["file"] not in docs:
+                with open(os.path.join(args.bench_dir, entry["file"])) as f:
+                    docs[entry["file"]] = json.load(f)
+            cur = float(resolve(docs[entry["file"]], entry["path"]))
+        except (OSError, KeyError, IndexError, ValueError, TypeError) as e:
+            print(f"{'MISSING':8s} {name:60s} {'-':>12s}  ({e!r})")
+            failures += 1
+            missing += 1
+            continue
+        if args.update and "value" in entry:
+            entry["value"] = cur
+        ok, detail = check_metric(entry, cur)
+        status = "ok" if ok else "FAIL"
+        print(f"{status:8s} {name:60s} {cur:12.6g}  {detail}")
+        failures += 0 if ok else 1
+
+    if args.update:
+        if missing:
+            # refuse a partial refresh: stale values would masquerade as
+            # freshly measured (run every bench the baseline tracks first)
+            print(f"# NOT rewriting {args.baseline}: {missing} tracked "
+                  f"metric(s) missing from {args.bench_dir}")
+            return 1
+        with open(args.baseline, "w") as f:
+            json.dump(baseline, f, indent=2)
+            f.write("\n")
+        print(f"# baseline values rewritten: {args.baseline}")
+        return 0
+    if failures:
+        print(f"# {failures} tracked metric(s) out of band vs {args.baseline}")
+        return 1
+    print(f"# all {len(baseline['metrics'])} tracked metrics within tolerance")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

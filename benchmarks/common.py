@@ -46,3 +46,76 @@ class Timer:
 
     def __exit__(self, *a):
         self.seconds = time.perf_counter() - self.t0
+
+
+# --- sweep-based figure benches (fig4/fig5/fig6) ------------------------------
+
+DEFAULT_SEEDS = (0, 1, 2, 3)
+
+
+def seed_tuple(seeds) -> tuple:
+    """Normalise a --seeds value: int count, iterable of seeds, or None."""
+    if seeds is None:
+        return DEFAULT_SEEDS
+    if isinstance(seeds, int):
+        if seeds < 1:
+            raise SystemExit("--seeds must be >= 1")
+        return tuple(range(seeds))
+    out = tuple(int(s) for s in seeds)
+    if not out:
+        raise SystemExit("--seeds must be >= 1")
+    return out
+
+
+def strategy_axis(name, configs):
+    """A StaticAxis whose points swap the strategy of the base config."""
+    import dataclasses
+
+    from repro.sweep import StaticAxis
+
+    return StaticAxis(name, tuple(
+        (label, lambda cfg, s=strat: dataclasses.replace(cfg, strategy=s))
+        for label, strat in configs
+    ))
+
+
+def write_bench_json(name: str, payload: dict) -> str:
+    """Write one bench's JSON artifact to OUT_DIR and announce it."""
+    import json
+
+    os.makedirs(OUT_DIR, exist_ok=True)
+    path = os.path.join(OUT_DIR, f"{name}.json")
+    with open(path, "w") as f:
+        json.dump(payload, f, indent=2)
+    print(f"# wrote {path}")
+    return path
+
+
+def sweep_config_rows(config, metrics, n_seeds, *, idx=None, include_grad=True):
+    """Seed-reduce one plotted config's curves from raw sweep metric arrays.
+
+    ``metrics`` is a SweepResult per-label dict (arrays ``(*axes, S,
+    epochs)``); ``idx`` selects a vmapped-axis index, after which the seed
+    axis leads. Returns ``(curve_entry, rows)``: the JSON curve payload
+    (mean + 95% CI half-width lists) and the per-epoch CSV row dicts —
+    the one reduction shared by the fig4/fig5/fig6 benches.
+    """
+    from repro.sweep import mean_ci
+
+    sel = (lambda a: a) if idx is None else (lambda a: a[idx])
+    nas_m, nas_h = mean_ci(sel(metrics["nas"]), 0)
+    entry = {"nas_mean": nas_m.tolist(), "nas_ci_hw": nas_h.tolist()}
+    if include_grad:
+        gn_m, gn_h = mean_ci(sel(metrics["server_grad_sq_norm"]), 0)
+        entry["grad_norm_mean"] = gn_m.tolist()
+        entry["grad_norm_ci_hw"] = gn_h.tolist()
+    rows = []
+    for ep in range(len(nas_m)):
+        row = {"config": config, "epoch": ep,
+               "nas": float(nas_m[ep]), "nas_ci_hw": float(nas_h[ep])}
+        if include_grad:
+            row["grad_norm"] = float(gn_m[ep])
+            row["grad_norm_ci_hw"] = float(gn_h[ep])
+        row["n_seeds"] = n_seeds
+        rows.append(row)
+    return entry, rows

@@ -1,18 +1,32 @@
-"""Paper Fig. 4: convergence (NAS) of variation-aware periodic averaging."""
-from __future__ import annotations
+"""Paper Fig. 4: convergence (NAS) of variation-aware periodic averaging.
 
-import time
+Runs on ``repro.sweep``: the four tau configurations are a *static* axis
+(tau changes the variation-mask shape and the inner scan length, so each
+re-traces), while the seed axis vmaps — every config's S seeds run as one
+jitted batched computation, and the curves carry t-based CIs.
+"""
+from __future__ import annotations
 
 import numpy as np
 
-from benchmarks.common import emit, write_csv
-from benchmarks.fmarl_bench import run_config
+from benchmarks.common import (
+    emit,
+    seed_tuple,
+    strategy_axis,
+    sweep_config_rows,
+    write_bench_json,
+    write_csv,
+)
+from benchmarks.fmarl_bench import make_cfg
 from repro.core import make_strategy, uniform_taus
+from repro.sweep import SweepSpec, run_sweep
 
 
-def run(quick: bool = False) -> list[dict]:
+def run(quick: bool = False, seeds=None) -> list[dict]:
     m = 7
-    configs = [
+    seeds = seed_tuple(seeds)
+    epochs = 8 if quick else None
+    strategies = [
         ("tau=1", make_strategy("sync", m=m)),
         ("tau=10", make_strategy("periodic", tau=10, m=m)),
         ("tau=15", make_strategy("periodic", tau=15, m=m)),
@@ -20,16 +34,32 @@ def run(quick: bool = False) -> list[dict]:
                                     taus=uniform_taus(10, 15, m, seed=0))),
     ]
     if quick:
-        configs = configs[:2]
-    rows = []
-    for name, strat in configs:
-        t0 = time.perf_counter()
-        row, metrics = run_config(name, strat)
-        nas = np.asarray(metrics["nas"])
-        for ep, v in enumerate(nas):
-            rows.append({"config": name, "epoch": ep, "nas": float(v)})
-        emit(f"fig4/{name}", (time.perf_counter() - t0) * 1e6,
-             f"final_nas={row['final_nas']:.4f}")
+        strategies = strategies[:2]
+
+    spec = SweepSpec(
+        name="fig4_variation",
+        base=make_cfg(strategies[0][1], epochs=epochs),
+        seeds=seeds,
+        static=(strategy_axis("tau", strategies),),
+    )
+    res = run_sweep(spec)
+
+    rows, curves = [], {}
+    for name, _ in strategies:
+        entry, rws = sweep_config_rows(name, res.metrics[name], len(seeds),
+                                       include_grad=False)
+        curves[name] = entry
+        rows += rws
+        nas_m = np.asarray(entry["nas_mean"])
+        nas_h = np.asarray(entry["nas_ci_hw"])
+        emit(f"fig4/{name}", res.wall_s[name] / len(seeds) * 1e6,
+             f"final_nas={nas_m[-3:].mean():.4f}+-{nas_h[-3:].mean():.4f}")
+
+    write_bench_json("fig4_sweep", {
+        "schema_version": 1, "quick": bool(quick),
+        "seeds": list(seeds), "n_seeds": len(seeds),
+        "curves": curves, "wall_s": dict(res.wall_s),
+    })
     write_csv("fig4_variation", rows)
     return rows
 

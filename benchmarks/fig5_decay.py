@@ -1,33 +1,122 @@
-"""Paper Fig. 5: decay-based method (DIRL), lambda sweep at tau=1~15."""
-from __future__ import annotations
+"""Paper Fig. 5: decay-based method (DIRL), lambda sweep at tau=1~15.
 
-import time
+Runs on ``repro.sweep``: the decay constant lambda and the seed axis vmap
+into ONE jitted computation (lambda x seeds full federated runs batched on a
+leading sweep axis), replacing the old one-config-at-a-time single-seed
+loop. Curves are seed-averaged with t-based confidence intervals.
+
+The emitted ``experiments/bench/fig5_sweep.json`` also records the
+wall-clock of the equivalent Python seed-loop over the same grid (one jitted
+single-run function, compiled once, called per cell) — the ``timings``
+section shows the vmapped sweep beating it on CPU and is a tracked metric of
+the CI bench-regression gate (``benchmarks/check_regression.py``).
+"""
+from __future__ import annotations
 
 import numpy as np
 
-from benchmarks.common import emit, write_csv
-from benchmarks.fmarl_bench import run_config
+from benchmarks.common import (
+    emit,
+    seed_tuple,
+    sweep_config_rows,
+    write_bench_json,
+    write_csv,
+)
+from benchmarks.fmarl_bench import make_cfg
 from repro.core import make_strategy, uniform_taus
 from repro.core.decay import exponential_decay
+from repro.sweep import SweepAxis, SweepSpec, mean_ci, run_sweep, run_sweep_loop
 
 
-def run(quick: bool = False) -> list[dict]:
-    m = 7
-    taus = uniform_taus(1, 15, m, seed=0)
-    configs = [("no-decay", make_strategy("periodic", tau=15, taus=taus))]
-    lams = [0.98, 0.92] if quick else [0.98, 0.95, 0.92]
-    for lam in lams:
-        configs.append((f"lambda={lam}", make_strategy(
-            "decay", tau=15, taus=taus, decay=exponential_decay(lam))))
-    rows = []
-    for name, strat in configs:
-        t0 = time.perf_counter()
-        row, metrics = run_config(name, strat)
-        for ep, v in enumerate(np.asarray(metrics["nas"])):
-            rows.append({"config": name, "epoch": ep, "nas": float(v),
-                         "grad_norm": float(metrics["server_grad_sq_norm"][ep])})
-        emit(f"fig5/{name}", (time.perf_counter() - t0) * 1e6,
-             f"grad_norm={row['expected_grad_norm']:.4f}")
+def _curves(out, metrics, config, lam_idx=None):
+    """Seed-reduced curves + run-level summary for one plotted config."""
+    entry, rows = sweep_config_rows(config, metrics, out["n_seeds"],
+                                    idx=lam_idx)
+    out["curves"][config] = entry
+    # Table II style run-level metric: per-seed mean over epochs, then CI
+    sel = (lambda a: a) if lam_idx is None else (lambda a: a[lam_idx])
+    egn_m, egn_h = mean_ci(sel(metrics["server_grad_sq_norm"]).mean(-1), 0)
+    out["summary"][config] = {
+        "expected_grad_norm_mean": float(egn_m),
+        "expected_grad_norm_ci_hw": float(egn_h),
+        "final_nas_mean": float(np.asarray(entry["nas_mean"])[-3:].mean()),
+    }
+    return rows
+
+
+def run(quick: bool = False, seeds=None) -> list[dict]:
+    m, tau = 7, 15
+    seeds = seed_tuple(seeds)
+    taus = uniform_taus(1, tau, m, seed=0)
+    epochs = 8 if quick else None
+    lams = (0.98, 0.92) if quick else (0.98, 0.95, 0.92)
+
+    base_spec = SweepSpec(
+        name="fig5_no_decay",
+        base=make_cfg(make_strategy("periodic", tau=tau, taus=taus),
+                      epochs=epochs),
+        seeds=seeds,
+    )
+    decay_spec = SweepSpec(
+        name="fig5_decay",
+        base=make_cfg(
+            make_strategy("decay", tau=tau, taus=taus,
+                          decay=exponential_decay(lams[0])),
+            epochs=epochs,
+        ),
+        seeds=seeds,
+        vmapped=(SweepAxis("lam", lams),),
+    )
+
+    res_base = run_sweep(base_spec)          # seeds-only vmap
+    res_decay = run_sweep(decay_spec)        # (lam x seeds) in one computation
+    res_loop = run_sweep_loop(decay_spec)    # same grid, Python seed-loop
+
+    out = {
+        "schema_version": 1,
+        "quick": bool(quick),
+        "seeds": list(seeds),
+        "n_seeds": len(seeds),
+        "lams": list(lams),
+        "curves": {},
+        "summary": {},
+    }
+    rows = _curves(out, res_base.metrics["base"], "no-decay")
+    emit("fig5/no-decay", res_base.wall_s["base"] / len(seeds) * 1e6,
+         f"grad_norm={out['summary']['no-decay']['expected_grad_norm_mean']:.4f}"
+         f"+-{out['summary']['no-decay']['expected_grad_norm_ci_hw']:.4f}")
+    per_run_us = res_decay.wall_s["base"] / decay_spec.n_runs * 1e6
+    for i, lam in enumerate(lams):
+        config = f"lambda={lam}"
+        rows += _curves(out, res_decay.metrics["base"], config, lam_idx=i)
+        s = out["summary"][config]
+        emit(f"fig5/{config}", per_run_us,
+             f"grad_norm={s['expected_grad_norm_mean']:.4f}"
+             f"+-{s['expected_grad_norm_ci_hw']:.4f}")
+
+    # Parity guard: the vmapped grid tracks the loop reference (same grid,
+    # same jnp backend; XLA batching is allowed ~ulp-level drift only).
+    max_dev = max(
+        float(np.max(np.abs(res_decay.metrics["base"][k]
+                            - res_loop.metrics["base"][k])))
+        for k in res_decay.metrics["base"]
+    )
+    out["timings"] = {
+        "n_runs": decay_spec.n_runs,
+        "vmapped_exec_s": res_decay.wall_s["base"],
+        "vmapped_compile_s": res_decay.compile_s["base"],
+        "loop_exec_s": res_loop.wall_s["base"],
+        "loop_compile_s": res_loop.compile_s["base"],
+        # > 1 means the single vmapped computation beats the Python seed-loop
+        "vmapped_speedup": res_loop.wall_s["base"] / res_decay.wall_s["base"],
+        "max_abs_dev_vs_loop": max_dev,
+    }
+    emit("fig5/sweep_vs_loop", res_decay.wall_s["base"] * 1e6,
+         f"loop={res_loop.wall_s['base'] * 1e6:.0f}us "
+         f"x{out['timings']['vmapped_speedup']:.2f}")
+
+    write_bench_json("fig5_sweep", out)
+    res_decay.save("experiments/sweeps")
     write_csv("fig5_decay", rows)
     return rows
 

@@ -1,18 +1,43 @@
-"""Paper Fig. 6: consensus-based method (CIRL), topology/round sweep."""
-from __future__ import annotations
+"""Paper Fig. 6: consensus-based method (CIRL), topology/round/eps sweep.
 
-import time
+Runs on ``repro.sweep``: topologies and gossip round counts are *static*
+axis points (the adjacency fixes the (m, m) sparsity and E the trace), while
+the seed axis — and for the sparse E=1 topology also the consensus step size
+eps — vmap into single jitted computations. The eps axis exercises the
+traced-mixing-matrix override: P = I - eps*La rebuilds inside the trace, so
+every eps value shares one compilation.
+"""
+from __future__ import annotations
 
 import numpy as np
 
-from benchmarks.common import emit, write_csv
-from benchmarks.fmarl_bench import run_config, topo_dense, topo_sparse
+from benchmarks.common import (
+    emit,
+    seed_tuple,
+    strategy_axis,
+    sweep_config_rows,
+    write_bench_json,
+    write_csv,
+)
+from benchmarks.fmarl_bench import make_cfg, topo_dense, topo_sparse
 from repro.core import make_strategy
 from repro.core import topology as T
+from repro.sweep import SweepAxis, SweepSpec, run_sweep
 
 
-def run(quick: bool = False) -> list[dict]:
+def _config_rows(rows, curves, name, metrics, n_seeds, lam_idx=None):
+    entry, rws = sweep_config_rows(name, metrics, n_seeds, idx=lam_idx)
+    curves[name] = entry
+    rows += rws
+    gn_m = np.asarray(entry["grad_norm_mean"])
+    gn_h = np.asarray(entry["grad_norm_ci_hw"])
+    return float(gn_m.mean()), float(gn_h.mean())
+
+
+def run(quick: bool = False, seeds=None) -> list[dict]:
     m, tau = 7, 10
+    seeds = seed_tuple(seeds)
+    epochs = 8 if quick else None
     sp, dn = topo_sparse(m), topo_dense(m)
     configs = [
         ("periodic", make_strategy("periodic", tau=tau, m=m)),
@@ -28,15 +53,50 @@ def run(quick: bool = False) -> list[dict]:
     ]
     if quick:
         configs = configs[:2]
-    rows = []
-    for name, strat in configs:
-        t0 = time.perf_counter()
-        row, metrics = run_config(name, strat)
-        for ep, v in enumerate(np.asarray(metrics["nas"])):
-            rows.append({"config": name, "epoch": ep, "nas": float(v),
-                         "grad_norm": float(metrics["server_grad_sq_norm"][ep])})
-        emit(f"fig6/{name}", (time.perf_counter() - t0) * 1e6,
-             f"grad_norm={row['expected_grad_norm']:.4f}")
+
+    spec = SweepSpec(
+        name="fig6_consensus",
+        base=make_cfg(configs[0][1], epochs=epochs),
+        seeds=seeds,
+        static=(strategy_axis("topology", configs),),
+    )
+    res = run_sweep(spec)
+
+    rows, curves = [], {}
+    for name, _ in configs:
+        gm, gh = _config_rows(rows, curves, name, res.metrics[name],
+                              len(seeds))
+        emit(f"fig6/{name}", res.wall_s[name] / len(seeds) * 1e6,
+             f"grad_norm={gm:.4f}+-{gh:.4f}")
+
+    # vmapped eps axis on the sparse E=1 topology: fractions of 1/Delta
+    fracs = (0.45, 0.9) if quick else (0.3, 0.6, 0.9)
+    eps_vals = tuple(f / sp.max_degree for f in fracs)
+    eps_spec = SweepSpec(
+        name="fig6_eps",
+        base=make_cfg(
+            make_strategy("consensus", tau=tau, topo=sp,
+                          eps=eps_vals[0], rounds=1, m=m),
+            epochs=epochs,
+        ),
+        seeds=seeds,
+        vmapped=(SweepAxis("eps", eps_vals),),
+    )
+    eps_res = run_sweep(eps_spec)
+    per_run_us = eps_res.wall_s["base"] / eps_spec.n_runs * 1e6
+    for i, (frac, eps) in enumerate(zip(fracs, eps_vals)):
+        name = f"consensus e=1 eps={frac:.2f}/max_deg"
+        gm, gh = _config_rows(rows, curves, name, eps_res.metrics["base"],
+                              len(seeds), lam_idx=i)
+        emit(f"fig6/{name}", per_run_us, f"grad_norm={gm:.4f}+-{gh:.4f}")
+
+    write_bench_json("fig6_sweep", {
+        "schema_version": 1, "quick": bool(quick),
+        "seeds": list(seeds), "n_seeds": len(seeds),
+        "eps_values": list(eps_vals), "eps_fracs": list(fracs),
+        "curves": curves,
+        "wall_s": {**res.wall_s, "eps_axis": eps_res.wall_s["base"]},
+    })
     write_csv("fig6_consensus", rows)
     return rows
 

@@ -36,12 +36,17 @@ def topo_dense(m=7):
     return T.random_regularish(m, 5, 6, seed=0)
 
 
-def run_config(name: str, strategy, *, env=FIGURE_EIGHT, algo="ppo", seed=0,
-               epochs=None):
-    cfg = FedRLConfig(
+def make_cfg(strategy, *, env=FIGURE_EIGHT, algo="ppo", epochs=None):
+    """The shared scaled-down run geometry as a FedRLConfig (sweep base)."""
+    return FedRLConfig(
         env=env, strategy=strategy, eta=ETA, algo=algo,
         n_epochs=epochs or U_EPOCHS, epoch_len=T_LEN, minibatch=P_BATCH,
     )
+
+
+def run_config(name: str, strategy, *, env=FIGURE_EIGHT, algo="ppo", seed=0,
+               epochs=None):
+    cfg = make_cfg(strategy, env=env, algo=algo, epochs=epochs)
     server, metrics, ledger = run_fedrl(cfg, jax.random.key(seed))
     row = {
         "config": name,

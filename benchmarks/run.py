@@ -9,6 +9,7 @@ experiments/bench/.
 from __future__ import annotations
 
 import argparse
+import inspect
 import sys
 import time
 
@@ -20,6 +21,9 @@ def main() -> None:
     ap.add_argument("--only", default=None,
                     help="run a single bench: table2|fig4|fig5|fig6|fig789|"
                          "bounds|roofline|kernels|dispatch|rollout_fleet")
+    ap.add_argument("--seeds", type=int, default=None,
+                    help="seed count for the sweep-based figure benches "
+                         "(fig4/fig5/fig6; default 4)")
     args = ap.parse_args()
 
     from benchmarks import (  # imported lazily so --only is cheap
@@ -53,7 +57,14 @@ def main() -> None:
         if name not in benches:
             sys.exit(f"unknown bench {name!r}; have {list(benches)}")
         print(f"# --- {name} ---", flush=True)
-        benches[name](quick=args.quick)
+        kw = {"quick": args.quick}
+        if args.seeds is not None:
+            if "seeds" in inspect.signature(benches[name]).parameters:
+                kw["seeds"] = args.seeds
+            elif args.only:
+                sys.exit(f"bench {name!r} does not take --seeds")
+            # full-suite run: non-sweep benches just ignore the flag
+        benches[name](**kw)
     print(f"# all benches done in {time.time() - t0:.0f}s", flush=True)
 
 

@@ -12,6 +12,12 @@ on with ``--num-envs``:
   # kernel-dispatch path forced through interpret mode:
   PYTHONPATH=src python examples/fmarl_traffic.py \
       --num-envs 8 --hetero 0.2 --backend interpret
+
+Multi-seed sweep mode (``--seeds S``, S >= 2): every method runs S full
+training runs batched in ONE jitted vmapped computation (``repro.sweep``)
+and the table reports seed means with 95% t-interval half-widths:
+
+  PYTHONPATH=src python examples/fmarl_traffic.py --seeds 4
 """
 import argparse
 
@@ -22,8 +28,9 @@ from repro.core import make_strategy, uniform_taus
 from repro.core.decay import exponential_decay
 from repro.core import topology as T
 from repro.rl import FedRLConfig, get_scenario, make_fleet, run_fedrl
-from repro.rl.fedrl import expected_gradient_norm
+from repro.rl.fedrl import expected_gradient_norm, fedrl_ledger
 from repro.rl.scenarios import SCENARIOS
+from repro.sweep import SweepSpec, mean_ci, run_sweep
 
 
 def main():
@@ -43,7 +50,13 @@ def main():
     ap.add_argument("--agents", type=int, default=0,
                     help="fleet size m (fleet mode; default: the scenario's "
                          "RL-vehicle count, matching the paper's Table II)")
+    ap.add_argument("--seeds", type=int, default=1,
+                    help="seed count; >= 2 runs each method as one vmapped "
+                         "multi-seed sweep (repro.sweep) and reports "
+                         "mean +- 95%% CI")
     args = ap.parse_args()
+    if args.seeds < 1:
+        ap.error("--seeds must be >= 1")
 
     env = get_scenario(args.scenario).cfg
     fleet = args.num_envs > 0
@@ -77,20 +90,35 @@ def main():
     mode = (f"fleet m={m} B={args.num_envs} hetero="
             f"{args.hetero if args.hetero is not None else 'preset'}"
             if fleet else f"shared-env m={m}")
+    sweep = args.seeds >= 2
     print(f"scenario={env.name} {mode} algo={args.algo} "
-          f"backend={args.backend} epochs={args.epochs}")
-    print(f"{'method':28s} {'E||gradF||^2':>12s} {'NAS(start->end)':>18s} "
+          f"backend={args.backend} epochs={args.epochs}"
+          + (f" seeds={args.seeds} (vmapped sweep, mean +- 95% CI)"
+             if sweep else ""))
+    print(f"{'method':28s} {'E||gradF||^2':>22s} {'NAS(start->end)':>18s} "
           f"{'C1':>7s} {'W1':>8s}")
     for name, strat in runs.items():
         cfg = FedRLConfig(env=env, strategy=strat, eta=3e-3,
                           n_epochs=args.epochs, epoch_len=100, minibatch=20,
                           algo=args.algo, num_envs=args.num_envs,
                           env_params=env_params)
-        _, metrics, ledger = run_fedrl(cfg, jax.random.key(0))
-        nas0 = float(np.mean(metrics["nas"][:3]))
-        nas1 = float(np.mean(metrics["nas"][-3:]))
+        if sweep:
+            spec = SweepSpec(name="traffic", base=cfg,
+                             seeds=tuple(range(args.seeds)))
+            met = run_sweep(spec).metrics["base"]
+            # per-seed run-level grad norm, then mean/CI over the seed axis
+            egn_m, egn_h = mean_ci(met["server_grad_sq_norm"].mean(-1), 0)
+            nas0 = float(met["nas"][:, :3].mean())
+            nas1 = float(met["nas"][:, -3:].mean())
+            ledger = fedrl_ledger(cfg)
+            egn_s = f"{float(egn_m):9.4f} +- {float(egn_h):7.4f}"
+        else:
+            _, metrics, ledger = run_fedrl(cfg, jax.random.key(0))
+            nas0 = float(np.mean(metrics["nas"][:3]))
+            nas1 = float(np.mean(metrics["nas"][-3:]))
+            egn_s = f"{expected_gradient_norm(metrics):22.4f}"
         row = ledger.table_row()
-        print(f"{name:28s} {expected_gradient_norm(metrics):12.4f} "
+        print(f"{name:28s} {egn_s:>22s} "
               f"{nas0:8.3f} -> {nas1:5.3f} "
               f"{row['communication_overheads_C1']:>7d} "
               f"{row['inter_communication_W1']:>8d}")

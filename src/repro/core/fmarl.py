@@ -96,6 +96,27 @@ def run_fmarl(
     Returns (final FmarlState, metrics dict of stacked per-period arrays,
     CostLedger).
     """
+    state, metrics = run_fmarl_core(
+        cfg, init_params, local_grad_fn, key, eval_grad_fn
+    )
+    ledger = CostLedger()
+    ledger.add_periods(cfg.strategy, cfg.n_periods)
+    return state, metrics, ledger
+
+
+def run_fmarl_core(
+    cfg: FmarlConfig,
+    init_params,
+    local_grad_fn: Callable,
+    key: jax.Array,
+    eval_grad_fn: Optional[Callable] = None,
+):
+    """Traced core of :func:`run_fmarl`: ``(FmarlState, metrics)`` only.
+
+    Pure function of its arguments with no host transfers — safe under
+    ``jax.jit`` / ``jax.vmap`` (the sweep engine maps it over a seed axis).
+    The CostLedger is host-side accounting and lives in the wrapper.
+    """
     if _use_flat_carry(cfg):
         return _run_fmarl_flat(cfg, init_params, local_grad_fn, key, eval_grad_fn)
     return _run_fmarl_tree(cfg, init_params, local_grad_fn, key, eval_grad_fn)
@@ -143,10 +164,7 @@ def _run_fmarl_tree(cfg, init_params, local_grad_fn, key, eval_grad_fn):
         return new_state, metrics
 
     final_state, metrics = jax.lax.scan(period, state, None, length=cfg.n_periods)
-
-    ledger = CostLedger()
-    ledger.add_periods(strat, cfg.n_periods)
-    return final_state, metrics, ledger
+    return final_state, metrics
 
 
 def _run_fmarl_flat(cfg, init_params, local_grad_fn, key, eval_grad_fn):
@@ -215,9 +233,7 @@ def _run_fmarl_flat(cfg, init_params, local_grad_fn, key, eval_grad_fn):
         step=step,
         key=key,
     )
-    ledger = CostLedger()
-    ledger.add_periods(strat, cfg.n_periods)
-    return final_state, metrics, ledger
+    return final_state, metrics
 
 
 def expected_gradient_norm(metrics) -> float:

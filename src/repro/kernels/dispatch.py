@@ -163,16 +163,50 @@ def stacked_ravel(tree_m):
 
 
 # --- dispatched primitives ----------------------------------------------------
+#
+# Sweep axis: every flat primitive also accepts a leading sweep axis S on its
+# buffers — ``(S, m, n)`` instead of ``(m, n)`` — by vmapping itself over axis
+# 0 (the per-axis coefficient / mixing arguments gain a matching leading axis
+# or broadcast). This is the shape the sweep engine (repro.sweep) produces
+# when it vmaps a whole federated run over seeds/hyperparameters: one trace
+# covers all S runs, no per-run retraces.
+
 
 def decay_accum(acc, g, d, *, backend: str = "auto", block_n: int = 4096):
     """``acc + d * g`` — the fused FMA at the heart of the decay/SGD step.
 
-    ``acc``/``g``: ``(n,)`` or ``(m, n)``; ``d``: scalar, or ``(m,)`` per-agent
-    coefficients when the inputs are ``(m, n)`` (the kernel is vmapped over
-    the agent axis). Accumulates in fp32 on every backend; the result is cast
-    back to ``acc.dtype``.
+    ``acc``/``g``: ``(n,)`` or ``(m, n)`` buffers, or ``(S, m, n)`` with a
+    leading sweep axis; ``d``: scalar, or ``(m,)`` per-agent coefficients when
+    the inputs are ``(m, n)`` (the kernel is vmapped over the agent axis), or
+    additionally ``(S,)`` / ``(S, m)`` per-run coefficients on the sweep path.
+    Accumulates in fp32 on every backend; the result is cast back to
+    ``acc.dtype``.
     """
     b = resolve_backend(backend)
+    if acc.ndim == 3:
+        if acc.shape != g.shape:
+            raise ValueError(
+                f"decay_accum: acc/g must match on the sweep path, got "
+                f"{acc.shape} vs {g.shape}"
+            )
+        d_arr = jnp.asarray(d, jnp.float32)
+        S, m = acc.shape[0], acc.shape[1]
+        if d_arr.ndim == 1 and S == m and d_arr.shape[0] == S:
+            # A 1-D d could mean per-run (S,) or shared per-agent (m,) and
+            # the two disagree numerically — refuse rather than guess.
+            raise ValueError(
+                f"decay_accum: 1-D d of length {S} is ambiguous on a sweep "
+                f"path with S == m == {S}; pass (S, m) coefficients (tile "
+                f"the shared/per-run vector) or a scalar"
+            )
+        if d_arr.ndim == 2 or (d_arr.ndim == 1 and d_arr.shape[0] == S):
+            # per-run coefficients: (S,) or (S, m)
+            return jax.vmap(
+                lambda a, gi, di: decay_accum(a, gi, di, backend=b, block_n=block_n)
+            )(acc, g, d_arr)
+        return jax.vmap(
+            lambda a, gi: decay_accum(a, gi, d_arr, backend=b, block_n=block_n)
+        )(acc, g)
     if acc.ndim not in (1, 2) or acc.shape != g.shape:
         raise ValueError(
             f"decay_accum: acc/g must be matching (n,) or (m, n) buffers, "
@@ -216,6 +250,23 @@ def scale_rows(g, w, *, backend: str = "auto", block_n: int = 4096):
     standalone form backs ``transform`` when called outside the fused update.
     """
     b = resolve_backend(backend)
+    if g.ndim == 3:
+        w_arr = jnp.asarray(w, jnp.float32)
+        if w_arr.ndim == 2:  # (S, m) per-run weights
+            return jax.vmap(
+                lambda gi, wi: scale_rows(gi, wi, backend=b, block_n=block_n)
+            )(g, w_arr)
+        if w_arr.ndim == 1 and g.shape[0] == g.shape[1]:
+            # S == m: a 1-D w could be read as per-run or per-agent under
+            # the sweep conventions — refuse rather than guess (matches
+            # decay_accum's guard).
+            raise ValueError(
+                f"scale_rows: 1-D w of length {g.shape[1]} is ambiguous on a "
+                f"sweep path with S == m == {g.shape[0]}; pass (S, m) weights"
+            )
+        return jax.vmap(
+            lambda gi: scale_rows(gi, w_arr, backend=b, block_n=block_n)
+        )(g)
     if g.ndim != 2:
         raise ValueError(f"scale_rows: g must be (m, n), got {g.shape}")
     w_arr = jnp.asarray(w, jnp.float32)
@@ -237,6 +288,15 @@ def consensus_mix(g, mixing, *, backend: str = "auto", block_n: int = 2048):
     drift from the CPU reference) and cast back to ``g.dtype``.
     """
     b = resolve_backend(backend)
+    if g.ndim == 3:
+        mixing = jnp.asarray(mixing)
+        if mixing.ndim == 3:  # (S, m, m) per-run mixing matrices
+            return jax.vmap(
+                lambda gi, mi: consensus_mix(gi, mi, backend=b, block_n=block_n)
+            )(g, mixing)
+        return jax.vmap(
+            lambda gi: consensus_mix(gi, mixing, backend=b, block_n=block_n)
+        )(g)
     if g.ndim != 2:
         raise ValueError(f"consensus_mix: g must be (m, n), got {g.shape}")
     m = g.shape[0]
@@ -267,6 +327,8 @@ def row_mean(g, *, backend: str = "auto", block_n: int = 4096):
     backend and casts back to ``g.dtype``.
     """
     b = resolve_backend(backend)
+    if g.ndim == 3:
+        return jax.vmap(lambda gi: row_mean(gi, backend=b, block_n=block_n))(g)
     if g.ndim != 2:
         raise ValueError(f"row_mean: g must be (m, n), got {g.shape}")
     if b == "jnp":

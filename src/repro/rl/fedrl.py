@@ -267,13 +267,34 @@ def _finish_ledger(strat, n_updates: int) -> CostLedger:
     return ledger
 
 
+def fedrl_ledger(cfg: FedRLConfig) -> CostLedger:
+    """The run's communication-cost ledger (host-side, config-only — the
+    same for every seed, so sweep callers compute it once per config)."""
+    return _finish_ledger(
+        cfg.strategy, cfg.n_epochs * (cfg.epoch_len // cfg.minibatch)
+    )
+
+
 def run_fedrl(cfg: FedRLConfig, key) -> tuple[Any, dict, CostLedger]:
+    server, metrics = run_fedrl_core(cfg, key)
+    metrics = jax.tree.map(np.asarray, jax.device_get(metrics))
+    return server, metrics, fedrl_ledger(cfg)
+
+
+def run_fedrl_core(cfg: FedRLConfig, key) -> tuple[Any, dict]:
+    """Traced core of :func:`run_fedrl`: ``(server_params, metrics)`` only.
+
+    Pure function of ``(cfg, key)`` with no host transfers — safe to wrap in
+    ``jax.jit`` / ``jax.vmap`` (the sweep engine maps it over a seed axis and
+    over traced hyperparameter overrides). The communication-cost ledger is
+    host-side accounting and lives in the :func:`run_fedrl` wrapper.
+    """
     if _use_flat_carry(cfg):  # the one carry-selection predicate, shared
         return _run_fedrl_flat(cfg, key)
     return _run_fedrl_tree(cfg, key)
 
 
-def _run_fedrl_tree(cfg: FedRLConfig, key) -> tuple[Any, dict, CostLedger]:
+def _run_fedrl_tree(cfg: FedRLConfig, key) -> tuple[Any, dict]:
     """Tree-space reference path (bit-identical to the original jnp driver)."""
     strat = cfg.strategy
     m, tau = strat.m, strat.tau
@@ -324,12 +345,10 @@ def _run_fedrl_tree(cfg: FedRLConfig, key) -> tuple[Any, dict, CostLedger]:
         epoch, carry, None, length=cfg.n_epochs
     )
     server = strat.server_average(params_m)
-
-    ledger = _finish_ledger(strat, cfg.n_epochs * updates_per_epoch)
-    return server, jax.tree.map(np.asarray, jax.device_get(metrics)), ledger
+    return server, metrics
 
 
-def _run_fedrl_flat(cfg: FedRLConfig, key) -> tuple[Any, dict, CostLedger]:
+def _run_fedrl_flat(cfg: FedRLConfig, key) -> tuple[Any, dict]:
     """Flat-carry path: replicas live as one (m, n) matrix across all scans.
 
     ``cfg.buffer_dtype`` selects the storage dtype of the flat params/grad
@@ -417,10 +436,7 @@ def _run_fedrl_flat(cfg: FedRLConfig, key) -> tuple[Any, dict, CostLedger]:
     (flat, opt_state, k, key), metrics = jax.lax.scan(
         epoch, carry, None, length=cfg.n_epochs
     )
-    server = server_view(flat)
-
-    ledger = _finish_ledger(strat, cfg.n_epochs * updates_per_epoch)
-    return server, jax.tree.map(np.asarray, jax.device_get(metrics)), ledger
+    return server_view(flat), metrics
 
 
 def expected_gradient_norm(metrics) -> float:

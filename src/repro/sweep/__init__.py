@@ -1,0 +1,49 @@
+"""repro.sweep — batched multi-seed / multi-hyperparameter experiment engine.
+
+Runs many full federated training runs in ONE jitted computation: the seed
+axis and value-only hyperparameters (eta, decay lambda, consensus eps) vmap
+into a single leading sweep axis — the drivers' flat ``(m, n)`` carry becomes
+``(S, m, n)`` — while shape-changing statics (tau, topology, scenario) loop
+outside. See DESIGN.md §10 and ``repro.sweep.spec`` for the axis taxonomy.
+
+    from repro.sweep import SweepAxis, SweepSpec, run_sweep
+
+    spec = SweepSpec(
+        name="fig5",
+        base=FedRLConfig(env=FIGURE_EIGHT, strategy=decay_strategy, ...),
+        seeds=(0, 1, 2, 3),
+        vmapped=(SweepAxis("lam", (0.98, 0.95, 0.92)),),
+    )
+    result = run_sweep(spec)                # one vmapped computation
+    mean, hw = result.seed_mean_ci("base", "server_grad_sq_norm")
+    result.save("experiments/sweeps")       # versioned JSON + CSV
+"""
+from repro.sweep.overrides import (
+    OVERRIDES,
+    apply_overrides,
+    override_eps,
+    override_eta,
+    override_lam,
+    register_override,
+)
+from repro.sweep.results import SweepResult, mean_ci, t_critical
+from repro.sweep.runner import run_sweep, run_sweep_loop, static_points
+from repro.sweep.spec import StaticAxis, SweepAxis, SweepSpec
+
+__all__ = [
+    "OVERRIDES",
+    "StaticAxis",
+    "SweepAxis",
+    "SweepSpec",
+    "SweepResult",
+    "apply_overrides",
+    "mean_ci",
+    "override_eps",
+    "override_eta",
+    "override_lam",
+    "register_override",
+    "run_sweep",
+    "run_sweep_loop",
+    "static_points",
+    "t_critical",
+]

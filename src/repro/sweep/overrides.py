@@ -1,0 +1,116 @@
+"""Traced hyperparameter overrides for the vmapped sweep axes.
+
+An override rewrites a config *inside* the traced computation so one trace
+serves every value of the axis: it receives the static base config and a
+traced scalar, and returns a config whose affected fields hold traced arrays.
+Strategy objects are frozen dataclasses whose precomputed tables (decay
+weights, mixing matrices) the hot loop reads through ``jnp.asarray`` — so a
+shallow copy with those fields replaced by traced equivalents drops straight
+into the existing drivers.
+
+Because the values are tracers, the eager validation that runs at strategy
+construction (A3 monotonicity for decay, the 0 < eps < 1/Delta bound for
+mixing) cannot run here — callers keep their sweep values inside the ranges
+the paper's assumptions demand.
+
+Built-in axes:
+
+* ``eta`` — learning rate; any config with an ``eta`` field.
+* ``lam`` — decay constant of the exponential family (eq. 21,
+  ``D(j) = lam^{j/2}``); requires a ``DecayStrategy``.
+* ``eps`` — consensus step size; rebuilds ``P = I - eps*La`` and the fused /
+  mask-folded powers; requires a ``ConsensusStrategy``.
+
+``register_override`` adds custom axes.
+"""
+from __future__ import annotations
+
+import copy
+import dataclasses
+from typing import Callable, Dict
+
+import jax.numpy as jnp
+
+from repro.core.strategies import ConsensusStrategy, DecayStrategy
+from repro.core.topology import laplacian
+
+
+def _strategy_copy(strat, **fields):
+    """Shallow-copy a frozen strategy dataclass with traced field overrides."""
+    new = copy.copy(strat)
+    for name, value in fields.items():
+        object.__setattr__(new, name, value)
+    return new
+
+
+def override_eta(cfg, eta):
+    """Learning-rate axis: works for FedRLConfig and FmarlConfig alike."""
+    return dataclasses.replace(cfg, eta=eta)
+
+
+def override_lam(cfg, lam):
+    """Decay-constant axis: retabulates ``D(j) = lam^{j/2}`` (eq. 21) traced."""
+    strat = cfg.strategy
+    if not isinstance(strat, DecayStrategy):
+        raise TypeError(
+            f"'lam' axis needs a DecayStrategy base, got {type(strat).__name__}"
+        )
+    offs = jnp.arange(strat.tau, dtype=jnp.float32)
+    w = jnp.power(jnp.asarray(lam, jnp.float32), offs / 2.0)
+    return dataclasses.replace(cfg, strategy=_strategy_copy(strat, decay_weights=w))
+
+
+def override_eps(cfg, eps):
+    """Consensus step-size axis: rebuilds P, P^E and the mask-folded tables.
+
+    The topology (and hence every shape) stays static; only the matrix
+    *values* trace. ``rounds`` is a static int, so the fused power unrolls.
+    """
+    strat = cfg.strategy
+    if not isinstance(strat, ConsensusStrategy):
+        raise TypeError(
+            f"'eps' axis needs a ConsensusStrategy base, got {type(strat).__name__}"
+        )
+    lap = jnp.asarray(laplacian(strat.topo), jnp.float32)
+    p = jnp.eye(strat.m, dtype=jnp.float32) - jnp.asarray(eps, jnp.float32) * lap
+    p_e = p
+    for _ in range(strat.rounds - 1):
+        p_e = jnp.matmul(p_e, p)
+    mask_t = jnp.asarray(strat.mask).T[:, None, :]          # (tau, 1, m)
+    strat = _strategy_copy(
+        strat,
+        p=p,
+        p_e=p_e,
+        p_masked=p[None, :, :] * mask_t,
+        p_e_masked=p_e[None, :, :] * mask_t,
+        eps=eps,
+    )
+    return dataclasses.replace(cfg, strategy=strat)
+
+
+OVERRIDES: Dict[str, Callable] = {
+    "eta": override_eta,
+    "lam": override_lam,
+    "eps": override_eps,
+}
+
+
+def register_override(name: str, fn: Callable) -> None:
+    """Register a custom vmapped axis: ``fn(cfg, traced_value) -> cfg``."""
+    if not callable(fn):
+        raise TypeError("override must be callable")
+    OVERRIDES[name] = fn
+
+
+def apply_overrides(cfg, names, values):
+    """Apply registered overrides in axis order (traced context)."""
+    for name, value in zip(names, values):
+        try:
+            fn = OVERRIDES[name]
+        except KeyError:
+            raise KeyError(
+                f"no override registered for vmapped axis {name!r}; "
+                f"have {sorted(OVERRIDES)}"
+            ) from None
+        cfg = fn(cfg, value)
+    return cfg

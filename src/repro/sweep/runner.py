@@ -1,0 +1,186 @@
+"""Batched sweep execution: one jitted vmap over the whole (hypers x seeds)
+grid per static point, plus the equivalent Python-loop reference.
+
+``run_sweep`` flattens the cartesian product of every vmapped axis and the
+seed list into a single leading sweep axis S and vmaps the driver core over
+it — the drivers' flat ``(m, n)`` scan carry becomes ``(S, m, n)`` and the
+dispatch primitives batch over the extra axis inside one trace. Static axes
+(tau, topology, scenario — anything shape-changing) run as an outer Python
+loop, one trace each.
+
+``run_sweep_loop`` executes the identical grid as S independent single-run
+calls through one jitted single-run function (compiled once, reused).  It is
+the determinism reference — on the jnp backend its metrics are bit-identical
+to the vmapped sweep — and the wall-clock baseline the vmapped engine is
+measured against in ``benchmarks/fig5_decay.py``.
+"""
+from __future__ import annotations
+
+import itertools
+import time
+from typing import Callable, Iterator, List, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.sweep.overrides import apply_overrides
+from repro.sweep.results import SweepResult
+from repro.sweep.spec import SweepSpec
+
+
+def _default_run_fn(cfg, key):
+    """Metrics of one federated RL run (the figure-grid workload)."""
+    from repro.rl.fedrl import run_fedrl_core
+
+    return run_fedrl_core(cfg, key)[1]
+
+
+def _flatten_metrics(tree) -> dict:
+    """Flatten a metrics pytree to a flat dict with '/'-joined key paths."""
+    flat = {}
+
+    def walk(prefix, node):
+        if isinstance(node, dict):
+            for k in sorted(node):
+                walk(f"{prefix}/{k}" if prefix else str(k), node[k])
+        else:
+            flat[prefix] = node
+
+    walk("", tree)
+    return flat
+
+
+def static_points(spec: SweepSpec) -> Iterator[Tuple[str, Callable]]:
+    """Cartesian product of the static axes -> (label, composed transform).
+
+    Labels key the result dicts, so a collision would silently overwrite a
+    grid point's runs — raise instead.
+    """
+    if not spec.static:
+        yield "base", lambda cfg: cfg
+        return
+    seen = set()
+    for combo in itertools.product(*(ax.points for ax in spec.static)):
+        label = "/".join(lab for lab, _ in combo if lab) or "base"
+        if label in seen:
+            raise ValueError(f"duplicate static-point label {label!r}")
+        seen.add(label)
+
+        def transform(cfg, fns=tuple(fn for _, fn in combo)):
+            for fn in fns:
+                cfg = fn(cfg)
+            return cfg
+
+        yield label, transform
+
+
+def _grid_arrays(spec: SweepSpec) -> Tuple[List[np.ndarray], np.ndarray]:
+    """Flatten the (axes x seeds) product into per-axis value vectors.
+
+    Returns ``(axis_value_vectors, seed_vector)``, each of length
+    ``spec.n_runs`` — row i holds grid cell i's coordinates (C-order over
+    ``spec.grid_shape``, seeds innermost).
+    """
+    axes_vals = [np.asarray(a.values, np.float32) for a in spec.vmapped]
+    seeds = np.asarray(spec.seeds, np.int32)
+    mesh = np.meshgrid(*axes_vals, seeds, indexing="ij")
+    flat = [m.reshape(-1) for m in mesh]
+    return flat[:-1], flat[-1].astype(np.int32)
+
+
+def _make_one(spec: SweepSpec, cfg) -> Callable:
+    """The single-run function ``(seed, *axis_values) -> flat metrics dict``."""
+    run_fn = spec.run_fn or _default_run_fn
+    names = [a.name for a in spec.vmapped]
+
+    def one(seed, *values):
+        cfg_i = apply_overrides(cfg, names, values)
+        return _flatten_metrics(run_fn(cfg_i, jax.random.key(seed)))
+
+    return one
+
+
+def _reshape(spec: SweepSpec, stacked: dict) -> dict:
+    shape = spec.grid_shape
+    return {
+        k: np.asarray(v).reshape(shape + np.shape(v)[1:])
+        for k, v in stacked.items()
+    }
+
+
+def run_sweep(spec: SweepSpec, *, use_jit: bool = True) -> SweepResult:
+    """Execute the sweep: one jitted vmapped computation per static point.
+
+    Every static point traces once; all ``spec.n_runs`` full federated runs
+    of its grid execute inside that single computation. ``compile_s`` records
+    the one-off trace+compile (AOT-lowered so it is separable), ``wall_s``
+    the batched execution.
+    """
+    axis_vals, seeds = _grid_arrays(spec)
+    metrics, wall_s, compile_s = {}, {}, {}
+    for label, transform in static_points(spec):
+        cfg = transform(spec.base)
+        batched = jax.vmap(_make_one(spec, cfg))
+        args = (jnp.asarray(seeds),) + tuple(jnp.asarray(v) for v in axis_vals)
+        if use_jit:
+            t0 = time.perf_counter()
+            compiled = jax.jit(batched).lower(*args).compile()
+            compile_s[label] = time.perf_counter() - t0
+            batched = compiled
+        t0 = time.perf_counter()
+        out = jax.block_until_ready(batched(*args))
+        wall_s[label] = time.perf_counter() - t0
+        metrics[label] = _reshape(spec, jax.device_get(out))
+    return SweepResult(
+        name=spec.name,
+        axes={a.name: list(a.values) for a in spec.vmapped},
+        seeds=list(spec.seeds),
+        metrics=metrics,
+        wall_s=wall_s,
+        compile_s=compile_s,
+        mode="vmapped",
+    )
+
+
+def run_sweep_loop(spec: SweepSpec, *, use_jit: bool = True) -> SweepResult:
+    """The same grid as S independent runs through one reused jitted call.
+
+    Semantically identical to :func:`run_sweep` (bit-identical metrics on the
+    jnp backend); this is the Python seed-loop the vmapped engine replaces,
+    kept as the determinism reference and wall-clock baseline.
+    """
+    axis_vals, seeds = _grid_arrays(spec)
+    metrics, wall_s, compile_s = {}, {}, {}
+    for label, transform in static_points(spec):
+        cfg = transform(spec.base)
+        one = _make_one(spec, cfg)
+        args0 = (jnp.asarray(seeds[0]),) + tuple(
+            jnp.asarray(v[0]) for v in axis_vals
+        )
+        if use_jit:
+            t0 = time.perf_counter()
+            one = jax.jit(one).lower(*args0).compile()
+            compile_s[label] = time.perf_counter() - t0
+        t0 = time.perf_counter()
+        per_run = []
+        for i in range(len(seeds)):
+            args = (jnp.asarray(seeds[i]),) + tuple(
+                jnp.asarray(v[i]) for v in axis_vals
+            )
+            per_run.append(jax.block_until_ready(one(*args)))
+        wall_s[label] = time.perf_counter() - t0
+        stacked = {
+            k: np.stack([np.asarray(r[k]) for r in per_run])
+            for k in per_run[0]
+        }
+        metrics[label] = _reshape(spec, stacked)
+    return SweepResult(
+        name=spec.name,
+        axes={a.name: list(a.values) for a in spec.vmapped},
+        seeds=list(spec.seeds),
+        metrics=metrics,
+        wall_s=wall_s,
+        compile_s=compile_s,
+        mode="loop",
+    )

@@ -1,0 +1,110 @@
+"""Sweep specifications: which experiment dimensions vmap, which stay static.
+
+The paper's headline results are *grids* — decay lambda x tau (Fig. 5),
+consensus eps x topology (Fig. 6), every cell averaged over seeds. A sweep
+splits those grid dimensions into two kinds of axis:
+
+* **vmapped axes** — seeds and any hyperparameter that only changes *values*
+  flowing through the traced computation: the PRNG seed, the learning rate
+  eta, the decay constant lambda (a ``(tau,)`` weight table), the consensus
+  step size eps (an ``(m, m)`` mixing matrix). All vmapped axes and the seed
+  axis form one cartesian product that is flattened into a single leading
+  sweep axis S, so one jitted vmap covers every cell — the flat ``(m, n)``
+  carry of the drivers becomes ``(S, m, n)`` and the dispatch primitives
+  batch over it without per-run retraces.
+
+* **static axes** — anything that changes *shapes or trace structure*: the
+  period length tau (the variation mask is ``(m, tau)`` and the inner scan
+  length is tau), the gossip topology (adjacency fixes the ``(m, m)``
+  sparsity and the agent count), the scenario / environment structure, the
+  backend. These run in an outer Python loop; each static point re-traces.
+
+A :class:`SweepSpec` names the experiment, carries the base config, the seed
+list, the vmapped hyperparameter axes, and the static axes (label +
+config-transform pairs). ``repro.sweep.runner`` executes it.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Callable, Optional, Tuple
+
+
+@dataclasses.dataclass(frozen=True)
+class SweepAxis:
+    """One vmapped hyperparameter axis.
+
+    ``name`` must be a registered override (see ``repro.sweep.overrides``):
+    the override maps ``(cfg, traced_value) -> cfg`` inside the traced
+    computation, so every value of the axis shares one trace.
+    """
+
+    name: str
+    values: Tuple[float, ...]
+
+    def __post_init__(self):
+        if not self.values:
+            raise ValueError(f"vmapped axis {self.name!r} needs >= 1 value")
+        object.__setattr__(self, "values", tuple(float(v) for v in self.values))
+
+
+@dataclasses.dataclass(frozen=True)
+class StaticAxis:
+    """One static (shape-changing) axis: labelled config transforms.
+
+    Each point is ``(label, transform)`` where ``transform(cfg) -> cfg`` is
+    applied *outside* the trace (it may swap strategies, taus, topologies,
+    scenarios — anything). Multiple static axes combine by cartesian product,
+    composing their transforms.
+    """
+
+    name: str
+    points: Tuple[Tuple[str, Callable], ...]
+
+    def __post_init__(self):
+        if not self.points:
+            raise ValueError(f"static axis {self.name!r} needs >= 1 point")
+
+
+@dataclasses.dataclass(frozen=True)
+class SweepSpec:
+    """A batched multi-seed experiment over one base config.
+
+    Attributes:
+      name: experiment name (used for the emitted JSON/CSV artifacts).
+      base: the template config (``FedRLConfig`` by default; any object when
+        ``run_fn`` is supplied).
+      seeds: PRNG seeds — always a vmapped axis (the innermost one).
+      vmapped: hyperparameter axes batched into the single jitted vmap.
+      static: shape-changing axes looped in Python (cartesian product).
+      run_fn: ``(cfg, key) -> metrics`` pytree of arrays; defaults to the
+        metrics of ``repro.rl.fedrl.run_fedrl_core``. Must be traced-safe
+        (no host transfers) — the runner vmaps and jits it.
+    """
+
+    name: str
+    base: Any
+    seeds: Tuple[int, ...]
+    vmapped: Tuple[SweepAxis, ...] = ()
+    static: Tuple[StaticAxis, ...] = ()
+    run_fn: Optional[Callable] = None
+
+    def __post_init__(self):
+        if not self.seeds:
+            raise ValueError("SweepSpec needs >= 1 seed")
+        object.__setattr__(self, "seeds", tuple(int(s) for s in self.seeds))
+        names = [a.name for a in self.vmapped]
+        if len(set(names)) != len(names):
+            raise ValueError(f"duplicate vmapped axis names: {names}")
+
+    @property
+    def grid_shape(self) -> Tuple[int, ...]:
+        """Shape of the vmapped grid: (*axis lengths, n_seeds)."""
+        return tuple(len(a.values) for a in self.vmapped) + (len(self.seeds),)
+
+    @property
+    def n_runs(self) -> int:
+        """Full federated runs per static point (product of the grid)."""
+        n = 1
+        for s in self.grid_shape:
+            n *= s
+        return n

@@ -1,8 +1,26 @@
 import os
 import sys
 
+import pytest
+
 # Tests run on the default single CPU device (the dry-run subprocess sets its
 # own XLA_FLAGS); keep compilation deterministic and quiet.
 os.environ.setdefault("JAX_PLATFORMS", "cpu")
 
 sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+
+
+@pytest.fixture(autouse=True)
+def _clear_dispatch_caches():
+    """Drop the cached ravel specs between tests.
+
+    The dispatch LRU is keyed on (treedef, shapes, dtypes) but not on
+    backend/dtype *config*, so a spec cached under one parametrization could
+    leak stale closures into the next test that changes backend or buffer
+    dtype. Clearing after every test keeps parametrized backend/dtype suites
+    hermetic.
+    """
+    yield
+    from repro.kernels import dispatch
+
+    dispatch.clear_caches()

@@ -1,0 +1,363 @@
+"""Sweep engine: determinism vs independent runs, vmapped-axis fidelity,
+(S, m, n) dispatch parity, result reduction/IO.
+
+Determinism contract: ``run_sweep_loop`` (the Python seed-loop over one
+jitted single-run function) is BIT-identical to S independent ``run_fedrl``
+calls — the grid semantics add nothing. The single vmapped computation
+(``run_sweep``) is the same program batched over the leading sweep axis;
+XLA lowers batched dot_generals to a different GEMM schedule, so it is
+pinned to the loop at ulp-scale tolerance rather than bitwise (DESIGN.md
+§10).
+"""
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import make_strategy
+from repro.core import topology as T
+from repro.core.decay import exponential_decay
+from repro.kernels import dispatch
+from repro.rl import FIGURE_EIGHT, FedRLConfig, run_fedrl
+from repro.sweep import (
+    StaticAxis,
+    SweepAxis,
+    SweepSpec,
+    mean_ci,
+    run_sweep,
+    run_sweep_loop,
+    t_critical,
+)
+
+SEEDS = (0, 1, 2, 3)
+
+
+def _cfg(backend="jnp", strategy=None, **kw):
+    strat = strategy or make_strategy(
+        "decay", tau=3, m=7, decay=exponential_decay(0.95), backend=backend
+    )
+    kw.setdefault("n_epochs", 2)
+    kw.setdefault("epoch_len", 40)
+    kw.setdefault("minibatch", 20)
+    kw.setdefault("eta", 3e-3)
+    return FedRLConfig(env=FIGURE_EIGHT, strategy=strat, **kw)
+
+
+# --- determinism ---------------------------------------------------------------
+
+def test_loop_sweep_bit_identical_to_independent_runs():
+    """The seed-loop reference IS S independent jitted single-run calls:
+    bitwise equal — including building the typed key from the seed *inside*
+    the trace vs handing in a concrete key. (The eager ``run_fedrl`` wrapper
+    compiles op-by-op, so jit-level fusion makes it a ulp-tolerance
+    comparison instead, below.)"""
+    from repro.rl.fedrl import run_fedrl_core
+
+    cfg = _cfg()
+    res = run_sweep_loop(SweepSpec(name="det", base=cfg, seeds=SEEDS))
+    jitted = jax.jit(lambda k: run_fedrl_core(cfg, k)[1])
+    for i, seed in enumerate(SEEDS):
+        metrics = jax.device_get(jitted(jax.random.key(seed)))
+        for k, arr in metrics.items():
+            np.testing.assert_array_equal(
+                res.metrics["base"][k][i], np.asarray(arr),
+                err_msg=f"seed={seed} metric={k}",
+            )
+        _, eager, _ = run_fedrl(cfg, jax.random.key(seed))
+        for k, arr in eager.items():
+            np.testing.assert_allclose(
+                res.metrics["base"][k][i], arr, rtol=1e-4, atol=1e-5,
+                err_msg=f"eager seed={seed} metric={k}",
+            )
+
+
+def test_vmapped_sweep_matches_loop_reference():
+    """One vmapped computation vs the Python seed-loop: same program batched;
+    only XLA's batched-GEMM reduction order may differ (ulp scale)."""
+    spec = SweepSpec(name="det", base=_cfg(), seeds=SEEDS)
+    rv = run_sweep(spec)
+    rl = run_sweep_loop(spec)
+    assert rv.mode == "vmapped" and rl.mode == "loop"
+    for k in rv.metrics["base"]:
+        np.testing.assert_allclose(
+            rv.metrics["base"][k], rl.metrics["base"][k],
+            rtol=1e-4, atol=1e-5, err_msg=k,
+        )
+
+
+# --- vmapped hyperparameter axes ----------------------------------------------
+
+def test_lam_axis_matches_per_lam_strategies():
+    """Sweeping lambda through the traced override == rebuilding the
+    DecayStrategy per lambda and running individually."""
+    lams = (0.98, 0.9)
+    spec = SweepSpec(
+        name="lam", base=_cfg(), seeds=(0, 1),
+        vmapped=(SweepAxis("lam", lams),),
+    )
+    res = run_sweep(spec)
+    for i, lam in enumerate(lams):
+        for j, seed in enumerate((0, 1)):
+            strat = make_strategy(
+                "decay", tau=3, m=7, decay=exponential_decay(lam), backend="jnp"
+            )
+            _, metrics, _ = run_fedrl(_cfg(strategy=strat), jax.random.key(seed))
+            for k, arr in metrics.items():
+                np.testing.assert_allclose(
+                    res.metrics["base"][k][i, j], arr, rtol=1e-4, atol=1e-5,
+                    err_msg=f"lam={lam} seed={seed} {k}",
+                )
+
+
+def test_eta_axis_matches_replaced_configs():
+    etas = (3e-3, 1e-3)
+    spec = SweepSpec(
+        name="eta", base=_cfg(), seeds=(0,),
+        vmapped=(SweepAxis("eta", etas),),
+    )
+    res = run_sweep(spec)
+    for i, eta in enumerate(etas):
+        _, metrics, _ = run_fedrl(_cfg(eta=eta), jax.random.key(0))
+        for k, arr in metrics.items():
+            np.testing.assert_allclose(
+                res.metrics["base"][k][i, 0], arr, rtol=1e-4, atol=1e-5,
+                err_msg=f"eta={eta} {k}",
+            )
+
+
+def test_eps_axis_matches_per_eps_strategies():
+    """The traced mixing-matrix rebuild (P = I - eps*La, fused powers and
+    mask-folded tables) tracks per-eps strategy construction."""
+    topo = T.random_regularish(7, 3, 4, seed=0)
+    epss = (0.05, 0.15)  # inside (0, 1/Delta) for this topology
+
+    def strat_for(eps):
+        return make_strategy(
+            "consensus", tau=3, topo=topo, eps=eps, rounds=2, m=7, backend="jnp"
+        )
+
+    spec = SweepSpec(
+        name="eps", base=_cfg(strategy=strat_for(epss[0])), seeds=(0,),
+        vmapped=(SweepAxis("eps", epss),),
+    )
+    res = run_sweep(spec)
+    for i, eps in enumerate(epss):
+        _, metrics, _ = run_fedrl(
+            _cfg(strategy=strat_for(eps)), jax.random.key(0)
+        )
+        for k, arr in metrics.items():
+            np.testing.assert_allclose(
+                res.metrics["base"][k][i, 0], arr, rtol=1e-4, atol=1e-5,
+                err_msg=f"eps={eps} {k}",
+            )
+
+
+def test_unknown_vmapped_axis_raises():
+    spec = SweepSpec(
+        name="bad", base=_cfg(), seeds=(0,),
+        vmapped=(SweepAxis("nope", (1.0,)),),
+    )
+    with pytest.raises(KeyError, match="nope"):
+        run_sweep(spec)
+
+
+def test_lam_axis_requires_decay_strategy():
+    strat = make_strategy("periodic", tau=3, m=7, backend="jnp")
+    spec = SweepSpec(
+        name="bad", base=_cfg(strategy=strat), seeds=(0,),
+        vmapped=(SweepAxis("lam", (0.9,)),),
+    )
+    with pytest.raises(TypeError, match="DecayStrategy"):
+        run_sweep(spec)
+
+
+def test_custom_run_fn_sweeps_fmarl_driver():
+    """The run_fn hook vmaps run_fmarl_core (the task-generic driver) over
+    seeds just like the RL driver."""
+    from repro.core.fmarl import FmarlConfig, run_fmarl, run_fmarl_core
+
+    init = {"w": jnp.ones((4, 5)), "b": jnp.ones(3)}
+
+    def grad_fn(p, k, i, step):
+        g = jax.tree.map(lambda x: x + 0.1 * jax.random.normal(k, x.shape), p)
+        return g, {"loss": sum(jnp.sum(x ** 2) for x in jax.tree.leaves(p))}
+
+    def eval_fn(p, k):
+        return p
+
+    cfg = FmarlConfig(
+        strategy=make_strategy("periodic", tau=3, m=5, backend="jnp"),
+        eta=0.05, n_periods=4,
+    )
+
+    def run_fn(c, key):
+        _, metrics = run_fmarl_core(c, init, grad_fn, key, eval_fn)
+        return {"grad_sq": metrics["server_grad_sq_norm"]}
+
+    res = run_sweep(SweepSpec(name="fmarl", base=cfg, seeds=(0, 1, 2),
+                              run_fn=run_fn))
+    assert res.metrics["base"]["grad_sq"].shape == (3, 4)
+    for i, seed in enumerate((0, 1, 2)):
+        _, metrics, _ = run_fmarl(cfg, init, grad_fn, jax.random.key(seed),
+                                  eval_fn)
+        np.testing.assert_allclose(
+            res.metrics["base"]["grad_sq"][i],
+            np.asarray(metrics["server_grad_sq_norm"]), rtol=1e-5, atol=1e-6,
+        )
+
+
+# --- static axes ---------------------------------------------------------------
+
+def test_static_axes_cartesian_product_composes():
+    """Two static axes -> product of labelled transforms, composed in order."""
+    strat_a = make_strategy("periodic", tau=2, m=7, backend="jnp")
+    strat_b = make_strategy("periodic", tau=4, m=7, backend="jnp")
+    spec = SweepSpec(
+        name="grid", base=_cfg(), seeds=(0, 1),
+        static=(
+            StaticAxis("tau", (
+                ("tau=2", lambda c: dataclasses.replace(c, strategy=strat_a)),
+                ("tau=4", lambda c: dataclasses.replace(c, strategy=strat_b)),
+            )),
+            StaticAxis("eta", (
+                ("eta=lo", lambda c: dataclasses.replace(c, eta=1e-3)),
+                ("eta=hi", lambda c: dataclasses.replace(c, eta=5e-3)),
+            )),
+        ),
+    )
+    res = run_sweep(spec)
+    assert sorted(res.labels) == [
+        "tau=2/eta=hi", "tau=2/eta=lo", "tau=4/eta=hi", "tau=4/eta=lo"
+    ]
+    ref_cfg = _cfg(strategy=strat_b, eta=5e-3)
+    _, metrics, _ = run_fedrl(ref_cfg, jax.random.key(1))
+    np.testing.assert_allclose(
+        res.metrics["tau=4/eta=hi"]["nas"][1], metrics["nas"],
+        rtol=1e-4, atol=1e-5,
+    )
+
+
+# --- (S, m, n) dispatch path ---------------------------------------------------
+
+def test_dispatch_sweep_axis_interpret_parity():
+    """Direct (S, m, n) primitive calls: interpret kernels == jnp reference."""
+    S, m, n = 3, 5, 37  # n deliberately not a block multiple
+    acc = jax.random.normal(jax.random.key(0), (S, m, n))
+    g = jax.random.normal(jax.random.key(1), (S, m, n))
+    d_sm = jax.random.normal(jax.random.key(2), (S, m))
+    mix = jax.random.normal(jax.random.key(3), (S, m, m))
+    cases = {
+        "decay_accum scalar": lambda b: dispatch.decay_accum(acc, g, 0.3, backend=b),
+        "decay_accum (S,m)": lambda b: dispatch.decay_accum(acc, g, d_sm, backend=b),
+        "scale_rows (S,m)": lambda b: dispatch.scale_rows(g, d_sm, backend=b),
+        "consensus_mix shared": lambda b: dispatch.consensus_mix(g, mix[0], backend=b),
+        "consensus_mix per-run": lambda b: dispatch.consensus_mix(g, mix, backend=b),
+        "row_mean": lambda b: dispatch.row_mean(g, backend=b),
+    }
+    for name, fn in cases.items():
+        a, b = fn("jnp"), fn("interpret")
+        assert a.shape[0] == S, name
+        np.testing.assert_allclose(a, b, rtol=1e-5, atol=1e-6, err_msg=name)
+
+
+def test_dispatch_sweep_axis_matches_per_run_calls():
+    """(S, m, n) batching == stacking S independent (m, n) calls."""
+    S, m, n = 4, 6, 23
+    acc = jax.random.normal(jax.random.key(0), (S, m, n))
+    g = jax.random.normal(jax.random.key(1), (S, m, n))
+    d = jax.random.normal(jax.random.key(2), (S, m))
+    batched = dispatch.decay_accum(acc, g, d, backend="jnp")
+    stacked = jnp.stack([
+        dispatch.decay_accum(acc[i], g[i], d[i], backend="jnp")
+        for i in range(S)
+    ])
+    np.testing.assert_array_equal(np.asarray(batched), np.asarray(stacked))
+
+
+def test_dispatch_sweep_axis_ambiguous_coefficients_raise():
+    """1-D d with S == m could mean per-run or per-agent — must refuse."""
+    S = m = 4
+    acc = jax.random.normal(jax.random.key(0), (S, m, 9))
+    g = jax.random.normal(jax.random.key(1), (S, m, 9))
+    with pytest.raises(ValueError, match="ambiguous"):
+        dispatch.decay_accum(acc, g, jnp.ones(S), backend="jnp")
+    # the explicit forms still work
+    out = dispatch.decay_accum(acc, g, jnp.ones((S, m)), backend="jnp")
+    assert out.shape == acc.shape
+    out = dispatch.decay_accum(acc, g, 0.5, backend="jnp")
+    assert out.shape == acc.shape
+
+
+def test_interpret_backend_sweep_matches_jnp_backend():
+    """The vmapped flat-carry driver dispatches on (S, m, n) through the
+    interpret kernels and stays on-parity with the jnp reference sweep."""
+    outs = {}
+    for backend in ("jnp", "interpret"):
+        spec = SweepSpec(name="b", base=_cfg(backend=backend), seeds=(0, 1))
+        outs[backend] = run_sweep(spec).metrics["base"]
+    for k in outs["jnp"]:
+        np.testing.assert_allclose(
+            outs["jnp"][k], outs["interpret"][k], rtol=1e-3, atol=1e-5,
+            err_msg=k,
+        )
+
+
+# --- results: reduction + versioned artifacts ----------------------------------
+
+def test_mean_ci_t_interval():
+    x = np.array([[1.0, 2.0, 3.0, 4.0], [2.0, 2.0, 2.0, 2.0]]).T  # (4, 2)
+    mean, hw = mean_ci(x, axis=0, confidence=0.95)
+    np.testing.assert_allclose(mean, [2.5, 2.0])
+    sd = np.std(x[:, 0], ddof=1)
+    np.testing.assert_allclose(hw[0], t_critical(3) * sd / 2.0, rtol=1e-6)
+    assert hw[1] == 0.0
+    # single sample: zero half-width, no NaNs
+    m1, h1 = mean_ci(x[:1], axis=0)
+    np.testing.assert_allclose(m1, x[0])
+    assert not np.any(h1)
+
+
+def test_t_critical_values_and_validation():
+    np.testing.assert_allclose(t_critical(3, 0.95), 3.182)
+    np.testing.assert_allclose(t_critical(100, 0.95), 1.960)  # normal fallback
+    with pytest.raises(ValueError):
+        t_critical(3, 0.5)
+    with pytest.raises(ValueError):
+        t_critical(0)
+
+
+def test_sweep_result_saves_versioned_artifacts(tmp_path):
+    spec = SweepSpec(
+        name="arts", base=_cfg(), seeds=(0, 1),
+        vmapped=(SweepAxis("lam", (0.98, 0.9)),),
+    )
+    res = run_sweep(spec)
+    j1, c1 = res.save(str(tmp_path))
+    j2, c2 = res.save(str(tmp_path))
+    assert j1.endswith("arts.v1.json") and j2.endswith("arts.v2.json")
+    assert c1.endswith("arts.v1.csv")
+    import json
+
+    payload = json.loads(open(j1).read())
+    assert payload["schema_version"] == 1
+    assert payload["axes"] == {"lam": [0.98, 0.9]}
+    assert payload["n_seeds"] == 2
+    curve = payload["labels"]["base"]["nas"]
+    assert np.asarray(curve["mean"]).shape == (2, 2)  # (lam, epochs)
+    rows = res.rows()
+    assert {r["label"] for r in rows} == {"base"}
+    assert {r["lam"] for r in rows} == {0.98, 0.9}
+    # grid bookkeeping
+    assert spec.grid_shape == (2, 2) and spec.n_runs == 4
+
+
+def test_spec_validation():
+    with pytest.raises(ValueError, match="seed"):
+        SweepSpec(name="x", base=None, seeds=())
+    with pytest.raises(ValueError, match="value"):
+        SweepAxis("lam", ())
+    with pytest.raises(ValueError, match="duplicate"):
+        SweepSpec(name="x", base=None, seeds=(0,),
+                  vmapped=(SweepAxis("a", (1.0,)), SweepAxis("a", (2.0,))))
