@@ -1,12 +1,27 @@
 """Paper Fig. 4: convergence (NAS) of variation-aware periodic averaging.
 
-Runs on ``repro.sweep``: the four tau configurations are a *static* axis
-(tau changes the variation-mask shape and the inner scan length, so each
-re-traces), while the seed axis vmaps — every config's S seeds run as one
-jitted batched computation, and the curves carry t-based CIs.
+Rebuilt on the traced variation axis: at fixed period length tau=15 the
+per-agent tau_i schedules are a *vmapped* ``taus`` axis — every schedule's
+``(m, tau)`` indicator mask is retabulated inside the trace
+(``repro.sweep.overrides.override_taus``), so the whole (schedules x seeds)
+variation grid runs as ONE jitted computation with the mask batched as an
+``(S, m, tau)`` operand. Only genuinely shape-changing points (tau=1 sync,
+tau=10 — different period length = different mask shape and inner scan
+length) remain static-axis re-traces.
+
+The emitted ``experiments/bench/fig4_sweep.json`` records, for the CI
+regression gate (``benchmarks/check_regression.py``):
+
+* ``timings`` — the vmapped variation sweep vs the equivalent Python
+  seed-loop over the same grid (wall-clock + speedup + numeric deviation);
+* ``variation`` — traced-mask vs static-numpy-mask parity:
+  ``max_abs_dev_vs_static`` (jitted; ulp-scale XLA literal-folding drift is
+  allowed, same contract as vmapped-vs-loop) and ``eager_bitwise_dev``
+  (the op-by-op jnp reference path, gated at exactly 0.0).
 """
 from __future__ import annotations
 
+import jax
 import numpy as np
 
 from benchmarks.common import (
@@ -19,47 +34,163 @@ from benchmarks.common import (
 )
 from benchmarks.fmarl_bench import make_cfg
 from repro.core import make_strategy, uniform_taus
-from repro.sweep import SweepSpec, run_sweep
+from repro.core.variation import validate_a2
+from repro.sweep import SweepAxis, SweepSpec, mean_ci, run_sweep, run_sweep_loop
+from repro.sweep.overrides import override_taus
+
+TAU = 15
+
+
+def _summarize(out, label, metrics, idx=None):
+    """Seed-reduced curves + run-level summary for one plotted config."""
+    entry, rows = sweep_config_rows(label, metrics, out["n_seeds"], idx=idx)
+    out["curves"][label] = entry
+    sel = (lambda a: a) if idx is None else (lambda a: a[idx])
+    egn_m, egn_h = mean_ci(sel(metrics["server_grad_sq_norm"]).mean(-1), 0)
+    out["summary"][label] = {
+        "expected_grad_norm_mean": float(egn_m),
+        "expected_grad_norm_ci_hw": float(egn_h),
+        "final_nas_mean": float(np.asarray(entry["nas_mean"])[-3:].mean()),
+    }
+    return rows
+
+
+def _static_parity(sched_spec, res_loop, schedules, seeds):
+    """Traced-mask loop vs per-schedule static-numpy-mask runs (seed 0)."""
+    from repro.rl.fedrl import run_fedrl_core
+
+    max_dev = 0.0
+    for i, (_, sched) in enumerate(schedules):
+        strat = make_strategy("periodic", tau=TAU, taus=np.asarray(sched, int))
+        cfg = make_cfg(strat, epochs=sched_spec.base.n_epochs)
+        ref = jax.device_get(
+            jax.jit(lambda k, c=cfg: run_fedrl_core(c, k)[1])(
+                jax.random.key(seeds[0])
+            )
+        )
+        for k, arr in ref.items():
+            dev = float(
+                np.max(np.abs(res_loop.metrics["base"][k][i, 0] - np.asarray(arr)))
+            )
+            max_dev = max(max_dev, dev)
+    return max_dev
+
+
+def _eager_bitwise(m):
+    """Bit-identity of the traced-mask copy on the eager jnp reference path.
+
+    A deliberately tiny run (2 epochs) executed op-by-op: the traced-mask
+    strategy copy and the static-numpy-mask strategy execute the *same* ops
+    on the same values, so the deviation must be exactly 0.0 — this is the
+    bit-identity record the CI gate pins at max 0.0.
+    """
+    from repro.rl import run_fedrl
+
+    sched = uniform_taus(10, TAU, m, seed=0)
+    cfg_static = make_cfg(
+        make_strategy("periodic", tau=TAU, taus=sched), epochs=2
+    )
+    cfg_traced = override_taus(
+        make_cfg(make_strategy("periodic", tau=TAU, m=m), epochs=2),
+        np.asarray(sched, np.float32),
+    )
+    _, m_s, _ = run_fedrl(cfg_static, jax.random.key(0))
+    _, m_t, _ = run_fedrl(cfg_traced, jax.random.key(0))
+    return max(float(np.max(np.abs(m_t[k] - m_s[k]))) for k in m_s)
 
 
 def run(quick: bool = False, seeds=None) -> list[dict]:
     m = 7
     seeds = seed_tuple(seeds)
     epochs = 8 if quick else None
-    strategies = [
+
+    # shape-changing period lengths: static axis (one re-trace each)
+    statics = [
         ("tau=1", make_strategy("sync", m=m)),
         ("tau=10", make_strategy("periodic", tau=10, m=m)),
-        ("tau=15", make_strategy("periodic", tau=15, m=m)),
-        ("tau=10~15", make_strategy("periodic", tau=15,
-                                    taus=uniform_taus(10, 15, m, seed=0))),
+    ]
+    # the variation axis proper: tau_i schedules at fixed tau=15, vmapped
+    schedules = [
+        ("tau=15", tuple(float(TAU) for _ in range(m))),
+        ("tau=10~15", tuple(map(float, uniform_taus(10, TAU, m, seed=0)))),
+        ("tau=5~15", tuple(map(float, uniform_taus(5, TAU, m, seed=0)))),
+        ("tau=1~15", tuple(map(float, uniform_taus(1, TAU, m, seed=0)))),
     ]
     if quick:
-        strategies = strategies[:2]
+        statics = statics[:1]
+        schedules = schedules[:2]
+    for _, sched in schedules:
+        validate_a2(np.asarray(sched, int), TAU)
 
-    spec = SweepSpec(
-        name="fig4_variation",
-        base=make_cfg(strategies[0][1], epochs=epochs),
+    static_spec = SweepSpec(
+        name="fig4_static_taus",
+        base=make_cfg(statics[0][1], epochs=epochs),
         seeds=seeds,
-        static=(strategy_axis("tau", strategies),),
+        static=(strategy_axis("tau", statics),),
     )
-    res = run_sweep(spec)
+    sched_spec = SweepSpec(
+        name="fig4_variation",
+        base=make_cfg(make_strategy("periodic", tau=TAU, m=m), epochs=epochs),
+        seeds=seeds,
+        vmapped=(SweepAxis("taus", tuple(s for _, s in schedules)),),
+    )
 
-    rows, curves = [], {}
-    for name, _ in strategies:
-        entry, rws = sweep_config_rows(name, res.metrics[name], len(seeds),
-                                       include_grad=False)
-        curves[name] = entry
-        rows += rws
-        nas_m = np.asarray(entry["nas_mean"])
-        nas_h = np.asarray(entry["nas_ci_hw"])
-        emit(f"fig4/{name}", res.wall_s[name] / len(seeds) * 1e6,
-             f"final_nas={nas_m[-3:].mean():.4f}+-{nas_h[-3:].mean():.4f}")
+    res_static = run_sweep(static_spec)         # seeds-only vmap per tau point
+    res_sched = run_sweep(sched_spec)           # (schedules x seeds) in ONE jit
+    res_loop = run_sweep_loop(sched_spec)       # same grid, Python seed-loop
 
-    write_bench_json("fig4_sweep", {
-        "schema_version": 1, "quick": bool(quick),
-        "seeds": list(seeds), "n_seeds": len(seeds),
-        "curves": curves, "wall_s": dict(res.wall_s),
-    })
+    out = {
+        "schema_version": 2,
+        "quick": bool(quick),
+        "seeds": list(seeds),
+        "n_seeds": len(seeds),
+        "tau": TAU,
+        "schedules": {lab: list(map(int, s)) for lab, s in schedules},
+        "curves": {},
+        "summary": {},
+    }
+    rows = []
+    for label, _ in statics:
+        rows += _summarize(out, label, res_static.metrics[label])
+        emit(f"fig4/{label}", res_static.wall_s[label] / len(seeds) * 1e6,
+             f"final_nas={out['summary'][label]['final_nas_mean']:.4f}")
+    per_run_us = res_sched.wall_s["base"] / sched_spec.n_runs * 1e6
+    for i, (label, _) in enumerate(schedules):
+        rows += _summarize(out, label, res_sched.metrics["base"], idx=i)
+        emit(f"fig4/{label}", per_run_us,
+             f"final_nas={out['summary'][label]['final_nas_mean']:.4f}")
+
+    max_dev_loop = max(
+        float(np.max(np.abs(res_sched.metrics["base"][k]
+                            - res_loop.metrics["base"][k])))
+        for k in res_sched.metrics["base"]
+    )
+    out["timings"] = {
+        "n_runs": sched_spec.n_runs,
+        "vmapped_exec_s": res_sched.wall_s["base"],
+        "vmapped_compile_s": res_sched.compile_s["base"],
+        "loop_exec_s": res_loop.wall_s["base"],
+        "loop_compile_s": res_loop.compile_s["base"],
+        # > 1 means the single vmapped variation sweep beats the seed-loop
+        "vmapped_speedup": res_loop.wall_s["base"] / res_sched.wall_s["base"],
+        "max_abs_dev_vs_loop": max_dev_loop,
+    }
+    emit("fig4/sweep_vs_loop", res_sched.wall_s["base"] * 1e6,
+         f"loop={res_loop.wall_s['base'] * 1e6:.0f}us "
+         f"x{out['timings']['vmapped_speedup']:.2f}")
+
+    out["variation"] = {
+        "max_abs_dev_vs_static": _static_parity(
+            sched_spec, res_loop, schedules, seeds
+        ),
+        "eager_bitwise_dev": _eager_bitwise(m),
+    }
+    emit("fig4/traced_vs_static", 0.0,
+         f"jit_dev={out['variation']['max_abs_dev_vs_static']:.2g} "
+         f"eager_dev={out['variation']['eager_bitwise_dev']:.2g}")
+
+    write_bench_json("fig4_sweep", out)
+    res_sched.save("experiments/sweeps")
     write_csv("fig4_variation", rows)
     return rows
 

@@ -25,6 +25,12 @@ Two carry layouts:
     averaging (``row_mean``) all run on the flat buffers through the
     dispatch layer. No per-step params ravel/unravel round-trip survives in
     the scan body — the win PR 1 left on the table.
+
+Both layouts read the strategy's per-step weights through ``jnp.asarray``
+in the scan bodies, so ``with_mask`` strategy copies with *traced* variation
+masks (the sweep engine's ``taus`` axis) flow through as operands — the mask
+batches to ``(S, m, tau)`` under the sweep's vmap while tau itself stays the
+static inner scan length (DESIGN.md §11).
 """
 from __future__ import annotations
 

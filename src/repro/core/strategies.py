@@ -8,6 +8,15 @@ step itself (eq. 11) is the same for every strategy: average the replica axis.
 All per-step data (masks, decay weights, fused mixing matrices) is precomputed
 into arrays so strategies are jit-stable and can be closed over by lax.scan.
 
+The per-step tables are read through ``jnp.asarray`` inside the trace, so a
+strategy copy whose tables hold *tracers* drops straight into the drivers:
+``with_mask`` returns such a copy with the variation mask (and every table it
+folds into) replaced — the mechanism behind the sweep engine's traced ``taus``
+axis (``repro.sweep.overrides.override_taus``), where the ``(m, tau)`` mask
+becomes a batched operand instead of a baked-in constant. The period length
+``tau`` itself stays static: it fixes the mask shape and the inner scan
+length, so only the mask *values* vary across a vmapped sweep.
+
 Execution backend: every strategy carries a ``backend`` field (see
 ``repro.kernels.dispatch.BACKENDS``). ``jnp`` keeps the original pure-jnp
 tree-map path as the reference; ``pallas``/``interpret`` route the hot-path
@@ -21,6 +30,7 @@ so every pre-existing call site keeps its exact behaviour on CPU.
 """
 from __future__ import annotations
 
+import copy
 import dataclasses
 from typing import Optional
 
@@ -30,7 +40,7 @@ import numpy as np
 
 from repro.core.decay import DecayFn, no_decay
 from repro.core.topology import Topology, mixing_matrix
-from repro.core.variation import validate_a2
+from repro.core.variation import masked_update_counts, validate_a2
 from repro.kernels import dispatch
 
 
@@ -63,6 +73,24 @@ class AggregationStrategy:
     def _build_mask(taus: np.ndarray, tau: int) -> np.ndarray:
         offs = np.arange(tau)[None, :]
         return (np.asarray(taus)[:, None] > offs).astype(np.float32)
+
+    def with_mask(self, mask, taus=None) -> "AggregationStrategy":
+        """Copy with a replacement ``(m, tau)`` variation mask (may be traced).
+
+        The traced-variation entry point: the copy's hot-path tables hold the
+        new mask (subclasses also refold it into their fused tables), while
+        shape-defining statics (``tau``, topology, backend) are untouched, so
+        the copy is drop-in for the drivers and vmappable over a leading
+        sweep axis. ``taus`` optionally refreshes the static per-agent
+        schedule used by the *host-side* comm accounting — when the new mask
+        is a tracer the accounting keeps the previous schedule (the sweep
+        core never reads it; the ledger lives in the host wrappers).
+        """
+        new = copy.copy(self)
+        object.__setattr__(new, "mask", mask)
+        if taus is not None:
+            object.__setattr__(new, "taus", np.asarray(taus, int))
+        return new
 
     @property
     def m(self) -> int:
@@ -171,7 +199,10 @@ class AggregationStrategy:
 
         Only the first ``n_offsets`` mask columns of local updates run (C2);
         the final server read still aggregates every replica, so it bills the
-        per-agent upload (C1) exactly like a full-period sync.
+        per-agent upload (C1) exactly like a full-period sync. The C2 count
+        uses the closed form ``sum_i min(tau_i, n_offsets)`` (equal to the
+        mask-column sum) so the accounting stays host-computable even on a
+        ``with_mask`` copy whose mask is a tracer.
         """
         n_offsets = int(n_offsets)
         if not 0 <= n_offsets < self.tau:
@@ -181,7 +212,7 @@ class AggregationStrategy:
             )
         return {
             "c1": self.m if n_offsets else 0,
-            "c2": int(np.asarray(self.mask)[:, :n_offsets].sum()),
+            "c2": int(masked_update_counts(self.taus, n_offsets).sum()),
             "w1": 0,
             "w2": 0,
         }
@@ -252,7 +283,10 @@ class DecayStrategy(AggregationStrategy):
         )
 
     def weight(self, offset):
-        d = jnp.asarray(self.decay_weights)[offset]
+        # decay_weights is (tau,) shared or (m, tau) per-agent (the sweep's
+        # vector-valued lam axis); `[..., offset]` indexes the offset axis of
+        # either, yielding a scalar or an (m,) per-agent decay factor.
+        d = jnp.asarray(self.decay_weights)[..., offset]
         return jnp.asarray(self.mask)[:, offset] * d
 
 
@@ -316,6 +350,22 @@ class ConsensusStrategy(AggregationStrategy):
             mask=mask,
             backend=backend,
         )
+
+    def with_mask(self, mask, taus=None) -> "ConsensusStrategy":
+        """Mask copy that also refolds the per-offset masked mixing tables.
+
+        ``p`` / ``p_e`` stay as built (they depend only on topology, eps and
+        rounds); the mask-folded ``p_masked`` / ``p_e_masked`` are recomputed
+        from them against the new mask, tracing through when the mask (or a
+        prior ``eps`` override's matrices) is a tracer.
+        """
+        new = AggregationStrategy.with_mask(self, mask, taus)
+        mask_t = jnp.asarray(mask).T[:, None, :]              # (tau, 1, m)
+        object.__setattr__(new, "p_masked", jnp.asarray(self.p)[None] * mask_t)
+        object.__setattr__(
+            new, "p_e_masked", jnp.asarray(self.p_e)[None] * mask_t
+        )
+        return new
 
     def _transform_tree(self, grads_m, offset):
         masked = AggregationStrategy._transform_tree(self, grads_m, offset)

@@ -44,10 +44,39 @@ def tau_stats(taus: np.ndarray) -> tuple[float, float]:
 
 
 def indicator_mask(taus, period_offsets) -> jnp.ndarray:
-    """I(tau_i > s - t0) as an (m, len(offsets)) float mask."""
+    """I(tau_i > s - t0) as an (m, len(offsets)) float mask.
+
+    ``taus`` may be a concrete array *or* a tracer (the sweep engine's
+    ``taus`` axis hands in a traced (m,) vector): the comparison lowers to
+    elementwise jnp ops, so at fixed period length the mask is shape-stable
+    and the whole variation axis vmaps.
+    """
     taus = jnp.asarray(taus)[:, None]
     offs = jnp.asarray(period_offsets)[None, :]
     return (taus > offs).astype(jnp.float32)
+
+
+def mask_from_taus(taus, tau: int) -> jnp.ndarray:
+    """The strategy-shaped (m, tau) variation mask from a tau_i vector.
+
+    Traced-safe counterpart of ``AggregationStrategy._build_mask`` (the
+    static numpy constructor): ``tau`` is the static period length (fixes the
+    mask shape and the inner scan length), ``taus`` may be traced. Integer
+    schedules carried as float32 stay exact (tau_i <= tau << 2**24), so the
+    traced mask is value-identical to the static one.
+    """
+    return indicator_mask(taus, jnp.arange(tau))
+
+
+def masked_update_counts(taus, n_offsets: int) -> np.ndarray:
+    """Per-agent local-update counts within the first ``n_offsets`` offsets.
+
+    ``sum_j I(tau_i > j) for j < n_offsets  ==  min(tau_i, n_offsets)`` —
+    the closed form the comm accounting uses (C2 events), equal to summing
+    the corresponding mask columns. ``n_offsets = tau`` gives the full-period
+    counts, i.e. ``sum(taus)`` in total.
+    """
+    return np.minimum(np.asarray(taus), int(n_offsets))
 
 
 def validate_a2(taus: np.ndarray, tau: int) -> None:

@@ -32,6 +32,14 @@ Numerics: every dispatched primitive accumulates in fp32 on every backend
 (inputs are upcast, outputs cast back to the input dtype), so bf16/fp16
 gradient buffers stay bit-comparable between the jnp reference and the
 kernel path, and a later bf16-buffer mode slots in without parity drift.
+
+Weights are *operands*, never baked-in constants: the per-agent coefficient
+``d``/``w`` of ``decay_accum``/``scale_rows``/``flat_opt_update`` and the
+(mask-folded) ``mixing`` matrix of ``consensus_mix`` arrive as arguments on
+every backend, so the traced variation masks of the sweep engine's ``taus``
+axis (columns of an ``(S, m, tau)`` batched mask → ``(S, m)`` coefficients,
+or folded per-run ``(S, m, m)`` mixing tables) batch through the same entry
+points with no kernel changes (DESIGN.md §11).
 """
 from __future__ import annotations
 

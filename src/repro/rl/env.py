@@ -140,17 +140,24 @@ def perturb_params(
     """Heterogeneous fleet builder: (m,)-stacked EnvParams, each listed field
     multiplied per agent by ``1 + scale * U(-1, 1)`` (floored at 0.1 so dt
     and IDM constants stay physical). ``scale=0`` returns m identical copies.
+
+    ``scale`` may be a tracer (the sweep engine's ``hetero_scale`` axis): the
+    perturbation *directions* are fixed by ``key`` while the magnitude
+    traces, so the whole fleet-heterogeneity axis vmaps value-only. The
+    concrete ``scale=0`` shortcut is host-only; a traced zero multiplies by
+    exactly 1.0, which is value-identical.
     """
     base = cfg.default_params()
     fields = tuple(fields)
     unknown = set(fields) - set(EnvParams._fields)
     if unknown:
         raise ValueError(f"perturb_params: unknown fields {sorted(unknown)}")
+    static_zero = isinstance(scale, (int, float)) and scale == 0
     keys = dict(zip(fields, jax.random.split(key, len(fields))))
     out = {}
     for f in EnvParams._fields:
         v = jnp.broadcast_to(getattr(base, f), (m,))
-        if f in keys and scale:
+        if f in keys and not static_zero:
             u = jax.random.uniform(keys[f], (m,), minval=-1.0, maxval=1.0)
             v = v * jnp.maximum(1.0 + scale * u, 0.1)
         out[f] = v

@@ -29,6 +29,15 @@ and the optimizer accumulators all stay flat through the dispatch layer.
 With ``buffer_dtype="bfloat16"`` the flat params/grad buffers are stored in
 bf16 end to end (the dispatch primitives and optimizer moments still
 accumulate in fp32; closures see an fp32 tree view).
+
+Traced variation axis: both cores read the strategy's per-step weights
+(variation mask x decay, mask-folded mixing) through ``jnp.asarray`` inside
+the scan bodies, so a ``with_mask`` strategy copy whose mask is a tracer —
+the sweep engine's ``taus`` axis — threads straight through as a scan-body
+operand, and ``cfg.env_params`` built from a traced ``hetero_scale``
+likewise. Under the sweep's vmap the mask batches to ``(S, m, tau)`` and
+the env params to per-run pytrees; the period length ``tau`` stays static
+(it is the inner scan length). See DESIGN.md §11.
 """
 from __future__ import annotations
 

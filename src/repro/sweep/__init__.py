@@ -1,10 +1,12 @@
 """repro.sweep — batched multi-seed / multi-hyperparameter experiment engine.
 
 Runs many full federated training runs in ONE jitted computation: the seed
-axis and value-only hyperparameters (eta, decay lambda, consensus eps) vmap
-into a single leading sweep axis — the drivers' flat ``(m, n)`` carry becomes
-``(S, m, n)`` — while shape-changing statics (tau, topology, scenario) loop
-outside. See DESIGN.md §10 and ``repro.sweep.spec`` for the axis taxonomy.
+axis and value-only hyperparameters (eta, decay lambda, consensus eps,
+per-agent tau_i schedules at fixed tau, fleet hetero_scale) vmap into a
+single leading sweep axis — the drivers' flat ``(m, n)`` carry becomes
+``(S, m, n)`` and the variation mask a batched ``(S, m, tau)`` operand —
+while shape-changing statics (tau itself, topology, scenario) loop outside.
+See DESIGN.md §10–§11 and ``repro.sweep.spec`` for the axis taxonomy.
 
     from repro.sweep import SweepAxis, SweepSpec, run_sweep
 
@@ -23,7 +25,9 @@ from repro.sweep.overrides import (
     apply_overrides,
     override_eps,
     override_eta,
+    override_hetero_scale,
     override_lam,
+    override_taus,
     register_override,
 )
 from repro.sweep.results import SweepResult, mean_ci, t_critical
@@ -40,7 +44,9 @@ __all__ = [
     "mean_ci",
     "override_eps",
     "override_eta",
+    "override_hetero_scale",
     "override_lam",
+    "override_taus",
     "register_override",
     "run_sweep",
     "run_sweep_loop",

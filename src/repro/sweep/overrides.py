@@ -17,9 +17,22 @@ Built-in axes:
 
 * ``eta`` — learning rate; any config with an ``eta`` field.
 * ``lam`` — decay constant of the exponential family (eq. 21,
-  ``D(j) = lam^{j/2}``); requires a ``DecayStrategy``.
+  ``D(j) = lam^{j/2}``); scalar points share one lambda, vector points give
+  each agent its own (a traced ``(m, tau)`` weight table); requires a
+  ``DecayStrategy``.
 * ``eps`` — consensus step size; rebuilds ``P = I - eps*La`` and the fused /
   mask-folded powers; requires a ``ConsensusStrategy``.
+* ``taus`` — per-agent tau_i schedule at *fixed* period length tau (A2,
+  eq. 6): each point is a whole (m,) vector, retabulated inside the trace as
+  the ``(m, tau)`` indicator mask (and the consensus strategies' mask-folded
+  mixing tables) via ``AggregationStrategy.with_mask``. tau itself stays
+  static — it fixes the mask shape and the inner scan length — so the
+  variation axis is value-only and vmaps.
+* ``hetero_scale`` — fleet-heterogeneity magnitude: rebuilds the per-agent
+  ``EnvParams`` with perturbation directions fixed by the config's
+  ``eval_seed`` and the traced scale multiplying them (the asynchronous-MDP
+  knob as a value-only axis). The base config should already be a fleet
+  config (``num_envs >= 1``) so the trace structure matches the override.
 
 ``register_override`` adds custom axes.
 """
@@ -29,10 +42,13 @@ import copy
 import dataclasses
 from typing import Callable, Dict
 
+import jax
 import jax.numpy as jnp
+import numpy as np
 
 from repro.core.strategies import ConsensusStrategy, DecayStrategy
 from repro.core.topology import laplacian
+from repro.core.variation import mask_from_taus, validate_a2
 
 
 def _strategy_copy(strat, **fields):
@@ -49,14 +65,29 @@ def override_eta(cfg, eta):
 
 
 def override_lam(cfg, lam):
-    """Decay-constant axis: retabulates ``D(j) = lam^{j/2}`` (eq. 21) traced."""
+    """Decay-constant axis: retabulates ``D(j) = lam^{j/2}`` (eq. 21) traced.
+
+    A scalar point gives the shared ``(tau,)`` table; an (m,)-vector point
+    gives every agent its own decay constant — a ``(m, tau)`` table that
+    ``DecayStrategy.weight`` reads per agent (the per-agent variation of the
+    decay family, vmappable alongside the ``taus`` mask axis).
+    """
     strat = cfg.strategy
     if not isinstance(strat, DecayStrategy):
         raise TypeError(
             f"'lam' axis needs a DecayStrategy base, got {type(strat).__name__}"
         )
     offs = jnp.arange(strat.tau, dtype=jnp.float32)
-    w = jnp.power(jnp.asarray(lam, jnp.float32), offs / 2.0)
+    lam_arr = jnp.asarray(lam, jnp.float32)
+    if lam_arr.ndim == 0:
+        w = jnp.power(lam_arr, offs / 2.0)
+    else:
+        if lam_arr.shape != (strat.m,):
+            raise ValueError(
+                f"'lam' axis vector points must be ({strat.m},) for this "
+                f"strategy, got shape {lam_arr.shape}"
+            )
+        w = jnp.power(lam_arr[:, None], offs[None, :] / 2.0)
     return dataclasses.replace(cfg, strategy=_strategy_copy(strat, decay_weights=w))
 
 
@@ -88,10 +119,62 @@ def override_eps(cfg, eps):
     return dataclasses.replace(cfg, strategy=strat)
 
 
+def override_taus(cfg, taus):
+    """Variation axis: retabulate the ``(m, tau)`` indicator mask traced.
+
+    ``taus`` is an (m,) point of the vector-valued ``taus`` axis (float32
+    carries integer schedules exactly). The period length ``cfg.strategy.tau``
+    stays static — it fixes the mask shape and the inner scan length — so
+    every schedule of the axis shares one trace; only the mask values (and
+    the consensus strategies' mask-folded tables, refolded by ``with_mask``)
+    vary per cell. A2 validity (1 <= tau_i <= tau, non-increasing, pacing
+    agent present) is enforced on *concrete* points (eager use) but cannot
+    be checked on tracers, so points fed through the jitted runners must be
+    valid by construction (``repro.core.variation.uniform_taus`` /
+    ``tau_schedule`` emit such schedules).
+
+    When the point is concrete the copy's static ``taus`` is refreshed too,
+    so host-side comm accounting stays consistent.
+    """
+    strat = cfg.strategy
+    taus = jnp.asarray(taus)
+    if taus.ndim != 1 or taus.shape[0] != strat.m:
+        raise ValueError(
+            f"'taus' axis points must be ({strat.m},) vectors for this "
+            f"strategy, got shape {taus.shape}"
+        )
+    mask = mask_from_taus(taus, strat.tau)
+    try:
+        static_taus = np.asarray(taus, int)  # concrete (eager) point
+    except (jax.errors.TracerArrayConversionError, TypeError):
+        static_taus = None                   # traced: accounting keeps base
+    if static_taus is not None:
+        validate_a2(static_taus, strat.tau)
+    return dataclasses.replace(cfg, strategy=strat.with_mask(mask, static_taus))
+
+
+def override_hetero_scale(cfg, scale):
+    """Fleet-heterogeneity axis: per-agent EnvParams magnitudes, traced.
+
+    Rebuilds ``cfg.env_params`` via :func:`repro.rl.env.perturb_params` with
+    perturbation *directions* drawn once from ``jax.random.key(cfg.eval_seed)``
+    (fixed across the axis, decorrelated from the training streams by a
+    fold_in) and the traced ``scale`` multiplying them — so the sweep moves
+    only along the heterogeneity magnitude. Scale 0 is the homogeneous fleet.
+    """
+    from repro.rl.env import perturb_params
+
+    key = jax.random.fold_in(jax.random.key(cfg.eval_seed), 2026)
+    params = perturb_params(cfg.env, key, cfg.strategy.m, scale)
+    return dataclasses.replace(cfg, env_params=params)
+
+
 OVERRIDES: Dict[str, Callable] = {
     "eta": override_eta,
     "lam": override_lam,
     "eps": override_eps,
+    "taus": override_taus,
+    "hetero_scale": override_hetero_scale,
 }
 
 

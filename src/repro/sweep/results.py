@@ -147,9 +147,14 @@ class SweepResult:
                 lead = mean.shape[: len(axis_names)]
                 trail = mean.shape[len(axis_names):]
                 for idx in itertools.product(*(range(s) for s in lead)):
-                    coords = {
-                        n: self.axes[n][i] for n, i in zip(axis_names, idx)
-                    }
+                    coords = {}
+                    for n, i in zip(axis_names, idx):
+                        val = self.axes[n][i]
+                        if isinstance(val, (tuple, list)):
+                            # vector-valued point (e.g. a tau_i schedule):
+                            # one compact CSV cell instead of a raw tuple
+                            val = "[" + ",".join(f"{x:g}" for x in val) + "]"
+                        coords[n] = val
                     m_curve = mean[idx].reshape(trail)
                     h_curve = hw[idx].reshape(trail)
                     if m_curve.ndim == 0:

@@ -76,17 +76,25 @@ def static_points(spec: SweepSpec) -> Iterator[Tuple[str, Callable]]:
 
 
 def _grid_arrays(spec: SweepSpec) -> Tuple[List[np.ndarray], np.ndarray]:
-    """Flatten the (axes x seeds) product into per-axis value vectors.
+    """Flatten the (axes x seeds) product into per-axis value arrays.
 
-    Returns ``(axis_value_vectors, seed_vector)``, each of length
+    Returns ``(axis_value_arrays, seed_vector)``, each with leading length
     ``spec.n_runs`` — row i holds grid cell i's coordinates (C-order over
-    ``spec.grid_shape``, seeds innermost).
+    ``spec.grid_shape``, seeds innermost). A scalar-valued axis flattens to
+    an ``(S,)`` vector; a vector-valued axis (e.g. tau_i schedules) to an
+    ``(S, point_len)`` matrix, so vmap batches whole points per cell.
     """
     axes_vals = [np.asarray(a.values, np.float32) for a in spec.vmapped]
     seeds = np.asarray(spec.seeds, np.int32)
-    mesh = np.meshgrid(*axes_vals, seeds, indexing="ij")
-    flat = [m.reshape(-1) for m in mesh]
-    return flat[:-1], flat[-1].astype(np.int32)
+    mesh = np.meshgrid(
+        *(np.arange(len(v)) for v in axes_vals), np.arange(len(seeds)),
+        indexing="ij",
+    )
+    idx = [ix.reshape(-1) for ix in mesh]
+    return (
+        [v[ix] for v, ix in zip(axes_vals, idx[:-1])],
+        seeds[idx[-1]].astype(np.int32),
+    )
 
 
 def _make_one(spec: SweepSpec, cfg) -> Callable:

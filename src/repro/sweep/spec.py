@@ -7,11 +7,15 @@ splits those grid dimensions into two kinds of axis:
 * **vmapped axes** — seeds and any hyperparameter that only changes *values*
   flowing through the traced computation: the PRNG seed, the learning rate
   eta, the decay constant lambda (a ``(tau,)`` weight table), the consensus
-  step size eps (an ``(m, m)`` mixing matrix). All vmapped axes and the seed
-  axis form one cartesian product that is flattened into a single leading
-  sweep axis S, so one jitted vmap covers every cell — the flat ``(m, n)``
-  carry of the drivers becomes ``(S, m, n)`` and the dispatch primitives
-  batch over it without per-run retraces.
+  step size eps (an ``(m, m)`` mixing matrix), the per-agent tau_i schedule
+  at fixed period length (an ``(m, tau)`` variation mask), the fleet
+  heterogeneity scale (per-agent ``EnvParams`` magnitudes). All vmapped axes
+  and the seed axis form one cartesian product that is flattened into a
+  single leading sweep axis S, so one jitted vmap covers every cell — the
+  flat ``(m, n)`` carry of the drivers becomes ``(S, m, n)`` and the
+  dispatch primitives batch over it without per-run retraces. Axis points
+  may be scalars or equal-length vectors (a tau_i schedule is a whole (m,)
+  point); vector points reach their override as traced (m,) arrays.
 
 * **static axes** — anything that changes *shapes or trace structure*: the
   period length tau (the variation mask is ``(m, tau)`` and the inner scan
@@ -28,6 +32,8 @@ from __future__ import annotations
 import dataclasses
 from typing import Any, Callable, Optional, Tuple
 
+import numpy as np
+
 
 @dataclasses.dataclass(frozen=True)
 class SweepAxis:
@@ -36,15 +42,45 @@ class SweepAxis:
     ``name`` must be a registered override (see ``repro.sweep.overrides``):
     the override maps ``(cfg, traced_value) -> cfg`` inside the traced
     computation, so every value of the axis shares one trace.
+
+    Points are scalars (eta, lam, eps, hetero_scale) or equal-length vectors
+    (a per-agent tau_i schedule, a per-agent lam vector); a vector point
+    reaches the override as a traced 1-D array. Scalar and vector points
+    cannot mix on one axis — the traced value must be shape-stable.
     """
 
     name: str
-    values: Tuple[float, ...]
+    values: Tuple
 
     def __post_init__(self):
         if not self.values:
             raise ValueError(f"vmapped axis {self.name!r} needs >= 1 value")
-        object.__setattr__(self, "values", tuple(float(v) for v in self.values))
+        norm, point_len = [], None
+        for v in self.values:
+            arr = np.asarray(v, dtype=np.float64)
+            if arr.ndim == 0:
+                cur, val = None, float(v)
+            elif arr.ndim == 1 and arr.size:
+                cur, val = arr.size, tuple(float(x) for x in arr)
+            else:
+                raise ValueError(
+                    f"vmapped axis {self.name!r}: points must be scalars or "
+                    f"non-empty 1-D vectors, got shape {arr.shape}"
+                )
+            if norm and cur != point_len:
+                raise ValueError(
+                    f"vmapped axis {self.name!r}: all points must share one "
+                    f"shape (scalar or fixed-length vector); got a mix"
+                )
+            point_len = cur
+            norm.append(val)
+        object.__setattr__(self, "values", tuple(norm))
+
+    @property
+    def point_len(self) -> Optional[int]:
+        """Vector-point length, or None for a scalar-valued axis."""
+        first = np.asarray(self.values[0])
+        return None if first.ndim == 0 else int(first.size)
 
 
 @dataclasses.dataclass(frozen=True)

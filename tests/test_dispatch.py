@@ -398,6 +398,121 @@ def test_transform_inside_scan_traced_offset():
     np.testing.assert_allclose(run(s_ref), run(s), atol=1e-5)
 
 
+# --- traced-mask strategy copies (the variation axis, with_mask) ---------------
+
+def _mask_pairs():
+    """(name, static strategy, with_mask copy holding a jnp mask) triples.
+
+    The copy's mask is the traced-constructor output (``mask_from_taus`` fed
+    a float32 schedule, exactly what the sweep's taus axis produces) — the
+    static strategy keeps its numpy-at-init mask.
+    """
+    from repro.core.variation import mask_from_taus
+
+    topo = T.ring(3)
+    builders = {
+        "masked": lambda: PeriodicStrategy(tau=4, taus=TAUS, backend="jnp"),
+        "decay": lambda: DecayStrategy(
+            tau=4, taus=TAUS, decay=exponential_decay(0.9), backend="jnp"
+        ),
+        "consensus": lambda: ConsensusStrategy(
+            tau=4, topo=topo, eps=0.3, rounds=2, taus=TAUS, backend="jnp"
+        ),
+    }
+    out = []
+    for name, mk in builders.items():
+        s = mk()
+        mask = mask_from_taus(jnp.asarray(TAUS, jnp.float32), 4)
+        out.append((name, s, s.with_mask(mask)))
+    return out
+
+
+@pytest.mark.parametrize("name,s_static,s_traced", _mask_pairs(),
+                         ids=lambda v: v if isinstance(v, str) else "")
+def test_with_mask_bitwise_on_jnp(name, s_static, s_traced):
+    """Traced-mask copy == static-numpy-mask strategy, BIT-identical on the
+    jnp reference path (same ops on the same values, op by op)."""
+    g = _grads(seed=12)
+    params = _grads(seed=13)
+    g_flat, _ = dispatch.stacked_ravel(g)
+    p_flat, _ = dispatch.stacked_ravel(params)
+    for offset in range(4):
+        a = s_static.transform(g, offset)
+        b = s_traced.transform(g, offset)
+        np.testing.assert_array_equal(
+            np.asarray(a["w"]), np.asarray(b["w"]), err_msg=f"{name}@{offset}"
+        )
+        a = s_static.local_update(params, g, offset, 0.05)
+        b = s_traced.local_update(params, g, offset, 0.05)
+        np.testing.assert_array_equal(
+            np.asarray(a["b"]), np.asarray(b["b"]), err_msg=f"{name}@{offset}"
+        )
+        a = s_static.flat_update(p_flat, g_flat, offset, 0.05)
+        b = s_traced.flat_update(p_flat, g_flat, offset, 0.05)
+        np.testing.assert_array_equal(
+            np.asarray(a), np.asarray(b), err_msg=f"{name}@{offset}"
+        )
+
+
+@pytest.mark.parametrize("name,s_static,s_traced", _mask_pairs(),
+                         ids=lambda v: v if isinstance(v, str) else "")
+def test_with_mask_interpret_parity(name, s_static, s_traced):
+    """The same traced-mask copies through the interpret kernels stay within
+    ulp tolerance of the static kernels (weights are kernel operands either
+    way, so only harness-level fusion may differ)."""
+    import copy as _copy
+
+    g = _grads(seed=14)
+    g_flat, _ = dispatch.stacked_ravel(g)
+    params = jax.random.normal(jax.random.key(15), g_flat.shape)
+    s_static_k = _copy.copy(s_static)
+    s_traced_k = _copy.copy(s_traced)
+    object.__setattr__(s_static_k, "backend", "interpret")
+    object.__setattr__(s_traced_k, "backend", "interpret")
+    for offset in range(4):
+        a = s_static_k.flat_update(params, g_flat, offset, 0.05)
+        b = s_traced_k.flat_update(params, g_flat, offset, 0.05)
+        np.testing.assert_allclose(
+            np.asarray(a), np.asarray(b), atol=1e-6, err_msg=f"{name}@{offset}"
+        )
+
+
+def test_consensus_with_mask_refolds_tables():
+    """with_mask must refold the per-offset masked mixing tables against the
+    new mask — matching what the constructor builds for the same schedule."""
+    topo = T.ring(3)
+    base = ConsensusStrategy(tau=4, topo=topo, eps=0.3, rounds=2, m=3)
+    ref = ConsensusStrategy(tau=4, topo=topo, eps=0.3, rounds=2, taus=TAUS)
+    copy_ = base.with_mask(
+        jnp.asarray(ref.mask), taus=TAUS
+    )
+    np.testing.assert_array_equal(np.asarray(copy_.mask), ref.mask)
+    np.testing.assert_allclose(np.asarray(copy_.p_e_masked), ref.p_e_masked,
+                               atol=0)
+    np.testing.assert_allclose(np.asarray(copy_.p_masked), ref.p_masked,
+                               atol=0)
+    # untouched statics survive the copy
+    np.testing.assert_array_equal(copy_.p_e, base.p_e)
+    assert copy_.rounds == base.rounds and copy_.backend == base.backend
+
+
+def test_with_mask_refreshes_host_accounting():
+    """A with_mask copy given the concrete schedule keeps the comm
+    accounting consistent (c2 = sum(taus), truncated variant included)."""
+    base = PeriodicStrategy(tau=4, m=3)
+    copy_ = base.with_mask(
+        jnp.asarray(PeriodicStrategy._build_mask(TAUS, 4)), taus=TAUS
+    )
+    ref = PeriodicStrategy(tau=4, taus=TAUS)
+    assert copy_.comm_events_per_period() == ref.comm_events_per_period()
+    for n in range(4):
+        assert (copy_.comm_events_partial_period(n)
+                == ref.comm_events_partial_period(n))
+    # without a schedule the copy keeps the previous static accounting
+    assert (base.with_mask(jnp.asarray(base.mask)).comm_events_per_period()
+            == base.comm_events_per_period())
+
+
 # --- kernel shape/dtype validation (no silent mis-tiling) ---------------------
 
 def test_decay_accum_rejects_shape_mismatch():

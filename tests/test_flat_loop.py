@@ -160,6 +160,105 @@ def test_flat_scan_body_drops_params_ravel():
     assert n_tree == 2, f"ravel-per-step comparison changed shape, saw {n_tree}"
 
 
+# --- traced-mask drivers (the variation axis end to end) -----------------------
+
+def _variation_builders(m=7, tau=3):
+    topo = T.random_regularish(m, 3, 4, seed=0)
+    return {
+        "masked-sgd": lambda taus=None, b="jnp": make_strategy(
+            "periodic", tau=tau, m=m, taus=taus, backend=b
+        ),
+        "decay": lambda taus=None, b="jnp": make_strategy(
+            "decay", tau=tau, m=m, taus=taus, decay=exponential_decay(0.9),
+            backend=b,
+        ),
+        "consensus": lambda taus=None, b="jnp": make_strategy(
+            "consensus", tau=tau, topo=topo, eps=0.1, rounds=1, m=m,
+            taus=taus, backend=b,
+        ),
+    }
+
+
+VARIATION_TAUS = np.array([3, 3, 2, 2, 2, 1, 1])  # A2 at tau=3, m=7
+
+
+@pytest.mark.parametrize("name", ["masked-sgd", "decay", "consensus"])
+def test_fedrl_traced_mask_bitwise_on_jnp(name):
+    """Driver-level bit-identity: the eager jnp reference driver with a
+    traced-mask strategy copy (override_taus on a concrete schedule) equals
+    the static-numpy-mask driver exactly — metrics AND comm ledger."""
+    from repro.sweep.overrides import override_taus
+
+    mk = _variation_builders()[name]
+    cfg_static = FedRLConfig(env=FIGURE_EIGHT, strategy=mk(taus=VARIATION_TAUS),
+                             n_epochs=2, epoch_len=40, minibatch=20, eta=3e-3)
+    cfg_traced = override_taus(
+        FedRLConfig(env=FIGURE_EIGHT, strategy=mk(), n_epochs=2,
+                    epoch_len=40, minibatch=20, eta=3e-3),
+        jnp.asarray(VARIATION_TAUS, jnp.float32),
+    )
+    _, m_s, l_s = run_fedrl(cfg_static, jax.random.key(0))
+    _, m_t, l_t = run_fedrl(cfg_traced, jax.random.key(0))
+    for k in m_s:
+        np.testing.assert_array_equal(m_t[k], m_s[k], err_msg=k)
+    assert l_t.table_row() == l_s.table_row()
+
+
+@pytest.mark.parametrize("name", ["masked-sgd", "decay", "consensus"])
+def test_fedrl_traced_mask_jit_operand_parity(name):
+    """Under jit with the schedule as an *operand* (the sweep's traced taus
+    axis), the driver stays within ulp tolerance of the constant-mask static
+    program — XLA may fold literal masks differently, nothing more."""
+    from repro.sweep.overrides import override_taus
+
+    from repro.rl.fedrl import run_fedrl_core
+
+    mk = _variation_builders()[name]
+    # strategies are built EAGERLY (their A2/A3 validation cannot run on
+    # tracers); only the override runs inside the trace, like the sweep does
+    cfg_base = FedRLConfig(env=FIGURE_EIGHT, strategy=mk(), n_epochs=2,
+                           epoch_len=40, minibatch=20, eta=3e-3)
+    cfg_static = dataclasses_replace(cfg_base, strategy=mk(taus=VARIATION_TAUS))
+
+    traced = jax.device_get(
+        jax.jit(
+            lambda t: run_fedrl_core(override_taus(cfg_base, t),
+                                     jax.random.key(0))[1]
+        )(jnp.asarray(VARIATION_TAUS, jnp.float32))
+    )
+    static = jax.device_get(
+        jax.jit(lambda: run_fedrl_core(cfg_static, jax.random.key(0))[1])()
+    )
+    for k in static:
+        np.testing.assert_allclose(traced[k], static[k], rtol=1e-4, atol=1e-5,
+                                   err_msg=k)
+
+
+@pytest.mark.parametrize("backend", ["jnp", "interpret"])
+def test_fmarl_traced_mask_matches_static(backend):
+    """Task-generic driver: traced-mask copies track the static strategies on
+    both the tree reference (bitwise) and the interpret kernel path (ulp)."""
+    strat_static = DecayStrategy(tau=4, taus=TAUS, decay=exponential_decay(0.9),
+                                 backend=backend)
+    base = DecayStrategy(tau=4, m=6, decay=exponential_decay(0.9),
+                         backend=backend)
+    strat_traced = base.with_mask(
+        jnp.asarray(DecayStrategy._build_mask(TAUS, 4)), taus=TAUS
+    )
+    outs = {}
+    for tag, strat in (("static", strat_static), ("traced", strat_traced)):
+        cfg = FmarlConfig(strategy=strat, eta=0.05, n_periods=4)
+        _, metrics, ledger = run_fmarl(cfg, INIT, _quadratic_grad,
+                                       jax.random.key(0), _eval_grad)
+        outs[tag] = (np.asarray(metrics["server_grad_sq_norm"]), ledger)
+    if backend == "jnp":
+        np.testing.assert_array_equal(outs["traced"][0], outs["static"][0])
+    else:
+        np.testing.assert_allclose(outs["traced"][0], outs["static"][0],
+                                   rtol=1e-6)
+    assert outs["traced"][1].table_row() == outs["static"][1].table_row()
+
+
 # --- communication-cost accounting (trailing partial period) -------------------
 
 def test_fedrl_ledger_counts_trailing_partial_period():

@@ -154,6 +154,155 @@ def test_eps_axis_matches_per_eps_strategies():
             )
 
 
+def test_taus_axis_matches_per_schedule_strategies():
+    """The traced variation axis: each vmapped (schedule, seed) cell matches
+    an independent run with the schedule baked into a static strategy."""
+    from repro.rl.fedrl import run_fedrl_core
+
+    m, tau = 7, 4
+    scheds = ((4.0,) * m, (4.0, 4.0, 3.0, 3.0, 2.0, 2.0, 1.0))
+    base = _cfg(strategy=make_strategy("periodic", tau=tau, m=m, backend="jnp"))
+    spec = SweepSpec(name="taus", base=base, seeds=(0, 1),
+                     vmapped=(SweepAxis("taus", scheds),))
+    res = run_sweep(spec)
+    for i, sched in enumerate(scheds):
+        strat = make_strategy("periodic", tau=tau, m=m,
+                              taus=np.asarray(sched, int), backend="jnp")
+        jitted = jax.jit(
+            lambda k, c=_cfg(strategy=strat): run_fedrl_core(c, k)[1]
+        )
+        for j, seed in enumerate((0, 1)):
+            ref = jax.device_get(jitted(jax.random.key(seed)))
+            for k, arr in ref.items():
+                np.testing.assert_allclose(
+                    res.metrics["base"][k][i, j], np.asarray(arr),
+                    rtol=1e-4, atol=1e-5,
+                    err_msg=f"sched={sched} seed={seed} {k}",
+                )
+
+
+def test_taus_axis_through_decay_and_consensus():
+    """The mask retabulation must also refold the decay weighting and the
+    consensus strategies' mask-folded mixing tables per schedule."""
+    from repro.rl.fedrl import run_fedrl_core
+
+    m, tau = 7, 3
+    topo = T.random_regularish(m, 3, 4, seed=0)
+    scheds = ((3.0, 3.0, 2.0, 2.0, 2.0, 1.0, 1.0),)
+    bases = {
+        "decay": lambda taus=None: make_strategy(
+            "decay", tau=tau, m=m, taus=taus,
+            decay=exponential_decay(0.95), backend="jnp",
+        ),
+        "consensus": lambda taus=None: make_strategy(
+            "consensus", tau=tau, topo=topo, eps=0.1, m=m, taus=taus,
+            backend="jnp",
+        ),
+    }
+    for name, mk in bases.items():
+        spec = SweepSpec(name=f"taus-{name}", base=_cfg(strategy=mk()),
+                         seeds=(0,), vmapped=(SweepAxis("taus", scheds),))
+        res = run_sweep(spec)
+        strat = mk(taus=np.asarray(scheds[0], int))
+        ref = jax.device_get(
+            jax.jit(lambda k, c=_cfg(strategy=strat): run_fedrl_core(c, k)[1])(
+                jax.random.key(0)
+            )
+        )
+        for k, arr in ref.items():
+            np.testing.assert_allclose(
+                res.metrics["base"][k][0, 0], np.asarray(arr),
+                rtol=1e-4, atol=1e-5, err_msg=f"{name} {k}",
+            )
+
+
+def test_hetero_scale_axis_matches_independent_runs():
+    """Fleet-heterogeneity axis: each vmapped scale matches an independent
+    run with the same override applied eagerly (perturbation directions are
+    pinned by eval_seed, only the magnitude sweeps) — and the scale actually
+    changes the dynamics."""
+    from repro.rl.fedrl import run_fedrl_core
+    from repro.sweep import override_hetero_scale
+
+    def base():
+        return _cfg(strategy=make_strategy("periodic", tau=3, m=7,
+                                           backend="jnp"),
+                    num_envs=1)
+
+    scales = (0.0, 0.3)
+    spec = SweepSpec(name="het", base=base(), seeds=(0, 1),
+                     vmapped=(SweepAxis("hetero_scale", scales),))
+    res = run_sweep(spec)
+    for i, sc in enumerate(scales):
+        cfg_i = override_hetero_scale(base(), sc)
+        jitted = jax.jit(lambda k, c=cfg_i: run_fedrl_core(c, k)[1])
+        for j, seed in enumerate((0, 1)):
+            ref = jax.device_get(jitted(jax.random.key(seed)))
+            for k, arr in ref.items():
+                np.testing.assert_allclose(
+                    res.metrics["base"][k][i, j], np.asarray(arr),
+                    rtol=1e-4, atol=1e-5, err_msg=f"scale={sc} {k}",
+                )
+    # the heterogeneity magnitude is a real knob, not a no-op
+    assert float(np.max(np.abs(res.metrics["base"]["nas"][0]
+                               - res.metrics["base"]["nas"][1]))) > 0
+
+
+def test_lam_vector_axis_applies_per_agent_decay():
+    """Vector-valued lam points give each agent its own decay table; the
+    vmapped cell matches the override applied eagerly, and the (m, tau)
+    table holds lam_i^{j/2} folded with the variation mask."""
+    from repro.rl.fedrl import run_fedrl_core
+    from repro.sweep import override_lam
+
+    lam_vec = (0.98, 0.96, 0.94, 0.92, 0.9, 0.88, 0.86)
+    base = _cfg()  # decay strategy, tau=3, m=7
+    cfg_ref = override_lam(base, jnp.asarray(lam_vec, jnp.float32))
+    w = np.asarray(cfg_ref.strategy.decay_weights)
+    assert w.shape == (7, 3)
+    offs = np.arange(3, dtype=np.float32)
+    np.testing.assert_allclose(
+        w, np.power(np.asarray(lam_vec, np.float32)[:, None], offs / 2.0),
+        rtol=1e-6,
+    )
+    wt = np.asarray(cfg_ref.strategy.weight(1))
+    np.testing.assert_allclose(
+        wt, np.asarray(cfg_ref.strategy.mask)[:, 1] * w[:, 1], rtol=1e-6
+    )
+    spec = SweepSpec(name="lam-m", base=base, seeds=(0,),
+                     vmapped=(SweepAxis("lam", (lam_vec,)),))
+    res = run_sweep(spec)
+    ref = jax.device_get(
+        jax.jit(lambda k: run_fedrl_core(cfg_ref, k)[1])(jax.random.key(0))
+    )
+    for k, arr in ref.items():
+        np.testing.assert_allclose(
+            res.metrics["base"][k][0, 0], np.asarray(arr),
+            rtol=1e-4, atol=1e-5, err_msg=k,
+        )
+
+
+def test_vector_axis_validation():
+    ax = SweepAxis("taus", ((3.0, 2.0), (2.0, 1.0)))
+    assert ax.point_len == 2
+    assert SweepAxis("eta", (0.1, 0.2)).point_len is None
+    with pytest.raises(ValueError, match="one shape"):
+        SweepAxis("taus", ((3.0, 2.0), 1.0))
+    with pytest.raises(ValueError, match="one shape"):
+        SweepAxis("taus", ((3.0, 2.0), (3.0, 2.0, 1.0)))
+    with pytest.raises(ValueError, match="scalars or"):
+        SweepAxis("taus", (((1.0,),),))
+    from repro.sweep import override_lam, override_taus
+
+    with pytest.raises(ValueError, match="taus"):
+        override_taus(_cfg(), jnp.ones(3))  # m=7 strategy, length-3 point
+    with pytest.raises(ValueError, match="A2.3"):
+        # concrete points are A2-validated eagerly: no pacing agent here
+        override_taus(_cfg(), jnp.full(7, 2.0))  # tau=3 strategy
+    with pytest.raises(ValueError, match="lam"):
+        override_lam(_cfg(), jnp.ones(3))  # m=7 strategy, length-3 vector
+
+
 def test_unknown_vmapped_axis_raises():
     spec = SweepSpec(
         name="bad", base=_cfg(), seeds=(0,),
@@ -290,6 +439,54 @@ def test_dispatch_sweep_axis_ambiguous_coefficients_raise():
     assert out.shape == acc.shape
 
 
+def test_batched_variation_masks_through_dispatch():
+    """(S, m, tau) mask batching: per-run mask columns drive decay_accum /
+    scale_rows as (S, m) coefficients and mask-folded (S, m, m) mixing
+    through consensus_mix — batched == stacked per-run calls, and the
+    interpret kernels agree with the jnp reference."""
+    from repro.core.variation import mask_from_taus
+
+    S, m, tau, n = 3, 5, 4, 37
+    scheds = jnp.asarray([[4, 3, 2, 2, 1], [4, 4, 4, 3, 3], [4, 1, 1, 1, 1]],
+                         jnp.float32)
+    masks = jax.vmap(lambda t: mask_from_taus(t, tau))(scheds)  # (S, m, tau)
+    assert masks.shape == (S, m, tau)
+    acc = jax.random.normal(jax.random.key(0), (S, m, n))
+    g = jax.random.normal(jax.random.key(1), (S, m, n))
+    p = jnp.asarray(T.mixing_matrix(T.ring(m), 0.25), jnp.float32)
+    for offset in range(tau):
+        w = masks[:, :, offset]                                 # (S, m)
+        batched = dispatch.decay_accum(acc, g, -0.05 * w, backend="jnp")
+        stacked = jnp.stack([
+            dispatch.decay_accum(acc[i], g[i], -0.05 * w[i], backend="jnp")
+            for i in range(S)
+        ])
+        np.testing.assert_array_equal(np.asarray(batched), np.asarray(stacked))
+        np.testing.assert_allclose(
+            np.asarray(dispatch.decay_accum(acc, g, -0.05 * w,
+                                            backend="interpret")),
+            np.asarray(batched), atol=1e-6, err_msg=f"decay@{offset}",
+        )
+        sb = dispatch.scale_rows(g, w, backend="jnp")
+        ss = jnp.stack([
+            dispatch.scale_rows(g[i], w[i], backend="jnp") for i in range(S)
+        ])
+        np.testing.assert_array_equal(np.asarray(sb), np.asarray(ss))
+        # mask folded into the mixing matrix per run: (S, m, m)
+        mix = p[None, :, :] * w[:, None, :]
+        cb = dispatch.consensus_mix(g, mix, backend="jnp")
+        cs = jnp.stack([
+            dispatch.consensus_mix(g[i], mix[i], backend="jnp")
+            for i in range(S)
+        ])
+        np.testing.assert_allclose(np.asarray(cb), np.asarray(cs),
+                                   rtol=1e-6, atol=1e-6)
+        np.testing.assert_allclose(
+            np.asarray(dispatch.consensus_mix(g, mix, backend="interpret")),
+            np.asarray(cb), rtol=1e-5, atol=1e-6, err_msg=f"mix@{offset}",
+        )
+
+
 def test_interpret_backend_sweep_matches_jnp_backend():
     """The vmapped flat-carry driver dispatches on (S, m, n) through the
     interpret kernels and stays on-parity with the jnp reference sweep."""
@@ -351,6 +548,23 @@ def test_sweep_result_saves_versioned_artifacts(tmp_path):
     assert {r["lam"] for r in rows} == {0.98, 0.9}
     # grid bookkeeping
     assert spec.grid_shape == (2, 2) and spec.n_runs == 4
+
+
+def test_vector_axis_artifacts_roundtrip(tmp_path):
+    """A vector-valued axis survives the artifact pipeline: JSON keeps the
+    whole schedules, CSV rows get one compact cell per point."""
+    import json
+
+    scheds = ((3.0, 3.0, 2.0, 2.0, 2.0, 1.0, 1.0), (3.0,) * 7)
+    strat = make_strategy("periodic", tau=3, m=7, backend="jnp")
+    spec = SweepSpec(name="vec", base=_cfg(strategy=strat), seeds=(0,),
+                     vmapped=(SweepAxis("taus", scheds),))
+    res = run_sweep(spec)
+    jpath, cpath = res.save(str(tmp_path))
+    payload = json.loads(open(jpath).read())
+    assert payload["axes"]["taus"] == [list(s) for s in scheds]
+    rows = res.rows()
+    assert {r["taus"] for r in rows} == {"[3,3,2,2,2,1,1]", "[3,3,3,3,3,3,3]"}
 
 
 def test_spec_validation():

@@ -1,0 +1,126 @@
+"""Property-based tests (hypothesis) pinning the variation layer.
+
+The traced variation axis rests on structural invariants of the tau_i
+schedules and their indicator masks — A2 validity of the generators, mask
+monotonicity, the traced/static mask construction agreeing bit-for-bit, and
+the comm-accounting closed forms (``c2 == sum(taus)`` per full period and
+the ``min(tau_i, n)`` truncation for partial periods). Random m/tau/seed
+draws keep those pinned across the whole parameter space, not just the
+hand-picked fixtures of the unit suites.
+
+Skips cleanly when hypothesis is absent (the pinned-JAX CI leg and the
+container exercise that path; the latest-JAX leg installs hypothesis).
+"""
+import pytest
+
+pytest.importorskip("hypothesis", reason="hypothesis not installed")
+
+import jax.numpy as jnp
+import numpy as np
+from hypothesis import given, settings, strategies as st
+
+from repro.core.strategies import PeriodicStrategy, make_strategy
+from repro.core.variation import (
+    indicator_mask,
+    mask_from_taus,
+    masked_update_counts,
+    tau_schedule,
+    uniform_taus,
+    validate_a2,
+)
+
+SETTINGS = settings(max_examples=40, deadline=None)
+
+
+def _random_valid_taus(tau: int, m: int, seed: int) -> np.ndarray:
+    return uniform_taus(1, tau, m, seed)
+
+
+# --- schedule generators always satisfy A2 -------------------------------------
+
+@SETTINGS
+@given(tau=st.integers(1, 30), m=st.integers(1, 20), seed=st.integers(0, 99),
+       lo_frac=st.floats(0.0, 1.0))
+def test_uniform_taus_any_lo_satisfies_a2(tau, m, seed, lo_frac):
+    lo = max(1, int(round(lo_frac * tau)))
+    taus = uniform_taus(lo, tau, m, seed)
+    validate_a2(taus, tau)
+
+
+@SETTINGS
+@given(tau=st.integers(1, 25),
+       times=st.lists(st.floats(0.1, 10.0), min_size=2, max_size=12))
+def test_tau_schedule_satisfies_a2(tau, times):
+    """Eq. (6) schedules are valid A2 schedules at their own period length:
+    the fastest agent paces (tau_1 = tau), everyone stays in {1..tau},
+    sorted non-increasing."""
+    taus = tau_schedule(tau, np.sort(np.asarray(times)))
+    validate_a2(taus, tau)
+
+
+# --- indicator mask structure --------------------------------------------------
+
+@SETTINGS
+@given(tau=st.integers(1, 30), m=st.integers(1, 16), seed=st.integers(0, 99))
+def test_indicator_mask_monotone(tau, m, seed):
+    """Rows are prefixes of ones (agent i runs its first tau_i offsets);
+    columns are non-increasing down the A2-sorted agents and column sums are
+    non-increasing across offsets (later offsets keep fewer agents active)."""
+    taus = _random_valid_taus(tau, m, seed)
+    mask = np.asarray(indicator_mask(taus, jnp.arange(tau)))
+    assert mask.shape == (m, tau)
+    assert set(np.unique(mask)) <= {0.0, 1.0}
+    # row i == prefix of exactly tau_i ones
+    np.testing.assert_array_equal(mask.sum(1), taus)
+    assert np.all(np.diff(mask, axis=1) <= 0)      # prefix property per row
+    # columns: sorted taus => within a column, active agents are a prefix
+    assert np.all(np.diff(mask, axis=0) <= 0)
+    # column sums decrease as the period progresses
+    col = mask.sum(0)
+    assert np.all(np.diff(col) <= 0)
+
+
+@SETTINGS
+@given(tau=st.integers(1, 30), m=st.integers(1, 16), seed=st.integers(0, 99))
+def test_traced_mask_matches_static_constructor(tau, m, seed):
+    """``mask_from_taus`` (the traced constructor, fed float32 schedules like
+    the sweep's taus axis) is bit-identical to the static numpy
+    ``AggregationStrategy._build_mask``."""
+    taus = _random_valid_taus(tau, m, seed)
+    static = PeriodicStrategy._build_mask(taus, tau)
+    traced = np.asarray(mask_from_taus(jnp.asarray(taus, jnp.float32), tau))
+    np.testing.assert_array_equal(static, traced)
+
+
+# --- comm accounting closed forms ----------------------------------------------
+
+@SETTINGS
+@given(tau=st.integers(1, 25), m=st.integers(1, 12), seed=st.integers(0, 99))
+def test_full_period_c2_equals_sum_taus(tau, m, seed):
+    """One period bills exactly sum(taus) local updates (C2) and m uploads
+    (C1) — and C2 equals the mask's total active-cell count."""
+    taus = _random_valid_taus(tau, m, seed)
+    strat = make_strategy("periodic", tau=tau, taus=taus, m=m)
+    events = strat.comm_events_per_period()
+    assert events["c2"] == int(taus.sum())
+    assert events["c1"] == m
+    assert events["c2"] == int(np.asarray(strat.mask).sum())
+
+
+@SETTINGS
+@given(tau=st.integers(2, 25), m=st.integers(1, 12), seed=st.integers(0, 99),
+       frac=st.floats(0.0, 1.0))
+def test_partial_period_c2_truncates_per_agent(tau, m, seed, frac):
+    """A trailing partial period of n offsets bills sum_i min(tau_i, n) —
+    the closed form equals the mask-column sum it replaced, and full+partial
+    accounting is monotone in n."""
+    taus = _random_valid_taus(tau, m, seed)
+    strat = make_strategy("periodic", tau=tau, taus=taus, m=m)
+    n = int(round(frac * (tau - 1)))
+    events = strat.comm_events_partial_period(n)
+    expect = int(masked_update_counts(taus, n).sum())
+    assert events["c2"] == expect
+    assert expect == int(np.asarray(strat.mask)[:, :n].sum())
+    assert events["c1"] == (m if n else 0)
+    # truncation bounds: never more than a full period, never negative
+    assert 0 <= events["c2"] <= strat.comm_events_per_period()["c2"]
