@@ -1,0 +1,29 @@
+PYTHON ?= python
+export PYTHONPATH := src
+export JAX_PLATFORMS ?= cpu
+
+.PHONY: lint lint-update test test-slow bench-smoke
+
+# Trace-safety analyzer (jaxpr audit + RPR lint, baseline-gated) plus stock
+# ruff when it is installed (CI installs it; the dev container may not).
+lint:
+	$(PYTHON) -m repro.analysis --check
+	@if $(PYTHON) -m ruff --version >/dev/null 2>&1; then \
+		$(PYTHON) -m ruff check src benchmarks examples tests; \
+	else \
+		echo "ruff not installed; skipping stock lint (CI runs it)"; \
+	fi
+
+# Re-baseline the custom analyzer after triaging findings.
+lint-update:
+	$(PYTHON) -m repro.analysis --update-baseline
+
+# Tier-1 (pytest.ini already deselects the slow marker by default).
+test:
+	$(PYTHON) -m pytest -x -q
+
+test-slow:
+	$(PYTHON) -m pytest -x -q -m slow
+
+bench-smoke:
+	$(PYTHON) -m benchmarks.run --quick

@@ -64,7 +64,9 @@ def _static_parity(sched_spec, res_loop, schedules, seeds):
         strat = make_strategy("periodic", tau=TAU, taus=np.asarray(sched, int))
         cfg = make_cfg(strat, epochs=sched_spec.base.n_epochs)
         ref = jax.device_get(
-            jax.jit(lambda k, c=cfg: run_fedrl_core(c, k)[1])(
+            # Each tau_i schedule is a distinct static point: a fresh trace
+            # per iteration is the point of this parity check.
+            jax.jit(lambda k, c=cfg: run_fedrl_core(c, k)[1])(  # noqa: RPR005
                 jax.random.key(seeds[0])
             )
         )

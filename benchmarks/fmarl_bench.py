@@ -14,7 +14,7 @@ import numpy as np
 from repro.core import make_strategy, uniform_taus
 from repro.core.decay import exponential_decay
 from repro.core import topology as T
-from repro.rl import FIGURE_EIGHT, MERGE, FedRLConfig, run_fedrl
+from repro.rl import FIGURE_EIGHT, FedRLConfig, run_fedrl
 from repro.rl.fedrl import expected_gradient_norm
 
 FULL = bool(int(os.environ.get("REPRO_BENCH_FULL", "0")))

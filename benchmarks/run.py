@@ -64,7 +64,13 @@ def main() -> None:
             elif args.only:
                 sys.exit(f"bench {name!r} does not take --seeds")
             # full-suite run: non-sweep benches just ignore the flag
-        benches[name](**kw)
+        # XLA compile count per bench: a jump here means a bench started
+        # retracing inside its timed region (see repro.analysis.retrace).
+        from repro.analysis.retrace import count_compiles
+
+        with count_compiles() as compiles:
+            benches[name](**kw)
+        print(f"# {name}: {compiles.count} XLA compiles", flush=True)
     print(f"# all benches done in {time.time() - t0:.0f}s", flush=True)
 
 

@@ -127,7 +127,9 @@ def run(quick: bool = False) -> None:
                 us = {}
                 for backend in ("jnp", kernel_backend):
                     strat = make(backend)
-                    step = jax.jit(
+                    # One jit per (strategy, backend) cell is deliberate —
+                    # the bench times each compiled variant separately.
+                    step = jax.jit(  # noqa: RPR005
                         lambda p, g, off, s=strat: s.flat_update(p, g, off, 1e-2)
                     )
                     us[backend] = time_us(step, params, grads, offset, iters=iters)

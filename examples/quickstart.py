@@ -24,9 +24,17 @@ from repro.core import topology as T
 
 
 def noisy_quadratic(params, key, agent_idx, step):
-    """Each agent sees grad(F) + noise, F(x) = 0.5||x||^2."""
-    g = jax.tree.map(lambda x: x + 0.3 * jax.random.normal(key, x.shape), params)
-    loss = sum(jnp.sum(x**2) for x in jax.tree.leaves(params))
+    """Each agent sees grad(F) + noise, F(x) = 0.5||x||^2.
+
+    One independent key per leaf: reusing ``key`` across leaves would draw
+    the *same* noise for every same-shaped leaf (RPR001).
+    """
+    leaves, treedef = jax.tree.flatten(params)
+    g = treedef.unflatten([
+        x + 0.3 * jax.random.normal(jax.random.fold_in(key, j), x.shape)
+        for j, x in enumerate(leaves)
+    ])
+    loss = sum(jnp.sum(x**2) for x in leaves)
     return g, {"loss": loss}
 
 

@@ -5,7 +5,6 @@ integration, run for real on CPU at reduced width).
   PYTHONPATH=src python examples/train_lm_federated.py [--steps 300]
 """
 import argparse
-import dataclasses
 
 import repro.configs  # noqa: F401  (register archs)
 from repro.configs import register_arch

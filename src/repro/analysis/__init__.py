@@ -1,0 +1,28 @@
+"""Trace-safety analysis for the federated hot path (DESIGN.md §12).
+
+Three layers, one CLI (``python -m repro.analysis``), one baseline:
+
+  * :mod:`repro.analysis.lint` — AST lint (RPR001..RPR005): PRNG-key reuse,
+    Python loops in scan bodies, host numpy on traced values, tracer
+    concretization, jit retrace bait.
+  * :mod:`repro.analysis.jaxpr_audit` — lowers the registered hot-path entry
+    points and audits their jaxprs (JXA001..JXA004): sub-fp32 accumulation,
+    callbacks in scan bodies, constant-folded literals, dead donation.
+  * :mod:`repro.analysis.retrace` — runtime compile counter backing the
+    ``assert_max_compiles`` pytest fixture and the bench compile report.
+
+The pre-existing HLO tooling (:mod:`repro.analysis.hlo_stats`,
+:mod:`repro.analysis.hlo_loops`, :mod:`repro.analysis.roofline`,
+:mod:`repro.analysis.report`) shares the package: those inspect *performance*
+structure of lowered code, the layers above gate *correctness* hygiene.
+
+Keep this module import-light: the CLI and the retrace fixture import jax
+lazily so ``--skip-jaxpr`` lint runs need no accelerator stack.
+"""
+
+from repro.analysis.findings import Finding  # noqa: F401  (public API)
+from repro.analysis.retrace import (  # noqa: F401
+    RetraceError,
+    assert_max_compiles,
+    count_compiles,
+)

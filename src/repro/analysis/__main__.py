@@ -1,0 +1,101 @@
+"""``python -m repro.analysis`` — the trace-safety analyzer CLI.
+
+Runs the AST lint (RPR rules) over the Python sources and the jaxpr audit
+(JXA rules) over the registered hot-path entry points, diffs the combined
+findings against the committed baseline, and reports.
+
+    python -m repro.analysis --check             # CI gate: exit 1 on NEW findings
+    python -m repro.analysis --update-baseline   # re-freeze current findings
+    python -m repro.analysis --skip-jaxpr ...    # lint-only (compat legs)
+    python -m repro.analysis src/repro/rl        # narrow the linted paths
+
+Exit codes: 0 clean (or informational run), 1 new findings under ``--check``,
+2 internal error.
+"""
+from __future__ import annotations
+
+import argparse
+import os
+import sys
+from typing import List
+
+from repro.analysis.findings import (
+    BASELINE_PATH,
+    Finding,
+    diff_baseline,
+    load_baseline,
+    save_baseline,
+)
+
+DEFAULT_PATHS = ("src/repro", "benchmarks", "examples")
+
+
+def _parser() -> argparse.ArgumentParser:
+    p = argparse.ArgumentParser(
+        prog="python -m repro.analysis",
+        description="trace-safety analyzer: RPR AST lint + JXA jaxpr audit",
+    )
+    p.add_argument("paths", nargs="*",
+                   help=f"files/dirs to lint (default: {', '.join(DEFAULT_PATHS)})")
+    p.add_argument("--check", action="store_true",
+                   help="exit 1 if any finding is not in the baseline")
+    p.add_argument("--update-baseline", action="store_true",
+                   help="rewrite the baseline from the current findings")
+    p.add_argument("--baseline", default=BASELINE_PATH,
+                   help="baseline JSON path (default: the committed one)")
+    p.add_argument("--skip-jaxpr", action="store_true",
+                   help="skip the jaxpr audit (AST lint only; no jax import)")
+    p.add_argument("--skip-lint", action="store_true",
+                   help="skip the AST lint (jaxpr audit only)")
+    p.add_argument("--only-entry", action="append", default=None,
+                   metavar="NAME", help="audit only this hot-path entry "
+                   "(repeatable; see dispatch.hot_path_factories)")
+    return p
+
+
+def main(argv: List[str] = None) -> int:
+    args = _parser().parse_args(argv)
+    findings: List[Finding] = []
+
+    if not args.skip_lint:
+        from repro.analysis.lint import lint_paths
+
+        paths = args.paths or [p for p in DEFAULT_PATHS if os.path.exists(p)]
+        findings.extend(lint_paths(paths))
+
+    if not args.skip_jaxpr:
+        from repro.analysis.jaxpr_audit import run_audit
+
+        findings.extend(run_audit(only=args.only_entry))
+
+    if args.update_baseline:
+        save_baseline(findings, args.baseline)
+        print(f"baseline updated: {args.baseline} "
+              f"({len(findings)} findings frozen)")
+        return 0
+
+    baseline = load_baseline(args.baseline)
+    new, resolved = diff_baseline(findings, baseline)
+    known = len(findings) - len(new)
+
+    for f in new:
+        print(f.render())
+    if resolved:
+        print(f"note: {len(resolved)} baselined finding(s) no longer occur "
+              f"— run --update-baseline to prune:", file=sys.stderr)
+        for fp in resolved:
+            print(f"  {fp}", file=sys.stderr)
+
+    status = (
+        f"{len(findings)} finding(s): {len(new)} new, {known} baselined"
+    )
+    print(status)
+    if args.check and new:
+        print("FAIL: new findings above are not in the baseline "
+              "(fix them, # noqa them, or --update-baseline)", file=sys.stderr)
+        return 1
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

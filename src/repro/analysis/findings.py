@@ -1,0 +1,104 @@
+"""Findings + baseline bookkeeping shared by the trace-safety analyzers.
+
+A :class:`Finding` is one defect report from either analysis layer — an AST
+lint rule (``RPR0xx``, ``repro.analysis.lint``) or a jaxpr-audit rule
+(``JXA0xx``, ``repro.analysis.jaxpr_audit``). Findings are compared against a
+committed baseline file (``src/repro/analysis/baseline.json``) so CI fails
+only on *new* findings: pre-existing debt is frozen in the baseline and paid
+down incrementally, while any fresh violation of a rule turns the lint job
+red immediately.
+
+Fingerprints deliberately exclude line numbers — they are
+``rule :: path :: enclosing scope :: normalized source snippet`` — so
+unrelated edits that shift code up or down do not churn the baseline; only
+adding, removing, or editing the offending construct does. Identical
+constructs in one scope are disambiguated by a count per fingerprint.
+"""
+from __future__ import annotations
+
+import dataclasses
+import json
+import os
+from collections import Counter
+from typing import Dict, Iterable, List, Tuple
+
+BASELINE_PATH = os.path.join(os.path.dirname(__file__), "baseline.json")
+
+BASELINE_SCHEMA_VERSION = 1
+
+
+@dataclasses.dataclass(frozen=True)
+class Finding:
+    """One analyzer finding.
+
+    ``rule``: ``RPR001``..``RPR005`` (AST lint) or ``JXA001``..``JXA004``
+    (jaxpr audit). ``path``: repo-relative file path for lint findings, the
+    registered entry-point name for audit findings. ``scope``: enclosing
+    function qualname (lint) or jaxpr location hint (audit). ``line`` is
+    display-only and never part of the fingerprint.
+    """
+
+    rule: str
+    path: str
+    scope: str
+    message: str
+    snippet: str = ""
+    line: int = 0
+
+    @property
+    def fingerprint(self) -> str:
+        snip = " ".join(self.snippet.split())
+        return f"{self.rule}::{self.path}::{self.scope}::{snip}"
+
+    def render(self) -> str:
+        loc = f"{self.path}:{self.line}" if self.line else self.path
+        return f"{loc}: {self.rule} [{self.scope}] {self.message}"
+
+
+def fingerprint_counts(findings: Iterable[Finding]) -> Dict[str, int]:
+    return dict(Counter(f.fingerprint for f in findings))
+
+
+def load_baseline(path: str = BASELINE_PATH) -> Dict[str, int]:
+    """The committed fingerprint->count map ({} when no baseline exists)."""
+    if not os.path.exists(path):
+        return {}
+    with open(path) as f:
+        payload = json.load(f)
+    if payload.get("schema_version") != BASELINE_SCHEMA_VERSION:
+        raise ValueError(
+            f"baseline {path}: unsupported schema "
+            f"{payload.get('schema_version')!r}"
+        )
+    return dict(payload.get("findings", {}))
+
+
+def save_baseline(findings: Iterable[Finding], path: str = BASELINE_PATH) -> str:
+    payload = {
+        "schema_version": BASELINE_SCHEMA_VERSION,
+        "findings": dict(sorted(fingerprint_counts(findings).items())),
+    }
+    with open(path, "w") as f:
+        json.dump(payload, f, indent=2, sort_keys=True)
+        f.write("\n")
+    return path
+
+
+def diff_baseline(
+    findings: List[Finding], baseline: Dict[str, int]
+) -> Tuple[List[Finding], List[str]]:
+    """Split current findings against the baseline.
+
+    Returns ``(new, resolved)``: findings beyond the baselined count per
+    fingerprint (the CI-failing set, in input order), and baselined
+    fingerprints that no longer occur (stale debt — prune with
+    ``--update-baseline``).
+    """
+    seen: Counter = Counter()
+    new = []
+    for f in findings:
+        seen[f.fingerprint] += 1
+        if seen[f.fingerprint] > baseline.get(f.fingerprint, 0):
+            new.append(f)
+    resolved = sorted(fp for fp, n in baseline.items() if seen.get(fp, 0) < n)
+    return new, resolved

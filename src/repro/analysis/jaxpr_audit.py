@@ -1,0 +1,227 @@
+"""Layer 1: jaxpr audit of the registered hot-path entry points.
+
+Every module that owns a piece of the federated hot path registers a
+:class:`~repro.kernels.dispatch.HotPathEntry` (the four dispatch primitives
+on the jnp and interpret backends, ``run_fedrl_core``, ``run_fmarl_core``,
+and the sweep runner's per-static-point batched fn). The audit lowers each
+entry with ``jax.make_jaxpr`` over abstract arguments — nothing executes —
+and walks the closed jaxpr recursively (scan/while/cond/pjit sub-jaxprs
+included) to flag:
+
+  JXA001  sub-fp32 accumulation: a ``reduce_sum``/``dot_general``/
+          ``conv_general_dilated``/``cumsum`` whose *output* dtype is below
+          fp32 — the ``preferred_element_type`` was dropped, so bf16/f16
+          operands accumulate at operand precision and drift from the
+          reference path.
+  JXA002  host callback (``pure_callback``/``io_callback``/
+          ``debug_callback``) inside a scan/while body: a device->host
+          round-trip per step of the traced loop.
+  JXA003  large constant-folded literal: a closed-over constant above
+          ``LARGE_CONST_ELEMS`` elements baked into the jaxpr — the
+          traced-mask-vs-literal divergence class (a mask folded as a
+          constant retraces per value and bloats the executable).
+  JXA004  declared-but-unused donation: the entry registers
+          ``donate_argnums`` but the jit lowering aliases no input to an
+          output, so the "in-place" carry silently double-buffers.
+  JXA000  entry failed to lower at all (import/trace error) — always a
+          finding, never silently skipped.
+
+Findings use the entry name as ``path`` and the sub-jaxpr nesting chain
+(e.g. ``scan>pjit``) as ``scope``, so fingerprints survive refactors that
+only move source lines.
+"""
+from __future__ import annotations
+
+import importlib
+from typing import Dict, Iterable, List, Optional, Sequence, Tuple
+
+from repro.analysis.findings import Finding
+
+LARGE_CONST_ELEMS = 16384
+
+# Modules that register hot-path entries at import time. dispatch registers
+# its own primitives; the drivers and the sweep runner add theirs.
+ENTRY_MODULES = (
+    "repro.kernels.dispatch",
+    "repro.rl.fedrl",
+    "repro.core.fmarl",
+    "repro.sweep.runner",
+)
+
+_ACCUM_PRIMS = {"reduce_sum", "reduce_prod", "dot_general",
+                "conv_general_dilated", "cumsum"}
+_CALLBACK_PRIMS = {"pure_callback", "io_callback", "debug_callback"}
+_LOOP_PRIMS = {"scan", "while"}
+
+
+def collect_entries(
+    only: Optional[Iterable[str]] = None,
+) -> Tuple[Dict[str, object], List[Finding]]:
+    """Import the registering modules and snapshot the registry.
+
+    Returns ``(entries, findings)`` where ``entries`` maps name ->
+    ``HotPathEntry`` factory output is *not* yet built (factories run in
+    :func:`audit_entries` so one broken entry cannot hide the rest), and
+    ``findings`` holds JXA000 reports for modules that failed to import.
+    """
+    findings: List[Finding] = []
+    for mod in ENTRY_MODULES:
+        try:
+            importlib.import_module(mod)
+        except Exception as e:  # pragma: no cover - env-dependent
+            findings.append(Finding(
+                rule="JXA000", path=mod, scope="<import>",
+                message=f"hot-path module failed to import: {e!r}",
+            ))
+    from repro.kernels.dispatch import hot_path_factories
+
+    factories = hot_path_factories()
+    if only is not None:
+        wanted = set(only)
+        unknown = wanted - set(factories)
+        for name in sorted(unknown):
+            findings.append(Finding(
+                rule="JXA000", path=name, scope="<registry>",
+                message="no such registered hot-path entry",
+            ))
+        factories = {k: v for k, v in factories.items() if k in wanted}
+    return factories, findings
+
+
+def _float_bits(dtype) -> Optional[int]:
+    import jax.numpy as jnp
+
+    d = jnp.dtype(dtype)
+    if jnp.issubdtype(d, jnp.floating):
+        return jnp.finfo(d).bits
+    return None
+
+
+def _sub_jaxprs(eqn) -> List[object]:
+    """All Jaxpr/ClosedJaxpr values hiding in an equation's params."""
+    try:  # moved to jax.extend.core across JAX releases
+        from jax.extend.core import ClosedJaxpr, Jaxpr
+    except ImportError:  # pragma: no cover - version-dependent
+        from jax.core import ClosedJaxpr, Jaxpr
+
+    found: List[object] = []
+
+    def visit(v):
+        if isinstance(v, (Jaxpr, ClosedJaxpr)):
+            found.append(v)
+        elif isinstance(v, (tuple, list)):
+            for x in v:
+                visit(x)
+
+    for v in eqn.params.values():
+        visit(v)
+    return found
+
+
+def _walk(jaxpr, entry_name: str, chain: str, in_loop: bool,
+          out: List[Finding]) -> None:
+    closed = jaxpr
+    inner = getattr(closed, "jaxpr", closed)  # ClosedJaxpr -> Jaxpr
+    consts = getattr(closed, "consts", ())
+
+    for c in consts:
+        size = getattr(c, "size", 0)
+        if size and size > LARGE_CONST_ELEMS:
+            out.append(Finding(
+                rule="JXA003", path=entry_name, scope=chain or "<top>",
+                message=(
+                    f"constant-folded literal of {size} elements "
+                    f"(shape {getattr(c, 'shape', '?')}) baked into the "
+                    f"jaxpr — pass it as an operand so it stays traced"
+                ),
+                snippet=f"const{tuple(getattr(c, 'shape', ()))}",
+            ))
+
+    for eqn in inner.eqns:
+        name = eqn.primitive.name
+        if name in _ACCUM_PRIMS:
+            for var in eqn.outvars:
+                bits = _float_bits(var.aval.dtype)
+                if bits is not None and bits < 32:
+                    out.append(Finding(
+                        rule="JXA001", path=entry_name,
+                        scope=chain or "<top>",
+                        message=(
+                            f"{name} accumulates at {var.aval.dtype} "
+                            f"(< fp32) — set preferred_element_type / "
+                            f"upcast the operands"
+                        ),
+                        snippet=f"{name}->{var.aval.dtype}",
+                    ))
+        if name in _CALLBACK_PRIMS and in_loop:
+            cb = eqn.params.get("callback", "")
+            out.append(Finding(
+                rule="JXA002", path=entry_name, scope=chain or "<top>",
+                message=(
+                    f"host callback {name} inside a scan/while body — "
+                    f"a device->host round-trip every step"
+                ),
+                snippet=f"{name}:{getattr(cb, '__name__', cb)}"[:80],
+            ))
+        subs = _sub_jaxprs(eqn)
+        if subs:
+            child_chain = f"{chain}>{name}" if chain else name
+            child_in_loop = in_loop or name in _LOOP_PRIMS
+            for sub in subs:
+                _walk(sub, entry_name, child_chain, child_in_loop, out)
+
+
+def audit_entry(name: str, entry) -> List[Finding]:
+    """All JXA findings for one registered entry (built + lowered here)."""
+    import jax
+
+    out: List[Finding] = []
+    try:
+        closed = jax.make_jaxpr(entry.fn)(*entry.args)
+    except Exception as e:
+        return [Finding(
+            rule="JXA000", path=name, scope="<trace>",
+            message=f"entry failed to lower: {type(e).__name__}: {e}",
+        )]
+    _walk(closed, name, "", False, out)
+
+    if entry.donate_argnums:
+        try:
+            lowered = jax.jit(
+                entry.fn, donate_argnums=entry.donate_argnums
+            ).lower(*entry.args)
+            text = lowered.as_text()
+        except Exception as e:
+            out.append(Finding(
+                rule="JXA000", path=name, scope="<donation>",
+                message=f"donation lowering failed: {type(e).__name__}: {e}",
+            ))
+        else:
+            if "tf.aliasing_output" not in text:
+                out.append(Finding(
+                    rule="JXA004", path=name, scope="<donation>",
+                    message=(
+                        "entry declares donate_argnums="
+                        f"{tuple(entry.donate_argnums)} but the lowering "
+                        "aliases no input to an output — the donated carry "
+                        "double-buffers"
+                    ),
+                    snippet=f"donate{tuple(entry.donate_argnums)}",
+                ))
+    return out
+
+
+def run_audit(only: Optional[Sequence[str]] = None) -> List[Finding]:
+    """Audit every registered hot-path entry point (or the ``only`` subset)."""
+    factories, findings = collect_entries(only)
+    for name in sorted(factories):
+        try:
+            entry = factories[name]()
+        except Exception as e:
+            findings.append(Finding(
+                rule="JXA000", path=name, scope="<factory>",
+                message=f"entry factory raised: {type(e).__name__}: {e}",
+            ))
+            continue
+        findings.extend(audit_entry(name, entry))
+    return findings

@@ -1,0 +1,695 @@
+"""Custom JAX trace-hygiene lint: the RPR rule set over Python ASTs.
+
+Stock linters know nothing about trace discipline. These rules encode the
+bug classes this codebase has actually shipped and fixed by hand (PRNG-key
+reuse in ``_eval_grad_norm``, host round-trips, retrace bait) so they are
+caught at lint time instead of at parity-test-divergence time:
+
+  RPR001  PRNG key consumed by >= 2 consumers without an interleaved
+          ``jax.random.split``/``fold_in`` (dataflow within a function
+          body), including a key captured by a closure handed to a
+          multi-invocation transform (``jax.tree.map`` — the correlated
+          per-leaf-noise bug).
+  RPR002  Python ``for``/``while`` inside a ``lax.scan``/``while_loop``/
+          ``fori_loop``/``lax.map`` body: the loop unrolls into the trace
+          (or fails on a traced bound) instead of staying a traced axis.
+  RPR003  host ``numpy`` call on a value that flows from the parameters of
+          a traced function (scan/vmap/jit/grad body): implicit device
+          transfer, breaks under jit.
+  RPR004  ``float()``/``int()``/``bool()``/``.item()``/``.tolist()`` on a
+          potential tracer inside a traced function: concretization error
+          under jit, silent host sync outside it.
+  RPR005  retrace bait at ``jax.jit`` sites: jitted functions with mutable
+          (dict/list/set) default arguments, or ``jax.jit`` called inside a
+          Python loop (a fresh wrapper — and trace — per iteration).
+
+Findings carry line-independent fingerprints (``repro.analysis.findings``)
+and are gated against ``baseline.json``: CI fails only on findings that are
+not in the committed baseline. Suppress a deliberate construct in place with
+``# noqa: RPR00x`` on the offending line.
+"""
+from __future__ import annotations
+
+import ast
+import os
+import re
+from typing import Dict, Iterable, List, Optional, Set
+
+from repro.analysis.findings import Finding
+
+RULES = {
+    "RPR001": "PRNG key reuse without an interleaved split",
+    "RPR002": "Python loop inside a traced scan/loop body",
+    "RPR003": "host numpy call on a traced value",
+    "RPR004": "tracer concretization (float/int/bool/.item)",
+    "RPR005": "retrace bait at a jax.jit call site",
+}
+
+# Canonical dotted names (after import-alias resolution).
+_KEY_SOURCES = {
+    "jax.random.key", "jax.random.PRNGKey", "jax.random.split",
+    "jax.random.fold_in", "jax.random.clone", "jax.random.wrap_key_data",
+}
+_LOOP_FNS = {
+    "jax.lax.scan", "jax.lax.while_loop", "jax.lax.fori_loop",
+    "jax.lax.map", "jax.lax.associative_scan",
+}
+_TRACE_FNS = _LOOP_FNS | {
+    "jax.jit", "jax.vmap", "jax.pmap", "jax.grad", "jax.value_and_grad",
+    "jax.checkpoint", "jax.remat", "jax.lax.cond", "jax.lax.switch",
+    "jax.custom_jvp", "jax.custom_vjp",
+}
+# Transforms that invoke a passed/capturing callable more than once per call.
+_MULTI_INVOKE_FNS = _LOOP_FNS | {
+    "jax.tree.map", "jax.tree_map", "jax.tree_util.tree_map",
+    "jax.vmap", "jax.pmap",
+}
+# Function parameters with these names are assumed to be PRNG keys. Bare
+# ``k`` is deliberately absent: in model code it names the attention key
+# tensor far more often than a PRNG key (keys from jax.random assignments
+# are tracked by dataflow regardless of name).
+_KEY_PARAM_RE = re.compile(
+    r"^(key|keys|rng|rngs|prng|prng_key|rng_key|sub|subkey|subkeys)$"
+)
+_CONCRETIZERS = {"float", "int", "bool", "complex"}
+_NOQA_RE = re.compile(r"#\s*noqa(?::\s*(?P<rules>[A-Z0-9, ]+))?", re.I)
+
+
+# --- import-alias resolution --------------------------------------------------
+
+def _module_aliases(tree: ast.Module) -> Dict[str, str]:
+    """Map local names to canonical dotted prefixes from the import table."""
+    aliases: Dict[str, str] = {}
+    for node in ast.walk(tree):
+        if isinstance(node, ast.Import):
+            for a in node.names:
+                aliases[a.asname or a.name.split(".")[0]] = (
+                    a.name if a.asname else a.name.split(".")[0]
+                )
+        elif isinstance(node, ast.ImportFrom) and node.module and not node.level:
+            for a in node.names:
+                aliases[a.asname or a.name] = f"{node.module}.{a.name}"
+    return aliases
+
+
+def _dotted(node: ast.AST) -> Optional[str]:
+    """``a.b.c`` expression -> ``"a.b.c"`` (None for anything fancier)."""
+    parts = []
+    while isinstance(node, ast.Attribute):
+        parts.append(node.attr)
+        node = node.value
+    if isinstance(node, ast.Name):
+        parts.append(node.id)
+        return ".".join(reversed(parts))
+    return None
+
+
+def _canonical(node: ast.AST, aliases: Dict[str, str]) -> Optional[str]:
+    dotted = _dotted(node)
+    if dotted is None:
+        return None
+    head, _, rest = dotted.partition(".")
+    base = aliases.get(head, head)
+    return f"{base}.{rest}" if rest else base
+
+
+# --- scope / traced-context analysis ------------------------------------------
+
+_FuncNode = (ast.FunctionDef, ast.AsyncFunctionDef, ast.Lambda)
+
+
+class _Scopes:
+    """Function-scope index: qualnames, parents, local def tables, and the
+    traced/loop-body context marks used by RPR002/3/4."""
+
+    def __init__(self, tree: ast.Module, aliases: Dict[str, str]):
+        self.aliases = aliases
+        self.parent: Dict[ast.AST, Optional[ast.AST]] = {}
+        self.qualname: Dict[ast.AST, str] = {}
+        self.defs: Dict[Optional[ast.AST], Dict[str, ast.AST]] = {None: {}}
+        self.traced: Set[ast.AST] = set()
+        self.loop_body: Set[ast.AST] = set()
+        self._index(tree, None, "")
+        self._mark_contexts(tree)
+
+    def _index(self, node: ast.AST, fn: Optional[ast.AST], prefix: str):
+        for child in ast.iter_child_nodes(node):
+            if isinstance(child, _FuncNode):
+                name = getattr(child, "name", "<lambda>")
+                qual = f"{prefix}.{name}" if prefix else name
+                self.parent[child] = fn
+                self.qualname[child] = qual
+                self.defs.setdefault(fn, {})[name] = child
+                self.defs.setdefault(child, {})
+                self._index(child, child, qual)
+            else:
+                self._index(child, fn, prefix)
+
+    def enclosing(self, fn: Optional[ast.AST]) -> Iterable[ast.AST]:
+        while fn is not None:
+            yield fn
+            fn = self.parent.get(fn)
+
+    def resolve_local(self, name: str, fn: Optional[ast.AST]) -> Optional[ast.AST]:
+        """Nearest lexically-enclosing def of ``name`` visible from ``fn``."""
+        scope: Optional[ast.AST] = fn
+        while True:
+            found = self.defs.get(scope, {}).get(name)
+            if found is not None:
+                return found
+            if scope is None:
+                return None
+            scope = self.parent.get(scope)
+
+    def _owner_of(self, node: ast.AST, tree: ast.Module) -> Optional[ast.AST]:
+        # Recompute lightweight expression ownership: walk functions, check
+        # containment by span of the function subtree.
+        return self._owners.get(node)
+
+    def _mark_contexts(self, tree: ast.Module):
+        # Map every node to its owning function for call-site resolution.
+        self._owners: Dict[ast.AST, Optional[ast.AST]] = {}
+
+        def walk(node, fn):
+            for child in ast.iter_child_nodes(node):
+                self._owners[child] = fn
+                walk(child, child if isinstance(child, _FuncNode) else fn)
+
+        self._owners[tree] = None
+        walk(tree, None)
+
+        for node in ast.walk(tree):
+            if not isinstance(node, ast.Call):
+                continue
+            canon = _canonical(node.func, self.aliases)
+            if canon not in _TRACE_FNS:
+                continue
+            is_loop = canon in _LOOP_FNS
+            for arg in list(node.args) + [kw.value for kw in node.keywords]:
+                target = None
+                if isinstance(arg, ast.Lambda):
+                    target = arg
+                elif isinstance(arg, ast.Name):
+                    target = self.resolve_local(arg.id, self._owners.get(node))
+                if target is None:
+                    continue
+                self._mark(target, loop=is_loop)
+        # @jax.jit-style decorators
+        for node in ast.walk(tree):
+            if isinstance(node, (ast.FunctionDef, ast.AsyncFunctionDef)):
+                for dec in node.decorator_list:
+                    call = dec.func if isinstance(dec, ast.Call) else dec
+                    canon = _canonical(call, self.aliases)
+                    if canon in _TRACE_FNS:
+                        self._mark(node, loop=False)
+                    elif canon == "functools.partial" and isinstance(dec, ast.Call):
+                        for a in dec.args[:1]:
+                            if _canonical(a, self.aliases) in _TRACE_FNS:
+                                self._mark(node, loop=False)
+
+    def _mark(self, fn: ast.AST, *, loop: bool):
+        stack = [fn]
+        while stack:
+            f = stack.pop()
+            if loop:
+                if f in self.loop_body:
+                    continue
+                self.loop_body.add(f)
+            self.traced.add(f)
+            stack.extend(self.defs.get(f, {}).values())
+        if not loop:
+            # nested defs of a traced fn are traced too
+            for child in list(self.defs.get(fn, {}).values()):
+                if child not in self.traced:
+                    self._mark(child, loop=False)
+
+
+# --- RPR001: PRNG key dataflow ------------------------------------------------
+
+def _terminates(stmts: List[ast.stmt]) -> bool:
+    """Whether a straight-line block surely leaves the enclosing scope."""
+    return any(
+        isinstance(s, (ast.Return, ast.Raise, ast.Break, ast.Continue))
+        for s in stmts
+    )
+
+
+class _KeyState:
+    __slots__ = ("counts",)
+
+    def __init__(self, counts: Optional[Dict[str, int]] = None):
+        self.counts = dict(counts or {})  # tracked key name -> consume count
+
+    def copy(self) -> "_KeyState":
+        return _KeyState(self.counts)
+
+    def merge(self, *others: "_KeyState"):
+        for o in others:
+            for name, n in o.counts.items():
+                self.counts[name] = max(self.counts.get(name, 0), n)
+
+
+class _KeyLinter:
+    """Order-aware key-consumption walker for one function body."""
+
+    def __init__(self, rules_out: List[Finding], path: str, scope: str,
+                 aliases: Dict[str, str]):
+        self.out = rules_out
+        self.path = path
+        self.scope = scope
+        self.aliases = aliases
+        self.reported: Set[str] = set()
+
+    # -- entry point
+    def run(self, fn: ast.AST):
+        state = _KeyState()
+        for p in self._params(fn):
+            if _KEY_PARAM_RE.match(p):
+                state.counts[p] = 0
+        body = fn.body if isinstance(fn.body, list) else [ast.Return(fn.body)]
+        self._block(body, state)
+
+    @staticmethod
+    def _params(fn: ast.AST) -> List[str]:
+        a = fn.args
+        names = [x.arg for x in a.posonlyargs + a.args + a.kwonlyargs]
+        if a.vararg:
+            names.append(a.vararg.arg)
+        if a.kwarg:
+            names.append(a.kwarg.arg)
+        return names
+
+    # -- statements
+    def _block(self, stmts: List[ast.stmt], state: _KeyState):
+        for s in stmts:
+            self._stmt(s, state)
+
+    def _stmt(self, s: ast.stmt, state: _KeyState):
+        if isinstance(s, (ast.Assign, ast.AnnAssign, ast.AugAssign)):
+            value = s.value
+            if value is not None:
+                self._expr(value, state)
+            targets = s.targets if isinstance(s, ast.Assign) else [s.target]
+            fresh = value is not None and self._is_key_source(value)
+            for t in targets:
+                self._bind_target(t, state, fresh)
+        elif isinstance(s, ast.If):
+            self._expr(s.test, state)
+            b1, b2 = state.copy(), state.copy()
+            self._block(s.body, b1)
+            self._block(s.orelse, b2)
+            state.counts.clear()
+            # A branch that cannot fall through (early return/raise) never
+            # reaches the code after the if — its consumption counts must
+            # not combine with the continuation's (``if c: return f(key)``
+            # followed by ``return g(key)`` consumes the key exactly once).
+            live = []
+            if not _terminates(s.body):
+                live.append(b1)
+            if not _terminates(s.orelse):
+                live.append(b2)
+            state.merge(*live)  # both terminate -> continuation unreachable
+        elif isinstance(s, (ast.For, ast.AsyncFor)):
+            self._expr(s.iter, state)
+            fresh_iter = self._is_key_source(s.iter)
+            body_state = state.copy()
+            for _pass in range(2):  # second pass models reuse across iters
+                self._bind_target(s.target, body_state, fresh_iter)
+                self._block(s.body, body_state)
+            self._block(s.orelse, body_state)
+            state.merge(body_state)
+        elif isinstance(s, ast.While):
+            body_state = state.copy()
+            for _pass in range(2):
+                self._expr(s.test, body_state)
+                self._block(s.body, body_state)
+            self._block(s.orelse, body_state)
+            state.merge(body_state)
+        elif isinstance(s, ast.Try):
+            b = state.copy()
+            self._block(s.body, b)
+            branches = [b]
+            for h in s.handlers:
+                hb = state.copy()
+                self._block(h.body, hb)
+                branches.append(hb)
+            state.counts.clear()
+            state.merge(*branches)
+            self._block(s.orelse, state)
+            self._block(s.finalbody, state)
+        elif isinstance(s, ast.With):
+            for item in s.items:
+                self._expr(item.context_expr, state)
+            self._block(s.body, state)
+        elif isinstance(s, ast.Return) and s.value is not None:
+            self._expr(s.value, state)
+        elif isinstance(s, ast.Expr):
+            self._expr(s.value, state)
+        elif isinstance(s, (ast.FunctionDef, ast.AsyncFunctionDef)):
+            # Closures over tracked keys: a local def may be invoked many
+            # times (or handed to a transform) — treat captured-key
+            # consumption as repeated.
+            self._closure(s, state, multiplier=2)
+        # other statements (pass, raise, import, ...) carry no key flow
+
+    def _bind_target(self, t: ast.AST, state: _KeyState, fresh: bool):
+        if isinstance(t, (ast.Tuple, ast.List)):
+            for el in t.elts:
+                self._bind_target(el, state, fresh)
+        elif isinstance(t, ast.Starred):
+            self._bind_target(t.value, state, fresh)
+        elif isinstance(t, ast.Name):
+            if fresh:
+                state.counts[t.id] = 0
+            elif t.id in state.counts:
+                del state.counts[t.id]  # rebound to a non-key value
+
+    # -- expressions
+    def _is_key_source(self, node: ast.AST) -> bool:
+        return (
+            isinstance(node, ast.Call)
+            and _canonical(node.func, self.aliases) in _KEY_SOURCES
+        )
+
+    def _expr(self, node: ast.AST, state: _KeyState, mult: int = 1):
+        if isinstance(node, ast.Call):
+            canon = _canonical(node.func, self.aliases) or ""
+            multi = canon in _MULTI_INVOKE_FNS
+            for arg in list(node.args) + [kw.value for kw in node.keywords]:
+                if isinstance(arg, ast.Name) and arg.id in state.counts:
+                    self._consume(arg, state, mult)
+                elif isinstance(arg, ast.Lambda):
+                    self._closure(arg, state,
+                                  multiplier=2 if multi else max(mult, 1))
+                else:
+                    self._expr(arg, state, mult)
+            self._expr(node.func, state, mult)
+        elif isinstance(node, ast.Lambda):
+            self._closure(node, state, multiplier=max(mult, 1))
+        elif isinstance(node, (ast.FunctionDef, ast.AsyncFunctionDef)):
+            self._closure(node, state, multiplier=2)
+        elif isinstance(node, ast.IfExp):
+            # Ternary arms are exclusive: max-merge like an if statement.
+            self._expr(node.test, state, mult)
+            b1, b2 = state.copy(), state.copy()
+            self._expr(node.body, b1, mult)
+            self._expr(node.orelse, b2, mult)
+            state.counts.clear()
+            state.merge(b1, b2)
+        else:
+            for child in ast.iter_child_nodes(node):
+                self._expr(child, state, mult)
+
+    def _closure(self, fn: ast.AST, state: _KeyState, *, multiplier: int):
+        """Process a nested callable: its own params shadow the outer keys;
+        consumption of *captured* tracked keys propagates to the caller's
+        state, scaled by how often the callable may run."""
+        inner = state.copy()
+        shadowed = set(self._params(fn))
+        for p in shadowed:
+            inner.counts.pop(p, None)
+            if _KEY_PARAM_RE.match(p):
+                inner.counts[p] = 0
+        body = fn.body if isinstance(fn.body, list) else [ast.Expr(fn.body)]
+        before = {k: v for k, v in inner.counts.items() if k not in shadowed}
+        self._block(body, inner)
+        for name, n0 in before.items():
+            n1 = inner.counts.get(name, n0)
+            if n1 > n0 and name in state.counts:
+                delta = (n1 - n0) * multiplier
+                state.counts[name] += delta
+                if state.counts[name] >= 2:
+                    self._report(name, fn)
+
+    def _consume(self, name_node: ast.Name, state: _KeyState, mult: int):
+        state.counts[name_node.id] += max(mult, 1)
+        if state.counts[name_node.id] >= 2:
+            self._report(name_node.id, name_node)
+
+    def _report(self, name: str, node: ast.AST):
+        if name in self.reported:
+            return
+        self.reported.add(name)
+        self.out.append(Finding(
+            rule="RPR001",
+            path=self.path,
+            scope=self.scope,
+            message=(
+                f"PRNG key {name!r} reaches two consumers without an "
+                f"interleaved jax.random.split/fold_in — streams correlate"
+            ),
+            snippet=f"key={name}",
+            line=getattr(node, "lineno", 0),
+        ))
+
+
+# --- RPR003/RPR004 taint ------------------------------------------------------
+
+def _taint_rules(fn: ast.AST, scopes: _Scopes, path: str,
+                 out: List[Finding]):
+    """Host-numpy (RPR003) and concretization (RPR004) inside traced fns."""
+    aliases = scopes.aliases
+    scope = scopes.qualname.get(fn, "<module>")
+    tainted: Set[str] = set(_KeyLinter._params(fn))
+
+    def has_taint(node: ast.AST) -> bool:
+        return any(
+            isinstance(n, ast.Name) and n.id in tainted
+            for n in ast.walk(node)
+        )
+
+    body = fn.body if isinstance(fn.body, list) else [ast.Expr(fn.body)]
+    for stmt in body:
+        for node in ast.walk(stmt):
+            if isinstance(node, (ast.Assign, ast.AugAssign, ast.AnnAssign)):
+                if node.value is not None and has_taint(node.value):
+                    targets = (node.targets if isinstance(node, ast.Assign)
+                               else [node.target])
+                    for t in targets:
+                        for n in ast.walk(t):
+                            if isinstance(n, ast.Name):
+                                tainted.add(n.id)
+            elif isinstance(node, ast.Call):
+                canon = _canonical(node.func, aliases) or ""
+                args = list(node.args) + [kw.value for kw in node.keywords]
+                if canon.startswith("numpy.") and any(
+                    has_taint(a) for a in args
+                ):
+                    out.append(Finding(
+                        rule="RPR003", path=path, scope=scope,
+                        message=(
+                            f"host numpy call {canon}() on a value flowing "
+                            f"from traced parameters — device round-trip, "
+                            f"breaks under jit"
+                        ),
+                        snippet=ast.unparse(node)[:80],
+                        line=node.lineno,
+                    ))
+                elif (
+                    isinstance(node.func, ast.Name)
+                    and node.func.id in _CONCRETIZERS
+                    and node.func.id not in tainted
+                    and len(args) == 1 and has_taint(args[0])
+                ):
+                    out.append(Finding(
+                        rule="RPR004", path=path, scope=scope,
+                        message=(
+                            f"{node.func.id}() on a potential tracer — "
+                            f"concretization error under jit"
+                        ),
+                        snippet=ast.unparse(node)[:80],
+                        line=node.lineno,
+                    ))
+                elif (
+                    isinstance(node.func, ast.Attribute)
+                    and node.func.attr in ("item", "tolist")
+                    and has_taint(node.func.value)
+                ):
+                    out.append(Finding(
+                        rule="RPR004", path=path, scope=scope,
+                        message=(
+                            f".{node.func.attr}() on a potential tracer — "
+                            f"host sync / concretization under jit"
+                        ),
+                        snippet=ast.unparse(node)[:80],
+                        line=node.lineno,
+                    ))
+
+
+# --- RPR005: retrace bait -----------------------------------------------------
+
+def _jit_rules(tree: ast.Module, scopes: _Scopes, path: str,
+               out: List[Finding]):
+    aliases = scopes.aliases
+
+    # (a) jitted functions with mutable default args
+    jit_applied: Set[str] = set()
+    jit_decorated: Set[ast.AST] = set()
+    for node in ast.walk(tree):
+        if isinstance(node, ast.Call):
+            if _canonical(node.func, aliases) == "jax.jit":
+                for a in node.args[:1]:
+                    if isinstance(a, ast.Name):
+                        jit_applied.add(a.id)
+        if isinstance(node, (ast.FunctionDef, ast.AsyncFunctionDef)):
+            for dec in node.decorator_list:
+                call = dec.func if isinstance(dec, ast.Call) else dec
+                canon = _canonical(call, aliases)
+                if canon == "jax.jit" or (
+                    canon == "functools.partial"
+                    and isinstance(dec, ast.Call)
+                    and dec.args
+                    and _canonical(dec.args[0], aliases) == "jax.jit"
+                ):
+                    jit_decorated.add(node)
+
+    for node in ast.walk(tree):
+        if not isinstance(node, (ast.FunctionDef, ast.AsyncFunctionDef)):
+            continue
+        if node not in jit_decorated and node.name not in jit_applied:
+            continue
+        defaults = list(node.args.defaults) + [
+            d for d in node.args.kw_defaults if d is not None
+        ]
+        for d in defaults:
+            if isinstance(d, (ast.Dict, ast.List, ast.Set)) or (
+                isinstance(d, ast.Call)
+                and isinstance(d.func, ast.Name)
+                and d.func.id in ("dict", "list", "set")
+            ):
+                out.append(Finding(
+                    rule="RPR005", path=path,
+                    scope=scopes.qualname.get(node, node.name),
+                    message=(
+                        "jitted function has a dict/list default argument — "
+                        "unhashable static, retrace (or TypeError) bait"
+                    ),
+                    snippet=ast.unparse(d)[:80],
+                    line=node.lineno,
+                ))
+
+    # (b) jax.jit called inside a Python loop
+    loop_stack: List[ast.AST] = []
+
+    def visit(node: ast.AST, in_loop: bool):
+        if isinstance(node, ast.Call) and in_loop:
+            if _canonical(node.func, aliases) == "jax.jit":
+                out.append(Finding(
+                    rule="RPR005", path=path,
+                    scope=scopes.qualname.get(
+                        scopes._owners.get(node), "<module>"
+                    ) if scopes._owners.get(node) is not None else "<module>",
+                    message=(
+                        "jax.jit inside a Python loop builds a fresh wrapper"
+                        " (and cache entry) per iteration — hoist it"
+                    ),
+                    snippet=ast.unparse(node)[:80],
+                    line=node.lineno,
+                ))
+        for child in ast.iter_child_nodes(node):
+            child_in_loop = in_loop or isinstance(
+                node, (ast.For, ast.AsyncFor, ast.While)
+            )
+            # a nested def resets loop context (deferred execution)
+            if isinstance(child, _FuncNode):
+                visit(child, False)
+            else:
+                visit(child, child_in_loop)
+
+    visit(tree, False)
+
+
+# --- driver -------------------------------------------------------------------
+
+def lint_source(source: str, path: str) -> List[Finding]:
+    """All RPR findings for one file's source text (noqa already applied)."""
+    try:
+        tree = ast.parse(source)
+    except SyntaxError as e:
+        return [Finding(rule="RPR000", path=path, scope="<module>",
+                        message=f"syntax error: {e}", line=e.lineno or 0)]
+    aliases = _module_aliases(tree)
+    scopes = _Scopes(tree, aliases)
+    out: List[Finding] = []
+
+    # RPR001 over every function (and lambdas) in the file
+    for fn in scopes.qualname:
+        _KeyLinter(out, path, scopes.qualname[fn], aliases).run(fn)
+
+    # RPR002: Python loops inside scan/while/fori bodies
+    for fn in scopes.loop_body:
+        body = fn.body if isinstance(fn.body, list) else []
+        for stmt in body:
+            for node in ast.walk(stmt):
+                if isinstance(node, _FuncNode):
+                    continue  # nested defs are themselves in loop_body
+                if isinstance(node, (ast.For, ast.AsyncFor, ast.While)):
+                    kind = "while" if isinstance(node, ast.While) else "for"
+                    out.append(Finding(
+                        rule="RPR002", path=path,
+                        scope=scopes.qualname.get(fn, "<module>"),
+                        message=(
+                            f"Python {kind!r} inside a scan/loop body "
+                            f"unrolls into (or breaks) the trace — use "
+                            f"lax.scan/fori_loop or a traced mask"
+                        ),
+                        snippet=ast.unparse(node).splitlines()[0][:80],
+                        line=node.lineno,
+                    ))
+
+    # RPR003/RPR004 inside traced functions
+    for fn in scopes.traced:
+        _taint_rules(fn, scopes, path, out)
+
+    # RPR005 module-wide
+    _jit_rules(tree, scopes, path, out)
+
+    return _apply_noqa(out, source)
+
+
+def _apply_noqa(findings: List[Finding], source: str) -> List[Finding]:
+    lines = source.splitlines()
+    kept = []
+    for f in findings:
+        if 1 <= f.line <= len(lines):
+            m = _NOQA_RE.search(lines[f.line - 1])
+            if m:
+                rules = m.group("rules")
+                if rules is None or f.rule in {
+                    r.strip().upper() for r in rules.split(",")
+                }:
+                    continue
+        kept.append(f)
+    return sorted(kept, key=lambda f: (f.path, f.line, f.rule))
+
+
+def iter_py_files(paths: Iterable[str]) -> List[str]:
+    files = []
+    for p in paths:
+        if os.path.isfile(p) and p.endswith(".py"):
+            files.append(p)
+        elif os.path.isdir(p):
+            for base, dirs, names in os.walk(p):
+                dirs[:] = sorted(
+                    d for d in dirs
+                    if not d.startswith(".") and d != "__pycache__"
+                )
+                files.extend(
+                    os.path.join(base, n) for n in sorted(names)
+                    if n.endswith(".py")
+                )
+    return files
+
+
+def lint_paths(paths: Iterable[str], root: Optional[str] = None
+               ) -> List[Finding]:
+    """Lint every ``.py`` under ``paths``; finding paths are relative to
+    ``root`` (default: cwd) so fingerprints are machine-independent."""
+    root = root or os.getcwd()
+    out: List[Finding] = []
+    for fp in iter_py_files(paths):
+        rel = os.path.relpath(fp, root)
+        with open(fp, encoding="utf-8") as f:
+            src = f.read()
+        out.extend(lint_source(src, rel))
+    return out

@@ -8,7 +8,6 @@ from __future__ import annotations
 import glob
 import json
 import os
-import sys
 
 from repro.analysis.roofline import HBM_PER_CHIP
 

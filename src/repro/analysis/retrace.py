@@ -1,0 +1,122 @@
+"""Layer 3: retrace guard — count XLA backend compilations at runtime.
+
+The sweep engine's contract (PR 4/5) is one compile per static point: every
+``(seed, hyperparam)`` combination that only varies *traced* values batches
+through a single executable, and adding a sweep axis must not add compiles.
+Nothing enforced that until now — a silently-static argument (a Python float
+threaded into jit, an unhashed config object) turns O(1) compiles into
+O(points) and the only symptom is a slow benchmark.
+
+:class:`count_compiles` counts backend compilations via JAX's monitoring
+events (``.../backend_compile...`` fires once per XLA compile; cached jit
+hits fire nothing; an AOT ``.lower().compile()`` fires exactly once). It
+nests: each ``with`` level sees the compiles of everything beneath it.
+
+The pytest side lives in ``tests/conftest.py`` as the ``assert_max_compiles``
+fixture; ``benchmarks/run.py`` prints the per-bench compile count with the
+timings so a retrace regression is visible in CI bench logs too.
+"""
+from __future__ import annotations
+
+import threading
+from typing import List
+
+_COMPILE_EVENT_SUBSTRING = "backend_compile"
+
+_lock = threading.Lock()
+_active: List["count_compiles"] = []
+_listener_installed = False
+
+
+def _on_event_duration(event: str, duration_secs: float, **kwargs) -> None:
+    if _COMPILE_EVENT_SUBSTRING not in event:
+        return
+    with _lock:
+        for counter in _active:
+            counter.count += 1
+
+
+def _ensure_listener() -> None:
+    """Install the process-global monitoring listener once, lazily.
+
+    Registration is permanent (jax.monitoring has no unregister that is
+    stable across versions), so the listener stays a cheap no-op whenever no
+    counter is active.
+    """
+    global _listener_installed
+    with _lock:
+        if _listener_installed:
+            return
+        import jax.monitoring
+
+        jax.monitoring.register_event_duration_secs_listener(_on_event_duration)
+        _listener_installed = True
+
+
+class count_compiles:
+    """Context manager counting XLA backend compiles in its dynamic extent.
+
+    ::
+
+        with count_compiles() as c:
+            run_sweep(spec)
+        assert c.count == n_static_points
+
+    ``count`` is live while the block runs and frozen afterwards. Instances
+    nest; each level observes all compiles under it. Thread-safe in the
+    counting path (compiles from worker threads are attributed to every
+    active counter).
+    """
+
+    def __init__(self) -> None:
+        self.count = 0
+
+    def __enter__(self) -> "count_compiles":
+        _ensure_listener()
+        with _lock:
+            _active.append(self)
+        return self
+
+    def __exit__(self, *exc) -> None:
+        with _lock:
+            _active.remove(self)
+
+
+def assert_max_compiles(max_compiles: int, fn, *args, **kwargs):
+    """Run ``fn(*args, **kwargs)``; fail if it compiles more than allowed.
+
+    Returns ``(result, n_compiles)``. Raises :class:`RetraceError` (an
+    ``AssertionError`` subclass, so pytest renders it as a failure) when the
+    budget is exceeded.
+    """
+    with count_compiles() as c:
+        result = fn(*args, **kwargs)
+    if c.count > max_compiles:
+        raise RetraceError(
+            f"{getattr(fn, '__name__', fn)!r} triggered {c.count} XLA "
+            f"compilations (budget: {max_compiles}) — a static argument is "
+            f"varying per call, or a jit cache miss crept into the hot path"
+        )
+    return result, c.count
+
+
+class RetraceError(AssertionError):
+    """Compile budget exceeded inside :func:`assert_max_compiles`."""
+
+
+def warmup_jax(*arrays) -> None:
+    """Absorb one-time tiny-op compiles (``jnp.asarray`` etc.) before
+    counting, so budgets measure the entry point under test and not the
+    interpreter's first-touch constants."""
+    import jax.numpy as jnp
+
+    for a in arrays if arrays else (0.0,):
+        jnp.asarray(a).block_until_ready()
+
+
+__all__ = [
+    "count_compiles",
+    "assert_max_compiles",
+    "RetraceError",
+    "warmup_jax",
+]

@@ -246,3 +246,50 @@ def expected_gradient_norm(metrics) -> float:
     """Table II metric: mean of ||grad F(theta_bar_k)||^2 over the run."""
     vals = np.asarray(metrics["server_grad_sq_norm"])
     return float(vals.mean())
+
+
+# --- trace-safety audit registration (repro.analysis.jaxpr_audit) -------------
+
+def _audit_hot_path() -> dispatch.HotPathEntry:
+    """Toy ``run_fmarl_core`` entry for the jaxpr audit.
+
+    A noisy-quadratic ``local_grad_fn`` over a two-leaf pytree with a decay
+    strategy: both scans, the strategy's masked update, the server average,
+    and the eval branch all land in the jaxpr with tiny trip counts. The
+    grad closure follows the per-leaf key discipline (one ``fold_in`` per
+    leaf) that RPR001 enforces in user code.
+    """
+    from repro.core.strategies import make_strategy
+
+    cfg = FmarlConfig(
+        strategy=make_strategy("decay", tau=2, m=4, backend="jnp"),
+        eta=0.05,
+        n_periods=2,
+    )
+
+    def local_grad_fn(params, key, agent_idx, step):
+        leaves = jax.tree.leaves(params)
+        noisy = [
+            leaf + 0.1 * jax.random.normal(jax.random.fold_in(key, j),
+                                           leaf.shape)
+            for j, leaf in enumerate(leaves)
+        ]
+        g = jax.tree.unflatten(jax.tree.structure(params), noisy)
+        return g, {"loss": tree_l2_norm(params) ** 2}
+
+    def eval_grad_fn(params, key):
+        return params  # grad of the quadratic at its minimum shift
+
+    def fn(seed):
+        init = {"w": jnp.zeros((8,)), "b": jnp.zeros((2,))}
+        _, metrics = run_fmarl_core(
+            cfg, init, local_grad_fn, jax.random.key(seed), eval_grad_fn
+        )
+        return metrics
+
+    return dispatch.HotPathEntry(
+        fn=fn, args=(jax.ShapeDtypeStruct((), jnp.int32),)
+    )
+
+
+dispatch.register_hot_path("core.run_fmarl_core", _audit_hot_path)

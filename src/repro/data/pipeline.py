@@ -9,7 +9,7 @@ independent (each agent's stream is seeded by its agent id).
 from __future__ import annotations
 
 import dataclasses
-from typing import Iterator, Optional
+from typing import Iterator
 
 import numpy as np
 

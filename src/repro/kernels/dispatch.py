@@ -44,7 +44,7 @@ points with no kernel changes (DESIGN.md §11).
 from __future__ import annotations
 
 import collections
-from typing import Callable, NamedTuple
+from typing import Callable, Dict, NamedTuple, Tuple
 
 import jax
 import jax.flatten_util
@@ -57,6 +57,53 @@ import jax.numpy as jnp
 BACKENDS = ("auto", "jnp", "pallas", "interpret")
 
 OPT_KINDS = ("sgd", "momentum", "adam")
+
+
+# --- hot-path entry-point registry --------------------------------------------
+#
+# The trace-safety analyzer (repro.analysis.jaxpr_audit) audits whatever is
+# registered here: each entry is a lazily-built (fn, abstract args) pair that
+# make_jaxpr can lower without running anything. Modules that own a hot path
+# (this one for the dispatch primitives, rl.fedrl / core.fmarl for the
+# drivers, sweep.runner for the per-static-point batched fn) register at
+# import time; the registry lives here because every one of those modules
+# already imports dispatch, so there is exactly one import direction.
+
+
+class HotPathEntry(NamedTuple):
+    """One auditable entry point: ``fn`` plus abstract example arguments.
+
+    ``args`` are ``jax.ShapeDtypeStruct``s (or concrete arrays) shaped like a
+    *small* but structurally faithful invocation — the audit only needs the
+    jaxpr, so tiny shapes keep lowering fast while exercising every primitive
+    the real sizes hit. ``donate_argnums`` declares buffers the entry point
+    intends to donate under jit; the auditor verifies the lowering actually
+    aliases them (rule JXA004).
+    """
+
+    fn: Callable
+    args: Tuple
+    donate_argnums: Tuple[int, ...] = ()
+
+
+_HOT_PATH_FACTORIES: "collections.OrderedDict[str, Callable[[], HotPathEntry]]" = (
+    collections.OrderedDict()
+)
+
+
+def register_hot_path(name: str, factory: Callable[[], HotPathEntry]) -> None:
+    """Register ``factory`` (called lazily by the audit) under ``name``.
+
+    Re-registration under the same name overwrites (module reloads in tests);
+    names are namespaced by convention, e.g. ``dispatch.row_mean[jnp]`` or
+    ``rl.run_fedrl_core``.
+    """
+    _HOT_PATH_FACTORIES[name] = factory
+
+
+def hot_path_factories() -> Dict[str, Callable[[], HotPathEntry]]:
+    """Snapshot of the registered entry-point factories (name -> factory)."""
+    return dict(_HOT_PATH_FACTORIES)
 
 
 def resolve_backend(backend: str = "auto") -> str:
@@ -486,3 +533,56 @@ def flat_opt_update(
             block_n=block_n, interpret=interp,
         )
     return new_p, dict(state, mu=new_mu, nu=new_nu, t=t)
+
+
+# --- hot-path registrations ---------------------------------------------------
+
+def _primitive_hot_path(prim: str, backend: str) -> Callable[[], HotPathEntry]:
+    """Audit entry for one dispatched primitive on one backend.
+
+    Shapes are tiny (the audit reads jaxprs, not timings) but keep the real
+    structure: ``(m, n)`` buffers with per-agent coefficients, so the fp32
+    accumulation contract is visible in the lowered equations.
+    """
+
+    def factory() -> HotPathEntry:
+        m, n = 4, 96
+
+        def buf(*shape):
+            return jax.ShapeDtypeStruct(shape, jnp.float32)
+
+        if prim == "decay_accum":
+            return HotPathEntry(
+                fn=lambda acc, g, d: decay_accum(acc, g, d, backend=backend),
+                args=(buf(m, n), buf(m, n), buf(m)),
+            )
+        if prim == "scale_rows":
+            return HotPathEntry(
+                fn=lambda g, w: scale_rows(g, w, backend=backend),
+                args=(buf(m, n), buf(m)),
+            )
+        if prim == "consensus_mix":
+            return HotPathEntry(
+                fn=lambda g, mix: consensus_mix(g, mix, backend=backend),
+                args=(buf(m, n), buf(m, m)),
+            )
+        if prim == "row_mean":
+            return HotPathEntry(
+                fn=lambda g: row_mean(g, backend=backend),
+                args=(buf(m, n),),
+            )
+        raise ValueError(f"unknown dispatch primitive {prim!r}")
+
+    return factory
+
+
+DISPATCH_PRIMITIVES = ("decay_accum", "scale_rows", "consensus_mix", "row_mean")
+
+# The pallas backend proper needs a TPU to lower; jnp + interpret cover both
+# code paths (reference math and kernel bodies) on any host.
+for _prim in DISPATCH_PRIMITIVES:
+    for _backend in ("jnp", "interpret"):
+        register_hot_path(
+            f"dispatch.{_prim}[{_backend}]",
+            _primitive_hot_path(_prim, _backend),
+        )

@@ -20,7 +20,6 @@ import traceback
 
 import jax
 
-from repro.analysis.hlo_stats import collective_stats
 from repro.analysis.roofline import HBM_PER_CHIP, model_flops, roofline
 from repro.configs import get_arch, get_shape, list_archs, SHAPE_REGISTRY
 from repro.launch.fedtrain import (
@@ -35,7 +34,6 @@ from repro.launch.serve import make_prefill_step, make_serve_step
 from repro.launch.specs import attach, input_specs
 from repro.models import param_logical_axes
 from repro.optim import adamw
-from repro.sharding.rules import use_rules
 
 
 def _eligible(cfg, shape) -> tuple[bool, str]:

@@ -3,7 +3,6 @@ from __future__ import annotations
 
 from typing import Optional
 
-import jax
 
 from repro.models.encdec import encdec_decode_step, encdec_forward
 from repro.models.transformer import decode_step, prefill

@@ -11,13 +11,13 @@ driving the same decode path the dry-run lowers at scale.
 from __future__ import annotations
 
 import dataclasses
-from typing import Callable, Iterable, List, Optional
+from typing import Iterable, List, Optional
 
 import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.models import decode_step, init_decode_state, prefill
+from repro.models import decode_step, init_decode_state
 from repro.models.transformer import decode_state_logical_axes
 
 

@@ -8,14 +8,11 @@ precomputed once from the encoder output.
 """
 from __future__ import annotations
 
-from typing import Optional
-
 import jax
 import jax.numpy as jnp
 
 from repro.models.attention import (
     attention_decode,
-    attn_chunked,
     cache_logical_axes,
     cross_attention,
     cross_kv,
@@ -41,7 +38,6 @@ def cross_attention_flash(p, x, k, v, cfg):
     o = flash_attention(q, kf, vf, False, None, cfg.attn_chunk, 0)
     return o.reshape(b, s, h * hd) @ p["wo"]
 from repro.models.layers import (
-    Leaf,
     apply_mlp,
     apply_norm,
     embed,
@@ -49,9 +45,7 @@ from repro.models.layers import (
     init_mlp,
     init_norm,
     is_leaf,
-    mk,
     sinusoidal_for_positions,
-    split_leaves,
 )
 from repro.sharding.rules import shard
 

@@ -16,7 +16,7 @@ repro.models.encdec / the `embeds` argument here respectively.
 from __future__ import annotations
 
 import dataclasses
-from typing import Any, Optional
+from typing import Optional
 
 import jax
 import jax.numpy as jnp
@@ -32,7 +32,6 @@ from repro.models.attention import (
     init_kv_cache,
 )
 from repro.models.layers import (
-    Leaf,
     apply_mlp,
     apply_norm,
     embed,

@@ -6,7 +6,7 @@ the dry-run memory analysis accounts for these states.
 from __future__ import annotations
 
 import dataclasses
-from typing import Callable, NamedTuple
+from typing import Callable
 
 import jax
 import jax.numpy as jnp

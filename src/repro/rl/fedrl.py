@@ -451,3 +451,32 @@ def _run_fedrl_flat(cfg: FedRLConfig, key) -> tuple[Any, dict]:
 def expected_gradient_norm(metrics) -> float:
     """Table II metric: average ||grad F||^2 over the training run."""
     return float(np.mean(metrics["server_grad_sq_norm"]))
+
+
+# --- trace-safety audit registration (repro.analysis.jaxpr_audit) -------------
+
+def _audit_hot_path() -> dispatch.HotPathEntry:
+    """Tiny-but-faithful ``run_fedrl_core`` entry for the jaxpr audit.
+
+    FIGURE_EIGHT with a 2-step decay period and 2 local updates per epoch:
+    every scan body, dispatch call, PRNG split, and eval branch of the
+    production driver appears in the jaxpr — only the trip counts shrink,
+    and trip counts do not change which equations the audit sees.
+    """
+    from repro.core import make_strategy
+    from repro.rl.env import FIGURE_EIGHT
+
+    cfg = FedRLConfig(
+        env=FIGURE_EIGHT,
+        strategy=make_strategy("decay", tau=2, m=7, backend="jnp"),
+        n_epochs=1,
+        epoch_len=4,
+        minibatch=2,
+    )
+    return dispatch.HotPathEntry(
+        fn=lambda seed: run_fedrl_core(cfg, jax.random.key(seed))[1],
+        args=(jax.ShapeDtypeStruct((), jnp.int32),),
+    )
+
+
+dispatch.register_hot_path("rl.run_fedrl_core", _audit_hot_path)

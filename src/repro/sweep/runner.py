@@ -26,7 +26,7 @@ import numpy as np
 
 from repro.sweep.overrides import apply_overrides
 from repro.sweep.results import SweepResult
-from repro.sweep.spec import SweepSpec
+from repro.sweep.spec import SweepAxis, SweepSpec
 
 
 def _default_run_fn(cfg, key):
@@ -133,7 +133,10 @@ def run_sweep(spec: SweepSpec, *, use_jit: bool = True) -> SweepResult:
         args = (jnp.asarray(seeds),) + tuple(jnp.asarray(v) for v in axis_vals)
         if use_jit:
             t0 = time.perf_counter()
-            compiled = jax.jit(batched).lower(*args).compile()
+            # One AOT compile per static point is the engine's contract
+            # (shape-changing axes MUST retrace); the retrace guard pins
+            # the count at exactly one per point.
+            compiled = jax.jit(batched).lower(*args).compile()  # noqa: RPR005
             compile_s[label] = time.perf_counter() - t0
             batched = compiled
         t0 = time.perf_counter()
@@ -149,6 +152,47 @@ def run_sweep(spec: SweepSpec, *, use_jit: bool = True) -> SweepResult:
         compile_s=compile_s,
         mode="vmapped",
     )
+
+
+def audit_batched_fn(spec: SweepSpec):
+    """The first static point's vmapped fn + abstract args, for the audit.
+
+    Exactly what :func:`run_sweep` jits per static point — ``vmap`` of the
+    single-run fn over the flattened ``(axes x seeds)`` grid — handed out
+    with ``ShapeDtypeStruct`` args so the analyzer can lower it without
+    running a sweep.
+    """
+    axis_vals, seeds = _grid_arrays(spec)
+    _, transform = next(static_points(spec))
+    batched = jax.vmap(_make_one(spec, transform(spec.base)))
+    args = (jax.ShapeDtypeStruct(seeds.shape, jnp.int32),) + tuple(
+        jax.ShapeDtypeStruct(v.shape, jnp.float32) for v in axis_vals
+    )
+    return batched, args
+
+
+def _audit_hot_path():
+    """Per-static-point sweep fn over a tiny eta x seeds grid (jaxpr audit)."""
+    from repro.core import make_strategy
+    from repro.kernels.dispatch import HotPathEntry
+    from repro.rl.env import FIGURE_EIGHT
+    from repro.rl.fedrl import FedRLConfig
+
+    base = FedRLConfig(
+        env=FIGURE_EIGHT,
+        strategy=make_strategy("decay", tau=2, m=7, backend="jnp"),
+        n_epochs=1,
+        epoch_len=4,
+        minibatch=2,
+    )
+    spec = SweepSpec(
+        name="audit",
+        base=base,
+        seeds=(0, 1),
+        vmapped=(SweepAxis(name="eta", values=(1e-3, 3e-3)),),
+    )
+    batched, args = audit_batched_fn(spec)
+    return HotPathEntry(fn=batched, args=args)
 
 
 def run_sweep_loop(spec: SweepSpec, *, use_jit: bool = True) -> SweepResult:
@@ -168,7 +212,8 @@ def run_sweep_loop(spec: SweepSpec, *, use_jit: bool = True) -> SweepResult:
         )
         if use_jit:
             t0 = time.perf_counter()
-            one = jax.jit(one).lower(*args0).compile()
+            # Same per-static-point AOT contract as run_sweep above.
+            one = jax.jit(one).lower(*args0).compile()  # noqa: RPR005
             compile_s[label] = time.perf_counter() - t0
         t0 = time.perf_counter()
         per_run = []
@@ -192,3 +237,8 @@ def run_sweep_loop(spec: SweepSpec, *, use_jit: bool = True) -> SweepResult:
         compile_s=compile_s,
         mode="loop",
     )
+
+
+from repro.kernels.dispatch import register_hot_path  # noqa: E402
+
+register_hot_path("sweep.static_point_fn", _audit_hot_path)

@@ -10,6 +10,23 @@ os.environ.setdefault("JAX_PLATFORMS", "cpu")
 sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
 
 
+@pytest.fixture
+def assert_max_compiles():
+    """Run a callable under an XLA compile budget (repro.analysis.retrace).
+
+    Usage::
+
+        def test_no_retrace(assert_max_compiles):
+            result, n = assert_max_compiles(2, run_sweep, spec)
+
+    Fails the test (RetraceError is an AssertionError) when the call
+    compiles more than the budget allows.
+    """
+    from repro.analysis.retrace import assert_max_compiles as _amc
+
+    return _amc
+
+
 @pytest.fixture(autouse=True)
 def _clear_dispatch_caches():
     """Drop the cached ravel specs between tests.

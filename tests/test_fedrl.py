@@ -1,5 +1,4 @@
 """Federated MARL driver (Algorithms 1 & 2) integration tests."""
-import dataclasses
 
 import jax
 import numpy as np

@@ -108,7 +108,6 @@ def test_consensus_step_tree_roundtrip():
 
 def test_wkv6_kernel_inside_time_mix():
     """The Pallas wkv6 plugs into the model's time_mix as wkv_impl."""
-    import dataclasses
     import repro.configs as C
     from repro.models import rwkv6 as rw
     cfg = C.get_arch("rwkv6-1.6b").reduced()

@@ -10,7 +10,6 @@ The contracts pinned here:
   fleet for decay and consensus strategies;
 * the bf16 gradient-buffer mode stays within parity tolerance of fp32.
 """
-import dataclasses
 
 import jax
 import jax.numpy as jnp

@@ -575,3 +575,30 @@ def test_spec_validation():
     with pytest.raises(ValueError, match="duplicate"):
         SweepSpec(name="x", base=None, seeds=(0,),
                   vmapped=(SweepAxis("a", (1.0,)), SweepAxis("a", (2.0,))))
+
+
+def test_sweep_compiles_exactly_once_per_static_point(assert_max_compiles):
+    """The retrace guard on the PR-4 speedup: re-running a sweep performs
+    exactly ONE XLA compile per static point (the per-point AOT
+    lower+compile) — the batched execution never retraces across the
+    (axes x seeds) grid, and traced axes add zero compiles."""
+    from repro.sweep.runner import static_points
+
+    def tau_point(tau):
+        def t(cfg, tau=tau):
+            return dataclasses.replace(
+                cfg, strategy=make_strategy("decay", tau=tau, m=7, backend="jnp")
+            )
+        return (f"tau{tau}", t)
+
+    spec = SweepSpec(
+        name="retrace",
+        base=_cfg(n_epochs=1, epoch_len=4, minibatch=2),
+        seeds=(0, 1),
+        vmapped=(SweepAxis("eta", (1e-3, 3e-3)),),
+        static=(StaticAxis("tau", (tau_point(2), tau_point(3))),),
+    )
+    run_sweep(spec)  # warm-up: absorbs one-time tiny-op compiles (asarray &c)
+    n_points = len(list(static_points(spec)))
+    _, n = assert_max_compiles(n_points, run_sweep, spec)
+    assert n == n_points
