@@ -1,0 +1,122 @@
+"""Payload-compression bench: bytes-per-utility across the comm transforms.
+
+Runs the fig5 decay configuration under the ``repro.comm`` payload
+transforms — dense fp32, top-k sparsification (k = n/16) and int8
+quantization, both with error feedback — as one ``compression`` static axis
+(one compile per transform, seeds vmapped inside each point). Tracked by the
+CI bench-regression gate:
+
+* ``total_bytes`` per transform — exact ledger arithmetic (rtol 0), so any
+  drift in the byte accounting fails the gate;
+* ``bytes_per_utility`` — total wire bytes x expected ||grad F||^2 (lower is
+  better: fewer bytes paid per unit of achieved convergence, with utility
+  read as 1/grad-norm); compression should beat dense by an order of
+  magnitude here;
+* the fused top-k select+scatter kernel wall-clock (loose max bound — CI
+  only catches a collapse, not timing noise).
+"""
+from __future__ import annotations
+
+import dataclasses
+
+from benchmarks.common import (
+    emit,
+    seed_tuple,
+    sweep_config_rows,
+    time_us,
+    write_bench_json,
+    write_csv,
+)
+from benchmarks.fmarl_bench import make_cfg
+from repro.comm import identity, qint8, topk
+from repro.comm.transforms import topk_threshold
+from repro.core import make_strategy, uniform_taus
+from repro.core.decay import exponential_decay
+from repro.kernels import dispatch
+from repro.rl.fedrl import fedrl_bytes_curve, fedrl_ledger, policy_payload_elems
+from repro.sweep import SweepSpec, compression_axis, mean_ci, run_sweep
+
+
+def _kernel_timings(n: int, k: int) -> dict:
+    """Microbench the fused top-k select + scatter-accumulate reduction."""
+    import jax
+
+    m = 7
+    x = jax.random.normal(jax.random.key(0), (m, n))
+    thresh = topk_threshold(x, k)
+    out = {"m": m, "n": n, "k": k}
+    for backend in ("jnp", "interpret"):
+        us = time_us(
+            lambda b=backend: dispatch.topk_scatter(x, thresh, backend=b),
+            iters=5 if backend == "interpret" else 20,
+        )
+        out[f"topk_scatter_{backend}_us"] = us
+        emit(f"comm/topk_scatter[{backend}]", us, f"m={m} n={n} k={k}")
+    return out
+
+
+def run(quick: bool = False, seeds=None) -> list[dict]:
+    m, tau = 7, 15
+    seeds = seed_tuple(seeds)
+    epochs = 8 if quick else None
+    n = policy_payload_elems()
+    k = max(1, n // 16)
+    transforms = (identity(), topk(k), qint8())
+
+    base = make_cfg(
+        make_strategy("decay", tau=tau, taus=uniform_taus(1, tau, m, seed=0),
+                      decay=exponential_decay(0.98)),
+        epochs=epochs,
+    )
+    spec = SweepSpec(
+        name="compression",
+        base=base,
+        seeds=seeds,
+        static=(compression_axis(transforms),),
+    )
+    res = run_sweep(spec)
+
+    out = {
+        "schema_version": 1,
+        "quick": bool(quick),
+        "seeds": list(seeds),
+        "n_seeds": len(seeds),
+        "payload_elems": n,
+        "topk_k": k,
+        "points": {},
+        "curves": {},
+    }
+    rows = []
+    for tr in transforms:
+        label = tr.label
+        cfg = dataclasses.replace(base, strategy=base.strategy.with_comm(tr))
+        metrics = res.metrics[label]
+        entry, rws = sweep_config_rows(label, metrics, len(seeds))
+        bytes_curve = fedrl_bytes_curve(cfg)
+        entry["bytes"] = bytes_curve.tolist()
+        for ep, row in enumerate(rws):
+            row["bytes"] = float(bytes_curve[ep])
+        out["curves"][label] = entry
+        rows += rws
+
+        egn_m, egn_h = mean_ci(metrics["server_grad_sq_norm"].mean(-1), 0)
+        total = fedrl_ledger(cfg).total_bytes()
+        point = {
+            "expected_grad_norm_mean": float(egn_m),
+            "expected_grad_norm_ci_hw": float(egn_h),
+            "total_bytes": float(total),
+            # lower = fewer wire bytes per unit of achieved 1/grad-norm
+            "bytes_per_utility": float(total * egn_m),
+        }
+        out["points"][label] = point
+        emit(f"comm/{label}", res.wall_s[label] / len(seeds) * 1e6,
+             f"grad_norm={egn_m:.4f}+-{egn_h:.4f} bytes={total}")
+
+    out["kernel"] = _kernel_timings(n, k)
+    write_bench_json("compression_bench", out)
+    write_csv("compression_bench", rows)
+    return rows
+
+
+if __name__ == "__main__":
+    run()

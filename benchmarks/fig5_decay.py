@@ -3,7 +3,9 @@
 Runs on ``repro.sweep``: the decay constant lambda and the seed axis vmap
 into ONE jitted computation (lambda x seeds full federated runs batched on a
 leading sweep axis), replacing the old one-config-at-a-time single-seed
-loop. Curves are seed-averaged with t-based confidence intervals.
+loop. Curves are seed-averaged with t-based confidence intervals and carry
+the ledger's cumulative wire-bytes axis (``fedrl_bytes_curve``) so the
+figure plots convergence against bytes communicated, not just epochs.
 
 The emitted ``experiments/bench/fig5_sweep.json`` also records the
 wall-clock of the equivalent Python seed-loop over the same grid (one jitted
@@ -25,13 +27,23 @@ from benchmarks.common import (
 from benchmarks.fmarl_bench import make_cfg
 from repro.core import make_strategy, uniform_taus
 from repro.core.decay import exponential_decay
+from repro.rl.fedrl import fedrl_bytes_curve
 from repro.sweep import SweepAxis, SweepSpec, mean_ci, run_sweep, run_sweep_loop
 
 
-def _curves(out, metrics, config, lam_idx=None):
-    """Seed-reduced curves + run-level summary for one plotted config."""
+def _curves(out, metrics, config, cfg, lam_idx=None):
+    """Seed-reduced curves + run-level summary for one plotted config.
+
+    ``cfg`` is the config the curves were run with: its host-side ledger
+    supplies the cumulative wire-bytes x-axis (``fedrl_bytes_curve``), so
+    the figure reads "convergence bought per byte on the wire".
+    """
     entry, rows = sweep_config_rows(config, metrics, out["n_seeds"],
                                     idx=lam_idx)
+    bytes_curve = fedrl_bytes_curve(cfg)
+    entry["bytes"] = bytes_curve.tolist()
+    for ep, row in enumerate(rows):
+        row["bytes"] = float(bytes_curve[ep])
     out["curves"][config] = entry
     # Table II style run-level metric: per-seed mean over epochs, then CI
     sel = (lambda a: a) if lam_idx is None else (lambda a: a[lam_idx])
@@ -40,6 +52,7 @@ def _curves(out, metrics, config, lam_idx=None):
         "expected_grad_norm_mean": float(egn_m),
         "expected_grad_norm_ci_hw": float(egn_h),
         "final_nas_mean": float(np.asarray(entry["nas_mean"])[-3:].mean()),
+        "total_bytes": float(bytes_curve[-1]),
     }
     return rows
 
@@ -81,14 +94,15 @@ def run(quick: bool = False, seeds=None) -> list[dict]:
         "curves": {},
         "summary": {},
     }
-    rows = _curves(out, res_base.metrics["base"], "no-decay")
+    rows = _curves(out, res_base.metrics["base"], "no-decay", base_spec.base)
     emit("fig5/no-decay", res_base.wall_s["base"] / len(seeds) * 1e6,
          f"grad_norm={out['summary']['no-decay']['expected_grad_norm_mean']:.4f}"
          f"+-{out['summary']['no-decay']['expected_grad_norm_ci_hw']:.4f}")
     per_run_us = res_decay.wall_s["base"] / decay_spec.n_runs * 1e6
     for i, lam in enumerate(lams):
         config = f"lambda={lam}"
-        rows += _curves(out, res_decay.metrics["base"], config, lam_idx=i)
+        rows += _curves(out, res_decay.metrics["base"], config,
+                        decay_spec.base, lam_idx=i)
         s = out["summary"][config]
         emit(f"fig5/{config}", per_run_us,
              f"grad_norm={s['expected_grad_norm_mean']:.4f}"

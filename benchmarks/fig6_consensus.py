@@ -22,11 +22,17 @@ from benchmarks.common import (
 from benchmarks.fmarl_bench import make_cfg, topo_dense, topo_sparse
 from repro.core import make_strategy
 from repro.core import topology as T
+from repro.rl.fedrl import fedrl_bytes_curve
 from repro.sweep import SweepAxis, SweepSpec, run_sweep
 
 
-def _config_rows(rows, curves, name, metrics, n_seeds, lam_idx=None):
+def _config_rows(rows, curves, name, metrics, n_seeds, cfg, lam_idx=None):
     entry, rws = sweep_config_rows(name, metrics, n_seeds, idx=lam_idx)
+    # cumulative wire-bytes x-axis (uplink + gossip W1 for consensus configs)
+    bytes_curve = fedrl_bytes_curve(cfg)
+    entry["bytes"] = bytes_curve.tolist()
+    for ep, row in enumerate(rws):
+        row["bytes"] = float(bytes_curve[ep])
     curves[name] = entry
     rows += rws
     gn_m = np.asarray(entry["grad_norm_mean"])
@@ -63,9 +69,9 @@ def run(quick: bool = False, seeds=None) -> list[dict]:
     res = run_sweep(spec)
 
     rows, curves = [], {}
-    for name, _ in configs:
+    for name, strat in configs:
         gm, gh = _config_rows(rows, curves, name, res.metrics[name],
-                              len(seeds))
+                              len(seeds), make_cfg(strat, epochs=epochs))
         emit(f"fig6/{name}", res.wall_s[name] / len(seeds) * 1e6,
              f"grad_norm={gm:.4f}+-{gh:.4f}")
 
@@ -87,7 +93,7 @@ def run(quick: bool = False, seeds=None) -> list[dict]:
     for i, (frac, eps) in enumerate(zip(fracs, eps_vals)):
         name = f"consensus e=1 eps={frac:.2f}/max_deg"
         gm, gh = _config_rows(rows, curves, name, eps_res.metrics["base"],
-                              len(seeds), lam_idx=i)
+                              len(seeds), eps_spec.base, lam_idx=i)
         emit(f"fig6/{name}", per_run_us, f"grad_norm={gm:.4f}+-{gh:.4f}")
 
     write_bench_json("fig6_sweep", {

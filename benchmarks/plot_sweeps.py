@@ -1,0 +1,133 @@
+"""Render grid figures from versioned sweep artifacts — no data collection.
+
+Reads the ``experiments/sweeps/<name>.v<N>.json`` artifacts that
+``SweepResult.save`` emits (seed-reduced mean + CI half-width per
+label/metric, nested over the vmapped axis grid) and renders one PNG per
+sweep: a subplot per metric, one line + CI band per (static label x vmapped
+axis point). Strictly artifact-driven — rerunning it never launches a sweep,
+so figures regenerate byte-for-byte from committed JSON.
+
+  PYTHONPATH=src python -m benchmarks.plot_sweeps [names ...]
+      [--dir experiments/sweeps] [--out experiments/figures]
+
+With no names, every sweep found in --dir is rendered at its latest version.
+"""
+from __future__ import annotations
+
+import argparse
+import itertools
+import json
+import os
+import re
+import sys
+
+import numpy as np
+
+_VERSIONED = re.compile(r"^(?P<name>.+)\.v(?P<version>\d+)\.json$")
+
+
+def latest_artifacts(sweep_dir: str) -> dict:
+    """Map sweep name -> path of its highest-version JSON artifact."""
+    latest: dict = {}
+    if not os.path.isdir(sweep_dir):
+        return latest
+    for fname in os.listdir(sweep_dir):
+        m = _VERSIONED.match(fname)
+        if not m:
+            continue
+        name, version = m.group("name"), int(m.group("version"))
+        if name not in latest or version > latest[name][0]:
+            latest[name] = (version, os.path.join(sweep_dir, fname))
+    return {name: path for name, (_, path) in latest.items()}
+
+
+def _grid_curves(payload: dict):
+    """Yield ``(metric, line_label, mean_1d, hw_1d)`` for every grid cell.
+
+    The artifact's per-metric arrays are shaped ``(*axis_lens, *per_run)``;
+    one line per (static label x vmapped coordinate), the trailing per-run
+    axis (usually per-epoch) as the curve. Scalar per-run metrics come out
+    as length-1 curves.
+    """
+    axis_names = list(payload.get("axes", {}))
+    axis_lens = tuple(len(payload["axes"][a]) for a in axis_names)
+    for label, metrics in payload.get("labels", {}).items():
+        for metric, entry in metrics.items():
+            mean = np.asarray(entry["mean"], dtype=np.float64)
+            hw = np.asarray(entry["ci_hw"], dtype=np.float64)
+            if mean.shape[: len(axis_lens)] != axis_lens:
+                # metric not resolved over the axis grid; plot as one curve
+                yield metric, label, mean.reshape(-1), hw.reshape(-1)
+                continue
+            for idx in itertools.product(*(range(s) for s in axis_lens)):
+                coords = ", ".join(
+                    f"{a}={payload['axes'][a][i]:g}"
+                    if np.isscalar(payload["axes"][a][i])
+                    else f"{a}[{i}]"
+                    for a, i in zip(axis_names, idx)
+                )
+                line = label if not coords else f"{label} ({coords})"
+                yield metric, line, mean[idx].reshape(-1), hw[idx].reshape(-1)
+
+
+def render(path: str, out_dir: str) -> str:
+    """Render one sweep artifact to ``<out_dir>/<name>.v<N>.png``."""
+    import matplotlib
+
+    matplotlib.use("Agg")
+    import matplotlib.pyplot as plt
+
+    with open(path) as f:
+        payload = json.load(f)
+
+    by_metric: dict = {}
+    for metric, line, mean, hw in _grid_curves(payload):
+        by_metric.setdefault(metric, []).append((line, mean, hw))
+
+    n = max(len(by_metric), 1)
+    fig, axes = plt.subplots(1, n, figsize=(5.5 * n, 4.0), squeeze=False)
+    for ax, (metric, lines) in zip(axes[0], sorted(by_metric.items())):
+        for line, mean, hw in lines:
+            x = np.arange(mean.size)
+            ax.plot(x, mean, label=line, linewidth=1.2)
+            if np.any(hw > 0):
+                ax.fill_between(x, mean - hw, mean + hw, alpha=0.2)
+        ax.set_title(metric)
+        ax.set_xlabel("epoch")
+        ax.grid(True, alpha=0.3)
+        ax.legend(fontsize=7)
+    name = payload.get("name", os.path.basename(path))
+    version = payload.get("version", 0)
+    fig.suptitle(f"{name} (v{version}, {payload.get('n_seeds', '?')} seeds)")
+    fig.tight_layout()
+
+    os.makedirs(out_dir, exist_ok=True)
+    out_path = os.path.join(out_dir, f"{name}.v{version}.png")
+    fig.savefig(out_path, dpi=120)
+    plt.close(fig)
+    print(f"# wrote {out_path}")
+    return out_path
+
+
+def main(argv=None) -> None:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("names", nargs="*",
+                    help="sweep names to render (default: all found)")
+    ap.add_argument("--dir", default="experiments/sweeps",
+                    help="artifact directory (SweepResult.save output)")
+    ap.add_argument("--out", default="experiments/figures",
+                    help="PNG output directory")
+    args = ap.parse_args(argv)
+
+    artifacts = latest_artifacts(args.dir)
+    if not artifacts:
+        sys.exit(f"no versioned sweep artifacts under {args.dir!r}")
+    names = args.names or sorted(artifacts)
+    for name in names:
+        if name not in artifacts:
+            sys.exit(f"no artifact for sweep {name!r}; have {sorted(artifacts)}")
+        render(artifacts[name], args.out)
+
+
+if __name__ == "__main__":
+    main()

@@ -20,7 +20,7 @@ def main() -> None:
                     help="reduced configs (CI-speed)")
     ap.add_argument("--only", default=None,
                     help="run a single bench: table2|fig4|fig5|fig6|fig789|"
-                         "bounds|roofline|kernels|dispatch|rollout_fleet")
+                         "bounds|roofline|kernels|dispatch|rollout_fleet|comm")
     ap.add_argument("--seeds", type=int, default=None,
                     help="seed count for the sweep-based figure benches "
                          "(fig4/fig5/fig6; default 4)")
@@ -28,6 +28,7 @@ def main() -> None:
 
     from benchmarks import (  # imported lazily so --only is cheap
         bounds_bench,
+        compression_bench,
         fig4_variation,
         fig5_decay,
         fig6_consensus,
@@ -45,6 +46,7 @@ def main() -> None:
         "dispatch": strategy_dispatch_bench.run,  # jnp vs kernel strategy step
         "rollout_fleet": rollout_fleet_bench.run,  # batched fleet vs single env
         "roofline": roofline_bench.run,      # §Roofline from dry-run artifacts
+        "comm": compression_bench.run,       # payload transforms: bytes/utility
         "table2": table2.run,                # paper Table II
         "fig4": fig4_variation.run,          # paper Fig. 4
         "fig5": fig5_decay.run,              # paper Fig. 5

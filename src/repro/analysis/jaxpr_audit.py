@@ -43,6 +43,7 @@ LARGE_CONST_ELEMS = 16384
 # its own primitives; the drivers and the sweep runner add theirs.
 ENTRY_MODULES = (
     "repro.kernels.dispatch",
+    "repro.comm.transforms",
     "repro.rl.fedrl",
     "repro.core.fmarl",
     "repro.sweep.runner",

@@ -1,0 +1,35 @@
+"""repro.comm — byte-accurate payload transforms for the federated links.
+
+What is *communicated* (dense fp32, top-k sparsified, int8/bf16 quantized
+payloads, each with optional error feedback) is a separate concern from how
+it is *aggregated* (periodic averaging, decay weighting, consensus gossip).
+This package owns the former: :class:`PayloadTransform` encodes a flat
+``(m, n)`` payload matrix, reports its wire size in bytes, and carries the
+per-agent error-feedback residuals that live in the drivers' flat scan carry
+next to the optimizer moments. ``AggregationStrategy`` composes one in via
+its ``comm`` field; ``CostLedger`` prices every event with
+``payload_bytes``. See DESIGN.md §13.
+"""
+from repro.comm.transforms import (
+    IDENTITY,
+    PayloadTransform,
+    dequantize_int8,
+    identity,
+    qbf16,
+    qint8,
+    quantize_int8,
+    topk,
+    topk_threshold,
+)
+
+__all__ = [
+    "IDENTITY",
+    "PayloadTransform",
+    "dequantize_int8",
+    "identity",
+    "qbf16",
+    "qint8",
+    "quantize_int8",
+    "topk",
+    "topk_threshold",
+]

@@ -3,9 +3,16 @@
 C1: one agent->server gradient upload.       C2: one local SGD update.
 W1: one neighbor->agent gossip receive.      W2: one gossip combine.
 
-The ledger counts *events*; multiply by measured per-event byte/FLOP costs
-(e.g. from the dry-run HLO) to get physical overheads — this is how the mesh
-runtime instantiates the paper's symbolic costs with real numbers.
+The ledger counts *events* and, when told the payload size, *wire bytes*:
+each communication event (C1 uplink, W1 gossip receive) carries one encoded
+payload whose size comes from the strategy's payload transform
+(``repro.comm.PayloadTransform.payload_bytes`` via
+``AggregationStrategy.comm_bytes_per_event``). With compression off that is
+exactly ``events * payload_elems * 4`` — dense fp32 — which is pinned by a
+tier-1 test. Partial trailing periods bill bytes the same way they bill
+events. Multiply the event counts by measured per-event FLOP costs (e.g.
+from the dry-run HLO) to get the remaining physical overheads — this is how
+the mesh runtime instantiates the paper's symbolic costs with real numbers.
 """
 from __future__ import annotations
 
@@ -18,20 +25,29 @@ class CostLedger:
     c2_events: int = 0
     w1_events: int = 0
     w2_events: int = 0
+    c1_bytes: int = 0
+    w1_bytes: int = 0
 
-    def add_periods(self, strategy, n_periods: int) -> None:
+    def add_periods(self, strategy, n_periods: int,
+                    payload_elems: int | None = None) -> None:
         per = strategy.comm_events_per_period()
         self.c1_events += per["c1"] * n_periods
         self.c2_events += per["c2"] * n_periods
         self.w1_events += per["w1"] * n_periods
         self.w2_events += per["w2"] * n_periods
+        if payload_elems is not None:
+            per_b = strategy.comm_bytes_per_event(payload_elems)
+            self.c1_bytes += per["c1"] * n_periods * per_b["c1"]
+            self.w1_bytes += per["w1"] * n_periods * per_b["w1"]
 
-    def add_partial_period(self, strategy, n_offsets: int) -> None:
+    def add_partial_period(self, strategy, n_offsets: int,
+                           payload_elems: int | None = None) -> None:
         """Bill a trailing partial period of ``n_offsets`` local steps.
 
         Runs whose total update count is not a multiple of tau still pay for
         the local updates (and gossip) of the unfinished period plus the
-        final aggregation read; a no-op when ``n_offsets`` is 0.
+        final aggregation read — in events and, when ``payload_elems`` is
+        given, in bytes; a no-op when ``n_offsets`` is 0.
         """
         if n_offsets == 0:
             return
@@ -40,6 +56,14 @@ class CostLedger:
         self.c2_events += per["c2"]
         self.w1_events += per["w1"]
         self.w2_events += per["w2"]
+        if payload_elems is not None:
+            per_b = strategy.comm_bytes_per_event(payload_elems)
+            self.c1_bytes += per["c1"] * per_b["c1"]
+            self.w1_bytes += per["w1"] * per_b["w1"]
+
+    def total_bytes(self) -> int:
+        """Total wire bytes across the federated links (uplink + gossip)."""
+        return self.c1_bytes + self.w1_bytes
 
     def psi0(self, c1: float, c2: float, w1: float = 0.0, w2: float = 0.0) -> float:
         """Total resource cost; equals eq. (7) (or (27) with gossip events)."""
@@ -51,10 +75,13 @@ class CostLedger:
         )
 
     def table_row(self) -> dict:
-        """Table II columns (symbolic units)."""
+        """Table II columns (symbolic units) plus the wire-byte totals."""
         return {
             "communication_overheads_C1": self.c1_events,
             "computation_overheads_C2": self.c2_events,
             "inter_communication_W1": self.w1_events,
             "inter_computation_W2": self.w2_events,
+            "uplink_bytes_C1": self.c1_bytes,
+            "gossip_bytes_W1": self.w1_bytes,
+            "total_bytes": self.total_bytes(),
         }

@@ -79,14 +79,16 @@ def _broadcast(server_params, m: int):
 
 
 def _use_flat_carry(cfg) -> bool:
-    """Flat (m, n) carry on kernel backends and whenever an optimizer or a
-    non-default buffer dtype is set (the fused optimizer updates and the bf16
-    storage mode only exist on flat buffers — the jnp backend then runs the
-    fp32 flat reference ops)."""
+    """Flat (m, n) carry on kernel backends and whenever an optimizer, a
+    non-default buffer dtype, or a compressed payload transform is set (the
+    fused optimizer updates, the bf16 storage mode, and the comm layer's
+    error-feedback state only exist on flat buffers — the jnp backend then
+    runs the fp32 flat reference ops)."""
     return (
         dispatch.is_kernel_backend(cfg.strategy.backend)
         or cfg.optimizer is not None
         or cfg.buffer_dtype is not None
+        or cfg.strategy.comm.enabled
     )
 
 
@@ -105,8 +107,11 @@ def run_fmarl(
     state, metrics = run_fmarl_core(
         cfg, init_params, local_grad_fn, key, eval_grad_fn
     )
+    payload_elems = int(
+        sum(np.prod(np.shape(l)) for l in jax.tree.leaves(init_params))
+    )
     ledger = CostLedger()
-    ledger.add_periods(cfg.strategy, cfg.n_periods)
+    ledger.add_periods(cfg.strategy, cfg.n_periods, payload_elems)
     return state, metrics, ledger
 
 
@@ -185,6 +190,7 @@ def _run_fmarl_flat(cfg, init_params, local_grad_fn, key, eval_grad_fn):
     if dtype is not None:
         flat = flat.astype(dtype)
     opt_state = opt.init(flat) if opt is not None else {}
+    comm_state = strat.init_comm_state(flat)
     agent_ids = jnp.arange(m)
 
     def view_one(row):
@@ -192,7 +198,7 @@ def _run_fmarl_flat(cfg, init_params, local_grad_fn, key, eval_grad_fn):
         return spec.unravel_one(dispatch.compute_view(row, dtype))
 
     def local_step(carry, offset):
-        flat, opt_state, step, key = carry
+        flat, opt_state, comm_state, step, key = carry
         key, sub = jax.random.split(key)
         keys = jax.random.split(sub, m)
 
@@ -203,20 +209,17 @@ def _run_fmarl_flat(cfg, init_params, local_grad_fn, key, eval_grad_fn):
         g_flat, aux = jax.vmap(one)(flat, keys, agent_ids)
         if dtype is not None:
             g_flat = g_flat.astype(dtype)
-        if opt is None:
-            flat = strat.flat_update(flat, g_flat, offset, cfg.eta)
-        else:
-            flat, opt_state = strat.flat_opt_step(
-                flat, g_flat, offset, cfg.eta, opt, opt_state
-            )
-        return (flat, opt_state, step + 1, key), aux
+        flat, opt_state, comm_state = strat.flat_local_step(
+            flat, g_flat, offset, cfg.eta, opt, opt_state, comm_state
+        )
+        return (flat, opt_state, comm_state, step + 1, key), aux
 
     def period(carry, _):
-        (flat, opt_state, step, key), aux = jax.lax.scan(
+        (flat, opt_state, comm_state, step, key), aux = jax.lax.scan(
             local_step, carry, jnp.arange(tau)
         )
-        row = strat.flat_server_average(flat)
-        flat = jnp.broadcast_to(row[None, :], flat.shape)
+        flat, comm_state = strat.flat_sync(flat, comm_state)
+        row = flat[0]  # flat_sync re-broadcast: row 0 is the server row
         if opt is not None:
             opt_state = server_average_state(strat, opt_state)
 
@@ -225,10 +228,10 @@ def _run_fmarl_flat(cfg, init_params, local_grad_fn, key, eval_grad_fn):
             key, sub = jax.random.split(key)
             g = eval_grad_fn(view_one(row), sub)
             metrics["server_grad_sq_norm"] = tree_l2_norm(g) ** 2
-        return (flat, opt_state, step, key), metrics
+        return (flat, opt_state, comm_state, step, key), metrics
 
-    carry = (flat, opt_state, jnp.zeros((), jnp.int32), key)
-    (flat, opt_state, step, key), metrics = jax.lax.scan(
+    carry = (flat, opt_state, comm_state, jnp.zeros((), jnp.int32), key)
+    (flat, opt_state, comm_state, step, key), metrics = jax.lax.scan(
         period, carry, None, length=cfg.n_periods
     )
 

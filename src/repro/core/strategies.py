@@ -38,6 +38,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro.comm.transforms import IDENTITY, PayloadTransform
 from repro.core.decay import DecayFn, no_decay
 from repro.core.topology import Topology, mixing_matrix
 from repro.core.variation import masked_update_counts, validate_a2
@@ -53,6 +54,12 @@ class AggregationStrategy:
       taus: per-agent tau_i (A2); shape (m,).
       mask: (m, tau) float indicator I(tau_i > j) for period offset j.
       backend: execution backend ('auto' | 'jnp' | 'pallas' | 'interpret').
+      comm: payload transform applied to what the strategy communicates
+        (``repro.comm``): uplink deltas at the period sync and, on the
+        consensus path, the gossip payloads. The identity default keeps the
+        exact pre-comm-layer behaviour; compressed transforms route the
+        flat-carry drivers through :meth:`flat_sync` / :meth:`flat_local_step`
+        with per-agent error-feedback state in the scan carry.
     """
 
     name: str
@@ -60,6 +67,7 @@ class AggregationStrategy:
     taus: np.ndarray
     mask: np.ndarray
     backend: str = "auto"
+    comm: PayloadTransform = IDENTITY
 
     def __post_init__(self):
         if self.backend not in dispatch.BACKENDS:
@@ -90,6 +98,22 @@ class AggregationStrategy:
         object.__setattr__(new, "mask", mask)
         if taus is not None:
             object.__setattr__(new, "taus", np.asarray(taus, int))
+        return new
+
+    def with_comm(self, comm: PayloadTransform) -> "AggregationStrategy":
+        """Copy with a replacement payload transform (static swap).
+
+        ``comm`` changes wire sizes and the comm-state structure, never
+        array shapes of the training math itself, but the transform *kind*
+        and ``k`` alter the trace — so sweeping compression is a static axis
+        (``repro.sweep.overrides.compression_axis``), one compile per point.
+        """
+        if not isinstance(comm, PayloadTransform):
+            raise TypeError(
+                f"with_comm expects a PayloadTransform, got {type(comm).__name__}"
+            )
+        new = copy.copy(self)
+        object.__setattr__(new, "comm", comm)
         return new
 
     @property
@@ -184,7 +208,79 @@ class AggregationStrategy:
         avg = jax.tree.map(lambda leaf: jnp.mean(leaf, axis=0), params_m)
         return avg
 
+    # --- comm layer (payload transforms + error feedback) ----------------------
+    def init_comm_state(self, flat) -> dict:
+        """Comm-layer carry for a flat ``(m, n)`` run: ``{}`` when dense.
+
+        With a compressed ``comm``: ``ref`` is the fp32 server reference the
+        uplink deltas are taken against (all replicas start broadcast, so row
+        0 is the server row), plus the ``(m, n)`` fp32 ``err_up`` uplink
+        error-feedback accumulator when enabled. Lives in the drivers' scan
+        carry next to the optimizer moments.
+        """
+        if not self.comm.enabled:
+            return {}
+        state = {"ref": flat[0].astype(jnp.float32)}
+        if self.comm.error_feedback:
+            state["err_up"] = jnp.zeros(flat.shape, jnp.float32)
+        return state
+
+    def flat_local_step(self, flat, g, offset, eta, opt, opt_state, comm_state,
+                        *, backend: Optional[str] = None):
+        """One local step on the flat carry, comm state threaded through.
+
+        The single seam both flat drivers call per iteration: plain SGD
+        (``opt is None``) or the fused optimizer step. The base strategies
+        communicate nothing within a period, so ``comm_state`` passes
+        through untouched; :class:`ConsensusStrategy` overrides this to
+        compress the gossip payload. Returns
+        ``(flat, opt_state, comm_state)``.
+        """
+        b = backend if backend is not None else self.backend
+        if opt is None:
+            flat = self.flat_update(flat, g, offset, eta, backend=b)
+        else:
+            flat, opt_state = self.flat_opt_step(
+                flat, g, offset, eta, opt, opt_state, backend=b
+            )
+        return flat, opt_state, comm_state
+
+    def flat_sync(self, flat, comm_state, *, backend: Optional[str] = None):
+        """Period-boundary server sync on the flat carry, compression-aware.
+
+        Dense (identity comm): eq. (11) exactly as before — ``row_mean`` and
+        broadcast, bit-identical to the legacy path. Compressed: each agent
+        uplinks ``encode(flat_i - ref + err_i)``; the server accumulates the
+        reconstructions in fp32 (``PayloadTransform.reduce_mean`` — the
+        fused top-k scatter kernel on kernel backends), advances the shared
+        reference by the mean payload, and the unsent remainder becomes the
+        next error-feedback residual. Returns ``(flat, comm_state)`` with
+        ``flat`` already re-broadcast (``flat[0]`` is the server row).
+        """
+        b = backend if backend is not None else self.backend
+        if not self.comm.enabled:
+            row = self.flat_server_average(flat, backend=b)
+            return jnp.broadcast_to(row[None, :], flat.shape), comm_state
+        ref = comm_state["ref"]
+        delta = flat.astype(jnp.float32) - ref[None, :]
+        if self.comm.error_feedback:
+            delta = delta + comm_state["err_up"]
+        mean_sent, residual = self.comm.reduce_mean(delta, backend=b)
+        row = ref + mean_sent
+        new_state = dict(comm_state, ref=row)
+        if self.comm.error_feedback:
+            new_state["err_up"] = residual
+        flat = jnp.broadcast_to(row[None, :].astype(flat.dtype), flat.shape)
+        return flat, new_state
+
     # --- accounting ------------------------------------------------------------
+    def comm_bytes_per_event(self, payload_elems: int) -> dict:
+        """Wire bytes of one C1 uplink / one W1 gossip receive of
+        ``payload_elems`` parameters under this strategy's payload transform
+        (``repro.comm.PayloadTransform.payload_bytes``)."""
+        per = self.comm.payload_bytes(payload_elems)
+        return {"c1": per, "w1": per}
+
     def comm_events_per_period(self) -> dict:
         """Event counts in units of C1/C2/W1/W2 for one period (per eq. 7/27)."""
         return {
@@ -409,6 +505,54 @@ class ConsensusStrategy(AggregationStrategy):
         mixed = self.flat_transform(g, offset, backend=b)
         return opt.update(params, mixed, 1.0, opt_state, eta, backend=b)
 
+    def init_comm_state(self, flat) -> dict:
+        """Adds the ``(m, n)`` fp32 gossip error-feedback accumulator.
+
+        The consensus path communicates every local step (the gossip mix),
+        so with a compressed ``comm`` each agent also carries the residual of
+        its last gossip broadcast next to the uplink one.
+        """
+        state = AggregationStrategy.init_comm_state(self, flat)
+        if self.comm.enabled and self.comm.error_feedback:
+            state["err_gossip"] = jnp.zeros(flat.shape, jnp.float32)
+        return state
+
+    def flat_local_step(self, flat, g, offset, eta, opt, opt_state, comm_state,
+                        *, backend: Optional[str] = None):
+        """Gossip step with the broadcast payload compressed.
+
+        Each agent masks/weights its gradient, folds in its gossip
+        error-feedback residual, *encodes once*, and broadcasts the encoded
+        payload; the neighbours mix the reconstructions through the fused
+        ``P^E`` (compress-then-gossip — one encode per agent per step
+        regardless of E, matching the fused-mixing semantics of the dense
+        path). The unsent remainder becomes the next residual. Identity comm
+        delegates to the base fused step unchanged.
+        """
+        if not self.comm.enabled:
+            return AggregationStrategy.flat_local_step(
+                self, flat, g, offset, eta, opt, opt_state, comm_state,
+                backend=backend,
+            )
+        b = backend if backend is not None else self.backend
+        g32 = dispatch.scale_rows(
+            g.astype(jnp.float32), self.weight(offset), backend=b
+        )
+        x = g32
+        if self.comm.error_feedback:
+            x = x + comm_state["err_gossip"]
+        payload, residual = self.comm.encode(x, backend=b)
+        mixed = dispatch.consensus_mix(payload, jnp.asarray(self.p_e), backend=b)
+        if self.comm.error_feedback:
+            comm_state = dict(comm_state, err_gossip=residual)
+        mixed = mixed.astype(flat.dtype)
+        if opt is None:
+            flat = dispatch.decay_accum(flat, mixed, -eta, backend=b)
+        else:
+            flat, opt_state = opt.update(flat, mixed, 1.0, opt_state, eta,
+                                         backend=b)
+        return flat, opt_state, comm_state
+
     def comm_events_partial_period(self, n_offsets: int) -> dict:
         base = AggregationStrategy.comm_events_partial_period(self, n_offsets)
         gossip = int(self.topo.degrees.sum()) * self.rounds * int(n_offsets)
@@ -429,19 +573,20 @@ class ConsensusStrategy(AggregationStrategy):
 
 def make_strategy(kind: str, **kw) -> AggregationStrategy:
     backend = kw.get("backend", "auto")
+    comm = kw.get("comm")
     if kind == "sync":
-        return SyncStrategy(m=kw["m"], backend=backend)
-    if kind == "periodic":
-        return PeriodicStrategy(
+        strat = SyncStrategy(m=kw["m"], backend=backend)
+    elif kind == "periodic":
+        strat = PeriodicStrategy(
             tau=kw["tau"], taus=kw.get("taus"), m=kw.get("m"), backend=backend
         )
-    if kind == "decay":
-        return DecayStrategy(
+    elif kind == "decay":
+        strat = DecayStrategy(
             tau=kw["tau"], taus=kw.get("taus"), m=kw.get("m"),
             decay=kw.get("decay"), backend=backend,
         )
-    if kind == "consensus":
-        return ConsensusStrategy(
+    elif kind == "consensus":
+        strat = ConsensusStrategy(
             tau=kw["tau"],
             topo=kw["topo"],
             eps=kw["eps"],
@@ -451,4 +596,8 @@ def make_strategy(kind: str, **kw) -> AggregationStrategy:
             fused=kw.get("fused", True),
             backend=backend,
         )
-    raise ValueError(f"unknown strategy kind: {kind}")
+    else:
+        raise ValueError(f"unknown strategy kind: {kind}")
+    if comm is not None:
+        strat = strat.with_comm(comm)
+    return strat

@@ -393,6 +393,56 @@ def row_mean(g, *, backend: str = "auto", block_n: int = 4096):
     return row_mean_pallas(g, block_n=block_n, interpret=(b == "interpret"))
 
 
+def topk_scatter(x, thresh, *, backend: str = "auto", block_n: int = 4096):
+    """Fused top-k select + scatter-accumulate: the compressed server reduction.
+
+    ``x``: ``(m, n)`` payload rows (or ``(S, m, n)`` with a leading sweep
+    axis); ``thresh``: ``(m,)`` (or ``(S, m)``) per-agent magnitude
+    thresholds, normally ``repro.comm.topk_threshold(x, k)``. Selection is
+    threshold form — keep ``|x| >= thresh`` with ties included — so the jnp
+    reference and the Pallas kernel pick identical entries. Returns
+    ``(sent_sum, residual)``: the ``(n,)`` sum of the selected entries over
+    the agent axis (fp32 accumulation on every backend, cast back to
+    ``x.dtype``) and the ``(m, n)`` unselected remainder (the error-feedback
+    residual; ``sent + residual == x`` exactly, elementwise).
+
+    The jnp path states the scatter-accumulate explicitly: the selected
+    (value, column) pairs of every agent scatter-add into the server row via
+    ``segment_sum`` over the flattened column ids.
+    """
+    b = resolve_backend(backend)
+    if x.ndim == 3:
+        thresh = jnp.asarray(thresh, jnp.float32)
+        if thresh.shape != x.shape[:2]:
+            raise ValueError(
+                f"topk_scatter: thresh must be {x.shape[:2]} on the sweep "
+                f"path, got {thresh.shape}"
+            )
+        return jax.vmap(
+            lambda xi, ti: topk_scatter(xi, ti, backend=b, block_n=block_n)
+        )(x, thresh)
+    if x.ndim != 2:
+        raise ValueError(f"topk_scatter: x must be (m, n), got {x.shape}")
+    m, n = x.shape
+    thresh = jnp.asarray(thresh, jnp.float32)
+    if thresh.shape != (m,):
+        raise ValueError(
+            f"topk_scatter: thresh must be ({m},) for x {x.shape}, "
+            f"got {thresh.shape}"
+        )
+    if b == "jnp":
+        x32 = x.astype(jnp.float32)
+        sent = jnp.where(jnp.abs(x32) >= thresh[:, None], x32, 0.0)
+        cols = jnp.broadcast_to(jnp.arange(n)[None, :], (m, n))
+        ssum = jax.ops.segment_sum(sent.ravel(), cols.ravel(), num_segments=n)
+        return ssum.astype(x.dtype), (x32 - sent).astype(x.dtype)
+    from repro.kernels.topk_scatter import topk_scatter_pallas
+
+    return topk_scatter_pallas(
+        x, thresh, block_n=block_n, interpret=(b == "interpret")
+    )
+
+
 def _check_opt_state(state, required, params, kind):
     for name in required:
         buf = state.get(name)
@@ -571,12 +621,19 @@ def _primitive_hot_path(prim: str, backend: str) -> Callable[[], HotPathEntry]:
                 fn=lambda g: row_mean(g, backend=backend),
                 args=(buf(m, n),),
             )
+        if prim == "topk_scatter":
+            return HotPathEntry(
+                fn=lambda x, t: topk_scatter(x, t, backend=backend),
+                args=(buf(m, n), buf(m)),
+            )
         raise ValueError(f"unknown dispatch primitive {prim!r}")
 
     return factory
 
 
-DISPATCH_PRIMITIVES = ("decay_accum", "scale_rows", "consensus_mix", "row_mean")
+DISPATCH_PRIMITIVES = (
+    "decay_accum", "scale_rows", "consensus_mix", "row_mean", "topk_scatter",
+)
 
 # The pallas backend proper needs a TPU to lower; jnp + interpret cover both
 # code paths (reference math and kernel bodies) on any host.

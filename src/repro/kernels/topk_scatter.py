@@ -1,0 +1,86 @@
+"""Pallas TPU kernel: fused top-k select + scatter-accumulate server reduction.
+
+The compressed uplink sync receives each agent's top-k-sparsified payload row
+and accumulates it into the server sum. Done naively that is three passes
+(materialise the dense ``sent`` matrix, reduce it, subtract for the error
+residual); this kernel fuses them into one bandwidth-bound sweep over the
+``(m, n)`` payload: per n-block it selects by the precomputed per-agent
+magnitude threshold (``|x| >= tau_i`` — ties included, matching the jnp
+``segment_sum`` reference in ``repro.kernels.dispatch.topk_scatter``),
+accumulates the selected values over the agent axis in fp32, and writes the
+per-agent residual ``x - sent`` for the error-feedback carry.
+
+The thresholds ride as an ``(m, 1)`` fp32 column in VMEM (broadcast against
+every block); outputs are the ``(n,)`` selected-sum row and the ``(m, n)``
+residual matrix.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _topk_scatter_kernel(t_ref, x_ref, osum_ref, ores_ref):
+    # fp32 select + accumulate regardless of the buffer dtype; only the
+    # outputs are cast back, matching the jnp reference.
+    t = t_ref[...]                                   # (m, 1) fp32
+    x = x_ref[...].astype(jnp.float32)               # (m, block_n)
+    sent = jnp.where(jnp.abs(x) >= t, x, 0.0)        # threshold top-k select
+    osum_ref[...] = jnp.sum(sent, axis=0).astype(osum_ref.dtype)
+    ores_ref[...] = (x - sent).astype(ores_ref.dtype)
+
+
+@functools.partial(jax.jit, static_argnames=("block_n", "interpret"))
+def topk_scatter_pallas(x, thresh, *, block_n: int = 4096,
+                        interpret: bool = False):
+    """x: (m, n) payloads; thresh: (m,) per-agent magnitude thresholds.
+
+    Returns ``(sent_sum, residual)``: the ``(n,)`` fp32-accumulated sum of
+    the selected entries over the agent axis (cast to ``x.dtype``) and the
+    ``(m, n)`` unselected remainder.
+    """
+    if x.ndim != 2:
+        raise ValueError(f"topk_scatter_pallas: x must be (m, n), got {x.shape}")
+    m, n = x.shape
+    if thresh.shape != (m,):
+        raise ValueError(
+            f"topk_scatter_pallas: thresh must be ({m},) for x {x.shape}, "
+            f"got {thresh.shape}"
+        )
+    if block_n < 1:
+        raise ValueError(
+            f"topk_scatter_pallas: block_n must be >= 1, got {block_n}"
+        )
+    if n == 0:
+        return jnp.zeros((0,), x.dtype), x
+    block_n = min(block_n, n)
+    pad = (-n) % block_n
+    if pad:
+        # zero padding is select-neutral: |0| >= tau keeps a 0, adding 0 to
+        # the sum and leaving a 0 residual, even for all-zero rows (tau = 0).
+        x = jnp.pad(x, ((0, 0), (0, pad)))
+    np_ = x.shape[1]
+    t_col = jnp.asarray(thresh, jnp.float32).reshape(m, 1)
+    ssum, residual = pl.pallas_call(
+        _topk_scatter_kernel,
+        grid=(np_ // block_n,),
+        in_specs=[
+            pl.BlockSpec((m, 1), lambda i: (0, 0)),
+            pl.BlockSpec((m, block_n), lambda i: (0, i)),
+        ],
+        out_specs=[
+            pl.BlockSpec((block_n,), lambda i: (i,)),
+            pl.BlockSpec((m, block_n), lambda i: (0, i)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((np_,), x.dtype),
+            jax.ShapeDtypeStruct((m, np_), x.dtype),
+        ],
+        interpret=interpret,
+    )(t_col, x)
+    if pad:
+        return ssum[:n], residual[:, :n]
+    return ssum, residual

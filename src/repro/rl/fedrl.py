@@ -42,6 +42,7 @@ the env params to per-run pytrees; the period length ``tau`` stays static
 from __future__ import annotations
 
 import dataclasses
+import functools
 from typing import Any, Optional
 
 import jax
@@ -266,13 +267,25 @@ def _eval_grad_norm(cfg: FedRLConfig, server_params, env_params=None):
     return tree_l2_norm(g_mean) ** 2
 
 
-def _finish_ledger(strat, n_updates: int) -> CostLedger:
+@functools.lru_cache(maxsize=1)
+def policy_payload_elems() -> int:
+    """Parameter count of one policy — the per-event payload size in elements.
+
+    Shape-only (``jax.eval_shape``), so no device work; cached because every
+    ledger call needs it and the policy architecture is fixed by ``OBS_DIM``.
+    """
+    shapes = jax.eval_shape(lambda: init_policy(jax.random.key(0), OBS_DIM))
+    return int(sum(int(np.prod(l.shape)) for l in jax.tree.leaves(shapes)))
+
+
+def _finish_ledger(strat, n_updates: int,
+                   payload_elems: Optional[int] = None) -> CostLedger:
     """Bill full periods plus any trailing partial one (the old
     ``n_updates // tau`` silently dropped the remainder's local updates)."""
     full, rem = divmod(n_updates, strat.tau)
     ledger = CostLedger()
-    ledger.add_periods(strat, full)
-    ledger.add_partial_period(strat, rem)
+    ledger.add_periods(strat, full, payload_elems)
+    ledger.add_partial_period(strat, rem, payload_elems)
     return ledger
 
 
@@ -280,7 +293,27 @@ def fedrl_ledger(cfg: FedRLConfig) -> CostLedger:
     """The run's communication-cost ledger (host-side, config-only — the
     same for every seed, so sweep callers compute it once per config)."""
     return _finish_ledger(
-        cfg.strategy, cfg.n_epochs * (cfg.epoch_len // cfg.minibatch)
+        cfg.strategy, cfg.n_epochs * (cfg.epoch_len // cfg.minibatch),
+        policy_payload_elems(),
+    )
+
+
+def fedrl_bytes_curve(cfg: FedRLConfig) -> np.ndarray:
+    """Cumulative wire bytes after each epoch — the figures' bytes x-axis.
+
+    Host-side and config-only like :func:`fedrl_ledger`: entry ``e`` is
+    ``total_bytes()`` of a ledger billed for the first ``e + 1`` epochs
+    (partial trailing periods included), so plotting a per-epoch metric
+    against this axis reads "utility bought per byte on the wire".
+    """
+    upd = cfg.epoch_len // cfg.minibatch
+    n = policy_payload_elems()
+    return np.asarray(
+        [
+            _finish_ledger(cfg.strategy, (e + 1) * upd, n).total_bytes()
+            for e in range(cfg.n_epochs)
+        ],
+        np.float64,
     )
 
 
@@ -380,13 +413,14 @@ def _run_fedrl_flat(cfg: FedRLConfig, key) -> tuple[Any, dict]:
     if dtype is not None:
         flat = flat.astype(dtype)
     opt_state = opt.init(flat) if opt is not None else {}
+    comm_state = strat.init_comm_state(flat)
 
     def tree_view(f):
         """The closures' fp32 per-agent tree view of the flat carry."""
         return spec.unravel(dispatch.compute_view(f, dtype))
 
     def update(carry, _):
-        flat, opt_state, env_state, k, key = carry
+        flat, opt_state, comm_state, env_state, k, key = carry
         flat = shard_agents(flat)
         key, rk = jax.random.split(key)
         params_m = tree_view(flat)
@@ -397,27 +431,21 @@ def _run_fedrl_flat(cfg: FedRLConfig, key) -> tuple[Any, dict]:
         if dtype is not None:
             g_flat = g_flat.astype(dtype)
         offset = jnp.mod(k, tau)
-        if opt is None:
-            flat = strat.flat_update(flat, g_flat, offset, cfg.eta)
-        else:
-            flat, opt_state = strat.flat_opt_step(
-                flat, g_flat, offset, cfg.eta, opt, opt_state
-            )
+        flat, opt_state, comm_state = strat.flat_local_step(
+            flat, g_flat, offset, cfg.eta, opt, opt_state, comm_state
+        )
         k = k + 1
 
         def do_sync(args):
-            f, s = args
-            row = strat.flat_server_average(f)
-            return (
-                jnp.broadcast_to(row[None, :], f.shape),
-                server_average_state(strat, s),
-            )
+            f, s, cs = args
+            f, cs = strat.flat_sync(f, cs)
+            return f, server_average_state(strat, s), cs
 
         synced = jnp.equal(jnp.mod(k, tau), 0)
-        flat, opt_state = jax.lax.cond(
-            synced, do_sync, lambda args: args, (flat, opt_state)
+        flat, opt_state, comm_state = jax.lax.cond(
+            synced, do_sync, lambda args: args, (flat, opt_state, comm_state)
         )
-        return (flat, opt_state, env_state, k, key), {
+        return (flat, opt_state, comm_state, env_state, k, key), {
             "nas": nas, "loss": losses.mean(), "synced": synced,
         }
 
@@ -426,11 +454,11 @@ def _run_fedrl_flat(cfg: FedRLConfig, key) -> tuple[Any, dict]:
         return spec.unravel_one(dispatch.compute_view(row, dtype))
 
     def epoch(carry, _):
-        flat, opt_state, k, key = carry
+        flat, opt_state, comm_state, k, key = carry
         key, ek = jax.random.split(key)
         env_state = _reset(cfg, env_params, ek)
-        (flat, opt_state, _, k, key), ms = jax.lax.scan(
-            update, (flat, opt_state, env_state, k, key), None,
+        (flat, opt_state, comm_state, _, k, key), ms = jax.lax.scan(
+            update, (flat, opt_state, comm_state, env_state, k, key), None,
             length=updates_per_epoch,
         )
         grad_sq = _eval_grad_norm(cfg, server_view(flat), env_params)
@@ -439,10 +467,10 @@ def _run_fedrl_flat(cfg: FedRLConfig, key) -> tuple[Any, dict]:
             "loss": ms["loss"].mean(),
             "server_grad_sq_norm": grad_sq,
         }
-        return (flat, opt_state, k, key), out
+        return (flat, opt_state, comm_state, k, key), out
 
-    carry = (flat, opt_state, jnp.zeros((), jnp.int32), key)
-    (flat, opt_state, k, key), metrics = jax.lax.scan(
+    carry = (flat, opt_state, comm_state, jnp.zeros((), jnp.int32), key)
+    (flat, opt_state, comm_state, k, key), metrics = jax.lax.scan(
         epoch, carry, None, length=cfg.n_epochs
     )
     return server_view(flat), metrics

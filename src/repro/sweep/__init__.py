@@ -23,6 +23,7 @@ See DESIGN.md §10–§11 and ``repro.sweep.spec`` for the axis taxonomy.
 from repro.sweep.overrides import (
     OVERRIDES,
     apply_overrides,
+    compression_axis,
     override_eps,
     override_eta,
     override_hetero_scale,
@@ -41,6 +42,7 @@ __all__ = [
     "SweepSpec",
     "SweepResult",
     "apply_overrides",
+    "compression_axis",
     "mean_ci",
     "override_eps",
     "override_eta",

@@ -29,12 +29,19 @@ Built-in axes:
   static — it fixes the mask shape and the inner scan length — so the
   variation axis is value-only and vmaps.
 * ``hetero_scale`` — fleet-heterogeneity magnitude: rebuilds the per-agent
-  ``EnvParams`` with perturbation directions fixed by the config's
-  ``eval_seed`` and the traced scale multiplying them (the asynchronous-MDP
-  knob as a value-only axis). The base config should already be a fleet
-  config (``num_envs >= 1``) so the trace structure matches the override.
+  ``EnvParams`` with perturbation directions fixed by a PRNG key and the
+  traced scale multiplying them (the asynchronous-MDP knob as a value-only
+  axis). Points are scalars (one shared direction draw) or
+  ``(scale, dir_seed)`` 2-vectors (per-cell direction draws). The base
+  config should already be a fleet config (``num_envs >= 1``) so the trace
+  structure matches the override.
 
 ``register_override`` adds custom axes.
+
+Payload compression is the counter-example that must NOT be a vmapped axis:
+a ``PayloadTransform`` changes the trace itself (the top-k kernel, the comm
+state structure), so :func:`compression_axis` builds it as a *static* axis —
+one compile per transform, looped in Python by the runner.
 """
 from __future__ import annotations
 
@@ -153,18 +160,40 @@ def override_taus(cfg, taus):
     return dataclasses.replace(cfg, strategy=strat.with_mask(mask, static_taus))
 
 
-def override_hetero_scale(cfg, scale):
+def override_hetero_scale(cfg, point):
     """Fleet-heterogeneity axis: per-agent EnvParams magnitudes, traced.
 
     Rebuilds ``cfg.env_params`` via :func:`repro.rl.env.perturb_params` with
-    perturbation *directions* drawn once from ``jax.random.key(cfg.eval_seed)``
-    (fixed across the axis, decorrelated from the training streams by a
-    fold_in) and the traced ``scale`` multiplying them — so the sweep moves
-    only along the heterogeneity magnitude. Scale 0 is the homogeneous fleet.
+    perturbation *directions* fixed by a PRNG key (decorrelated from the
+    training streams by a fold_in) and the traced scale multiplying them.
+    Scale 0 is the homogeneous fleet.
+
+    Two point shapes:
+
+    * scalar ``scale`` — directions drawn once from ``cfg.eval_seed``; every
+      cell of the axis shares one direction draw (the sweep moves only along
+      the heterogeneity magnitude).
+    * 2-vector ``(scale, dir_seed)`` — the direction key is additionally
+      folded with the per-cell ``dir_seed``, so each cell perturbs along its
+      *own* directions (float32 carries integer seeds exactly). Without this
+      every cell of a multi-seed sweep shared a single direction draw, so
+      "heterogeneity" measured one arbitrary perturbation instead of the
+      distribution over perturbations.
     """
     from repro.rl.env import perturb_params
 
+    point = jnp.asarray(point, jnp.float32)
     key = jax.random.fold_in(jax.random.key(cfg.eval_seed), 2026)
+    if point.ndim == 0:
+        scale = point
+    elif point.shape == (2,):
+        scale = point[0]
+        key = jax.random.fold_in(key, point[1].astype(jnp.int32))
+    else:
+        raise ValueError(
+            "'hetero_scale' axis points must be scalars or (scale, dir_seed) "
+            f"2-vectors, got shape {point.shape}"
+        )
     params = perturb_params(cfg.env, key, cfg.strategy.m, scale)
     return dataclasses.replace(cfg, env_params=params)
 
@@ -183,6 +212,41 @@ def register_override(name: str, fn: Callable) -> None:
     if not callable(fn):
         raise TypeError("override must be callable")
     OVERRIDES[name] = fn
+
+
+def compression_axis(points, name: str = "compression"):
+    """Static sweep axis over payload transforms (``repro.comm``).
+
+    ``points`` is a sequence of :class:`~repro.comm.PayloadTransform` objects
+    (labelled by their ``label`` property) or explicit
+    ``(label, transform)`` pairs. Each point becomes a
+    ``StaticAxis`` entry whose config transform swaps the strategy's ``comm``
+    via ``with_comm`` — static because the transform kind/k alter the traced
+    computation (comm-state structure, top-k kernel), so the runner compiles
+    exactly once per point.
+    """
+    from repro.comm.transforms import PayloadTransform
+    from repro.sweep.spec import StaticAxis
+
+    labelled = []
+    for point in points:
+        if isinstance(point, PayloadTransform):
+            label, tr = point.label, point
+        else:
+            label, tr = point
+            if not isinstance(tr, PayloadTransform):
+                raise TypeError(
+                    f"compression point {label!r} must carry a "
+                    f"PayloadTransform, got {type(tr).__name__}"
+                )
+
+        def swap(cfg, _tr=tr):
+            return dataclasses.replace(
+                cfg, strategy=cfg.strategy.with_comm(_tr)
+            )
+
+        labelled.append((label, swap))
+    return StaticAxis(name, tuple(labelled))
 
 
 def apply_overrides(cfg, names, values):

@@ -328,16 +328,23 @@ def test_jxa004_flags_declared_but_unused_donation():
 
 
 def test_audit_registry_covers_the_whole_hot_path():
-    """All four dispatch primitives on both CPU-executable backends, both
-    driver cores, and the sweep engine's static-point fn are registered."""
+    """All five dispatch primitives on both CPU-executable backends, the
+    compressed comm reductions, both driver cores, and the sweep engine's
+    static-point fn are registered."""
     from repro.analysis.jaxpr_audit import collect_entries
 
     factories, import_findings = collect_entries()
     assert import_findings == []
     names = set(factories)
-    for prim in ("decay_accum", "scale_rows", "consensus_mix", "row_mean"):
+    for prim in ("decay_accum", "scale_rows", "consensus_mix", "row_mean",
+                 "topk_scatter"):
         for backend in ("jnp", "interpret"):
             assert f"dispatch.{prim}[{backend}]" in names
+    # the compressed server reductions register their own entries: the
+    # fp32-accumulation contract holds even when the wire format is not fp32
+    for kind in ("topk", "int8"):
+        for backend in ("jnp", "interpret"):
+            assert f"comm.{kind}_reduce[{backend}]" in names
     assert {"rl.run_fedrl_core", "core.run_fmarl_core",
             "sweep.static_point_fn"} <= names
 
