@@ -1,0 +1,119 @@
+"""Beyond-paper figure: algebraic connectivity (lambda_2) vs utility vs bytes.
+
+Sweeps the ``algebraic_connectivity`` static axis — the registered sparse
+graph families of ``repro.core.topology.GRAPH_FAMILIES`` at fixed m, each
+labelled with its exact mu2 and run with ``eps = eps_frac/Delta`` so the
+paper's step-size bound stays valid as the degree changes — through the
+consensus-based method, seeds vmapped inside each point. The figure (rendered
+from the versioned ``experiments/sweeps/fig_lambda2.v<N>.json`` artifact by
+``benchmarks.plot_sweeps``) reads: how much convergence does a unit of
+algebraic connectivity buy, and at what wire cost? This is the tradeoff the
+companion paper (arXiv 2201.12718) studies, instrumented byte-exactly.
+
+Not part of the CI bench gate (the scale bench owns the sparse-path gating);
+run it via ``python -m benchmarks.run --only lambda2``.
+"""
+from __future__ import annotations
+
+import numpy as np
+
+from benchmarks.common import (
+    emit,
+    seed_tuple,
+    sweep_config_rows,
+    write_bench_json,
+    write_csv,
+)
+from benchmarks.fmarl_bench import make_cfg
+from repro.core import make_strategy, mu2
+from repro.core import topology as T
+from repro.rl.fedrl import fedrl_bytes_curve
+from repro.sweep import SweepSpec, mean_ci, run_sweep
+from repro.sweep.overrides import algebraic_connectivity_axis
+
+# m=7 matches the env's n_rl on the legacy shared-env path (same geometry as
+# fig6); the axis itself takes any m — large-m sparse-path behaviour is the
+# scale bench's job. chain -> full still spans mu2 ~0.2 -> 7.0 at m=7.
+M_AGENTS = 7
+TAU = 10
+EPS_FRAC = 0.5
+FAMILIES = ("chain", "ring", "knn4", "ws4", "er25", "full")
+FAMILIES_QUICK = ("chain", "knn4", "full")
+
+
+def run(quick: bool = False, seeds=None) -> list[dict]:
+    m, tau = M_AGENTS, TAU
+    seeds = seed_tuple(seeds)
+    epochs = 8 if quick else None
+    families = FAMILIES_QUICK if quick else FAMILIES
+
+    axis = algebraic_connectivity_axis(
+        m, families=families, seed=0, eps_frac=EPS_FRAC
+    )
+    base = make_cfg(
+        make_strategy(
+            "consensus", tau=tau, topo=T.ring(m),
+            eps=EPS_FRAC / T.ring(m).max_degree, rounds=1, m=m,
+        ),
+        epochs=epochs,
+    )
+    spec = SweepSpec(
+        name="fig_lambda2", base=base, seeds=seeds, static=(axis,)
+    )
+    res = run_sweep(spec)
+
+    out = {
+        "schema_version": 1,
+        "quick": bool(quick),
+        "seeds": list(seeds),
+        "n_seeds": len(seeds),
+        "m": m,
+        "eps_frac": EPS_FRAC,
+        "families": list(families),
+        "curves": {},
+        "summary": {},
+    }
+    rows = []
+    for family, (label, transform) in zip(families, axis.points):
+        cfg = transform(base)  # the per-point config: topology + eps swapped
+        lam2 = mu2(cfg.strategy.topo)
+        entry, fam_rows = sweep_config_rows(
+            label, res.metrics[label], len(seeds)
+        )
+        bytes_curve = fedrl_bytes_curve(cfg)
+        entry["bytes"] = bytes_curve.tolist()
+        for ep, row in enumerate(fam_rows):
+            row["bytes"] = float(bytes_curve[ep])
+            row["mu2"] = lam2
+            row["family"] = family
+        out["curves"][label] = entry
+        rows += fam_rows
+        egn_m, egn_h = mean_ci(
+            res.metrics[label]["server_grad_sq_norm"].mean(-1), 0
+        )
+        total = float(bytes_curve[-1])
+        out["summary"][label] = {
+            "family": family,
+            "mu2": lam2,
+            "expected_grad_norm_mean": float(egn_m),
+            "expected_grad_norm_ci_hw": float(egn_h),
+            "final_nas_mean": float(np.asarray(entry["nas_mean"])[-3:].mean()),
+            "total_bytes": total,
+            # lower = fewer wire bytes per unit of achieved 1/grad-norm
+            # (same convention as compression_bench)
+            "bytes_per_utility": float(total * float(egn_m)),
+        }
+        emit(
+            f"lambda2/{label}",
+            res.wall_s[label] / len(seeds) * 1e6,
+            f"grad_norm={float(egn_m):.4f}+-{float(egn_h):.4f} bytes={total:.0f}",
+        )
+
+    write_bench_json("lambda2_sweep", out)
+    res.save("experiments/sweeps")
+    write_csv("fig_lambda2", rows)
+    return rows
+
+
+if __name__ == "__main__":
+    run()

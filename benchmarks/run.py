@@ -20,7 +20,8 @@ def main() -> None:
                     help="reduced configs (CI-speed)")
     ap.add_argument("--only", default=None,
                     help="run a single bench: table2|fig4|fig5|fig6|fig789|"
-                         "bounds|roofline|kernels|dispatch|rollout_fleet|comm")
+                         "bounds|roofline|kernels|dispatch|rollout_fleet|comm|"
+                         "consensus_scale|lambda2")
     ap.add_argument("--seeds", type=int, default=None,
                     help="seed count for the sweep-based figure benches "
                          "(fig4/fig5/fig6; default 4)")
@@ -29,10 +30,12 @@ def main() -> None:
     from benchmarks import (  # imported lazily so --only is cheap
         bounds_bench,
         compression_bench,
+        consensus_scale_bench,
         fig4_variation,
         fig5_decay,
         fig6_consensus,
         fig789_optimizers,
+        fig_lambda2,
         kernel_bench,
         rollout_fleet_bench,
         roofline_bench,
@@ -47,6 +50,8 @@ def main() -> None:
         "rollout_fleet": rollout_fleet_bench.run,  # batched fleet vs single env
         "roofline": roofline_bench.run,      # §Roofline from dry-run artifacts
         "comm": compression_bench.run,       # payload transforms: bytes/utility
+        "consensus_scale": consensus_scale_bench.run,  # sparse O(m*k) gossip
+        "lambda2": fig_lambda2.run,          # beyond-paper mu2 tradeoff figure
         "table2": table2.run,                # paper Table II
         "fig4": fig4_variation.run,          # paper Fig. 4
         "fig5": fig5_decay.run,              # paper Fig. 5

@@ -12,7 +12,23 @@ from repro.core.decay import (
     no_decay,
     step_decay,
 )
-from repro.core.topology import Topology, laplacian, mixing_matrix, mu2
+from repro.core.topology import (
+    GRAPH_FAMILIES,
+    NeighborList,
+    Topology,
+    density,
+    erdos_renyi,
+    knn_ring,
+    knn_ring_neighbors,
+    laplacian,
+    mixing_matrix,
+    mu2,
+    mu2_knn_ring,
+    neighbor_list,
+    neighbor_weights,
+    neighbor_weights_from_matrix,
+    watts_strogatz,
+)
 from repro.core.variation import (
     indicator_mask,
     tau_schedule,
@@ -50,6 +66,8 @@ __all__ = [
     "DecayStrategy",
     "FmarlConfig",
     "FmarlState",
+    "GRAPH_FAMILIES",
+    "NeighborList",
     "PeriodicStrategy",
     "SyncStrategy",
     "Topology",
@@ -58,14 +76,22 @@ __all__ = [
     "consensus_rounds_matrix",
     "cosine_decay",
     "decay_bound_t4",
+    "density",
+    "erdos_renyi",
     "eta_condition",
     "exponential_decay",
     "indicator_mask",
+    "knn_ring",
+    "knn_ring_neighbors",
     "laplacian",
     "linear_decay",
     "make_strategy",
     "mixing_matrix",
     "mu2",
+    "mu2_knn_ring",
+    "neighbor_list",
+    "neighbor_weights",
+    "neighbor_weights_from_matrix",
     "no_decay",
     "periodic_bound_t1",
     "resource_cost_consensus",
@@ -78,4 +104,5 @@ __all__ = [
     "utility",
     "validate_a2",
     "variation_bound_t2",
+    "watts_strogatz",
 ]

@@ -30,8 +30,10 @@ so every pre-existing call site keeps its exact behaviour on CPU.
 """
 from __future__ import annotations
 
+import collections
 import copy
 import dataclasses
+import hashlib
 from typing import Optional
 
 import jax
@@ -40,9 +42,76 @@ import numpy as np
 
 from repro.comm.transforms import IDENTITY, PayloadTransform
 from repro.core.decay import DecayFn, no_decay
-from repro.core.topology import Topology, mixing_matrix
+from repro.core.topology import (
+    NeighborList,
+    Topology,
+    density,
+    mixing_matrix,
+    neighbor_list,
+    neighbor_weights_from_matrix,
+)
 from repro.core.variation import masked_update_counts, validate_a2
 from repro.kernels import dispatch
+
+
+# --- mixing-matrix power cache -----------------------------------------------
+#
+# ConsensusStrategy construction needs P = I - eps*La (cheap) and, on the
+# dense path, P^E via np.linalg.matrix_power (O(m^3 log E) — the cost a
+# static sweep over eps/topology points used to pay once per *point per
+# rebuild*). Keyed by (adjacency digest, m, eps, rounds) in a bounded LRU;
+# P^E is filled lazily so sparse strategies never pay the matrix power at
+# all. Cache hits return the *same* ndarray objects, so repeated
+# constructions feed jit identical constants and the retrace guard sees no
+# extra compiles (pinned by tests/test_sparse_consensus.py).
+
+_POWER_CACHE_MAXSIZE = 32
+_POWER_CACHE: "collections.OrderedDict" = collections.OrderedDict()
+
+
+def _topology_digest(topo: Topology) -> str:
+    return hashlib.sha1(
+        np.ascontiguousarray(topo.adj, np.int8).tobytes()
+    ).hexdigest()
+
+
+def clear_power_cache() -> None:
+    """Drop all cached mixing-matrix powers (tests)."""
+    _POWER_CACHE.clear()
+
+
+def mixing_powers(topo: Topology, eps: float, rounds: int, *,
+                  need_power: bool = True):
+    """Cached ``(P_float64, P_fp32, P^rounds_fp32)`` for one consensus config.
+
+    ``P^rounds`` is ``None`` until some caller passes ``need_power=True``
+    (the dense fused path); the fp32 power is computed from the fp32 ``P``
+    exactly as ConsensusStrategy always did, so cached and uncached
+    constructions are bit-identical.
+    """
+    key = (_topology_digest(topo), topo.m, float(eps), int(rounds))
+    entry = _POWER_CACHE.get(key)
+    if entry is None:
+        p64 = mixing_matrix(topo, eps)
+        entry = {"p64": p64, "p": p64.astype(np.float32), "p_e": None}
+        _POWER_CACHE[key] = entry
+        if len(_POWER_CACHE) > _POWER_CACHE_MAXSIZE:
+            _POWER_CACHE.popitem(last=False)
+    else:
+        _POWER_CACHE.move_to_end(key)
+    if need_power and entry["p_e"] is None:
+        entry["p_e"] = np.linalg.matrix_power(entry["p"], rounds).astype(
+            np.float32
+        )
+    return entry["p64"], entry["p"], entry["p_e"]
+
+
+# Sparse-path auto selection: gather beats the dense matmul once the graph is
+# genuinely sparse AND the agent count is big enough for O(m*k) vs O(m^2) to
+# matter. The m floor keeps every pre-existing small-m config (paper figures,
+# CI-pinned benches — all far below 64 agents) on the dense path bit-for-bit.
+SPARSE_DENSITY_THRESHOLD = 0.25
+SPARSE_MIN_AGENTS = 64
 
 
 @dataclasses.dataclass(frozen=True)
@@ -397,9 +466,19 @@ class ConsensusStrategy(AggregationStrategy):
     For the kernel path the variation mask is folded into the mixing matrix:
     P^E @ diag(mask[:, j]) is precomputed per period offset j (``p_e_masked``,
     shape (tau, m, m)), so the masked gossip is ONE consensus_step_pallas call.
+
+    Sparse path (DESIGN.md §14): when the topology is sparse enough
+    (``density <= SPARSE_DENSITY_THRESHOLD`` and ``m >= SPARSE_MIN_AGENTS``,
+    or ``sparse=True`` explicitly) the strategy skips the dense tables
+    entirely — no ``P^E`` matrix power, no ``(tau, m, m)`` folded tables —
+    and realises each transform as mask ``scale_rows`` + E
+    ``consensus_gather`` rounds over the padded ``(m, k_max)`` neighbor list,
+    O(m*k) per round instead of O(m^2). ``nl_w`` gathers its edge weights out
+    of the *float64* mixing matrix so the sparse path sees the same fp32
+    weight values as the dense one.
     """
 
-    p_e: np.ndarray = dataclasses.field(default=None)   # (m, m) = P^E
+    p_e: np.ndarray = dataclasses.field(default=None)   # (m, m) = P^E (dense)
     p: np.ndarray = dataclasses.field(default=None)     # (m, m) = P
     p_e_masked: np.ndarray = dataclasses.field(default=None)  # (tau, m, m)
     p_masked: np.ndarray = dataclasses.field(default=None)    # (tau, m, m)
@@ -407,6 +486,9 @@ class ConsensusStrategy(AggregationStrategy):
     fused: bool = True
     topo: Topology = None
     eps: float = 0.0
+    sparse: bool = False
+    nl: NeighborList = None                             # sparse neighbor layout
+    nl_w: np.ndarray = None                             # (m, k_max) P gathered
 
     def __init__(
         self,
@@ -418,6 +500,7 @@ class ConsensusStrategy(AggregationStrategy):
         m: Optional[int] = None,
         fused: bool = True,
         backend: str = "auto",
+        sparse: Optional[bool] = None,
     ):
         m = m if m is not None else topo.m
         if taus is None:
@@ -426,21 +509,41 @@ class ConsensusStrategy(AggregationStrategy):
         validate_a2(taus, tau)
         if topo.m != m:
             raise ValueError("topology size must match agent count")
-        p = mixing_matrix(topo, eps).astype(np.float32)
-        p_e = np.linalg.matrix_power(p, rounds).astype(np.float32)
+        if sparse is None:
+            sparse = (
+                density(topo) <= SPARSE_DENSITY_THRESHOLD
+                and m >= SPARSE_MIN_AGENTS
+            )
+        p64, p, p_e = mixing_powers(topo, eps, rounds, need_power=not sparse)
         mask = self._build_mask(taus, tau)
-        # mask-folded mixing per offset: (P^E @ diag(w_j))[i, l] = P^E[i, l]*w_j[l]
         object.__setattr__(self, "p", p)
         object.__setattr__(self, "p_e", p_e)
-        object.__setattr__(self, "p_e_masked", p_e[None, :, :] * mask.T[:, None, :])
-        object.__setattr__(self, "p_masked", p[None, :, :] * mask.T[:, None, :])
+        object.__setattr__(self, "sparse", bool(sparse))
+        if sparse:
+            nl = neighbor_list(topo)
+            object.__setattr__(self, "nl", nl)
+            object.__setattr__(self, "nl_w", neighbor_weights_from_matrix(nl, p64))
+            object.__setattr__(self, "p_e_masked", None)
+            object.__setattr__(self, "p_masked", None)
+        else:
+            # mask-folded mixing per offset:
+            # (P^E @ diag(w_j))[i, l] = P^E[i, l]*w_j[l]
+            object.__setattr__(self, "nl", None)
+            object.__setattr__(self, "nl_w", None)
+            object.__setattr__(
+                self, "p_e_masked", p_e[None, :, :] * mask.T[:, None, :]
+            )
+            object.__setattr__(self, "p_masked", p[None, :, :] * mask.T[:, None, :])
         object.__setattr__(self, "rounds", rounds)
         object.__setattr__(self, "fused", fused)
         object.__setattr__(self, "topo", topo)
         object.__setattr__(self, "eps", eps)
         AggregationStrategy.__init__(
             self,
-            name=f"consensus(tau={tau},E={rounds},eps={eps:.3f})",
+            name=(
+                f"consensus(tau={tau},E={rounds},eps={eps:.3f}"
+                + (",sparse)" if sparse else ")")
+            ),
             tau=tau,
             taus=taus,
             mask=mask,
@@ -453,9 +556,13 @@ class ConsensusStrategy(AggregationStrategy):
         ``p`` / ``p_e`` stay as built (they depend only on topology, eps and
         rounds); the mask-folded ``p_masked`` / ``p_e_masked`` are recomputed
         from them against the new mask, tracing through when the mask (or a
-        prior ``eps`` override's matrices) is a tracer.
+        prior ``eps`` override's matrices) is a tracer. The sparse path folds
+        the mask at transform time (``scale_rows`` before the gathers), so
+        its copy just swaps the mask — no tables to refold.
         """
         new = AggregationStrategy.with_mask(self, mask, taus)
+        if self.sparse:
+            return new
         mask_t = jnp.asarray(mask).T[:, None, :]              # (tau, 1, m)
         object.__setattr__(new, "p_masked", jnp.asarray(self.p)[None] * mask_t)
         object.__setattr__(
@@ -463,8 +570,30 @@ class ConsensusStrategy(AggregationStrategy):
         )
         return new
 
+    def _gossip(self, x, backend: str):
+        """E sparse gossip rounds over the neighbor list (O(m*k) each).
+
+        The rounds unroll as a Python loop (E is a small static int) rather
+        than a lax.scan: in eager mode every round then runs op-by-op, which
+        keeps the sequential-FMA bitwise-parity contract of
+        ``dispatch.consensus_gather`` intact across rounds too.
+        """
+        idx = jnp.asarray(self.nl.idx)
+        w = jnp.asarray(self.nl_w)
+        out = x
+        for _ in range(self.rounds):
+            out = dispatch.consensus_gather(out, idx, w, backend=backend)
+        return out
+
     def _transform_tree(self, grads_m, offset):
         masked = AggregationStrategy._transform_tree(self, grads_m, offset)
+        if self.sparse:
+
+            def mix_leaf(leaf):
+                flat = leaf.reshape(leaf.shape[0], -1)
+                return self._gossip(flat, "jnp").reshape(leaf.shape)
+
+            return jax.tree.map(mix_leaf, masked)
         if self.fused:
             mix = jnp.asarray(self.p_e)
             return jax.tree.map(
@@ -480,6 +609,11 @@ class ConsensusStrategy(AggregationStrategy):
 
     def flat_transform(self, g, offset, *, backend: Optional[str] = None):
         b = backend if backend is not None else self.backend
+        if self.sparse:
+            # Mask first (diag(w_j) commutes out of the product), then E
+            # O(m*k) gather rounds — the fused dense table never exists.
+            x = dispatch.scale_rows(g, self.weight(offset), backend=b)
+            return self._gossip(x, b)
         if self.fused:
             mix = jnp.asarray(self.p_e_masked)[offset]
             return dispatch.consensus_mix(g, mix, backend=b)
@@ -542,7 +676,10 @@ class ConsensusStrategy(AggregationStrategy):
         if self.comm.error_feedback:
             x = x + comm_state["err_gossip"]
         payload, residual = self.comm.encode(x, backend=b)
-        mixed = dispatch.consensus_mix(payload, jnp.asarray(self.p_e), backend=b)
+        if self.sparse:
+            mixed = self._gossip(payload, b)
+        else:
+            mixed = dispatch.consensus_mix(payload, jnp.asarray(self.p_e), backend=b)
         if self.comm.error_feedback:
             comm_state = dict(comm_state, err_gossip=residual)
         mixed = mixed.astype(flat.dtype)
@@ -595,6 +732,7 @@ def make_strategy(kind: str, **kw) -> AggregationStrategy:
             m=kw.get("m"),
             fused=kw.get("fused", True),
             backend=backend,
+            sparse=kw.get("sparse"),
         )
     else:
         raise ValueError(f"unknown strategy kind: {kind}")

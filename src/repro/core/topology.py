@@ -91,6 +91,164 @@ def spectral_gap_factor(topo: Topology, eps: float, rounds: int) -> float:
     return float((1.0 - eps * mu2(topo)) ** (2 * rounds))
 
 
+def density(topo: Topology) -> float:
+    """Edge density 2|E| / (m(m-1)) in [0, 1]; the sparse-path selector input."""
+    m = topo.m
+    if m < 2:
+        return 0.0
+    return 2.0 * topo.n_edges / (m * (m - 1))
+
+
+# ----------------------------------------------------------------------------
+# Sparse neighbor-list representation (the O(m*k) consensus layout)
+# ----------------------------------------------------------------------------
+
+@dataclasses.dataclass(frozen=True)
+class NeighborList:
+    """Padded static neighbor-index layout for the sparse gossip step.
+
+    ``idx[i]`` holds agent i's closed neighborhood (self included) sorted
+    ascending, padded out to ``k_max`` with i's *own* index; ``valid`` is
+    False exactly on the padding. The gossip kernels gather ``x[idx[i, k]]``
+    and weight by an ``(m, k_max)`` edge-weight table whose padding entries
+    are exactly 0.0, so padded slots gather the agent's own row and
+    contribute exactly nothing (adding ``0.0 * row`` is a floating-point
+    no-op). Keeping valid entries ascending makes the sequential fp32
+    accumulation order match a full (k_max = m) list evaluated in index
+    order — the basis of the dense/sparse bitwise-parity contract
+    (DESIGN.md §14).
+    """
+
+    name: str
+    idx: np.ndarray      # (m, k_max) int32, ascending valid prefix, pad = own row
+    valid: np.ndarray    # (m, k_max) bool, False on padding
+    degrees: np.ndarray  # (m,) int32 true neighbor counts (self excluded)
+
+    def __post_init__(self):
+        idx = np.asarray(self.idx)
+        valid = np.asarray(self.valid)
+        deg = np.asarray(self.degrees)
+        if idx.ndim != 2 or valid.shape != idx.shape:
+            raise ValueError("idx/valid must be matching (m, k_max) arrays")
+        m = idx.shape[0]
+        if deg.shape != (m,):
+            raise ValueError(f"degrees must be ({m},), got {deg.shape}")
+        rows = np.arange(m)[:, None]
+        if not np.all(idx[~valid] == np.broadcast_to(rows, idx.shape)[~valid]):
+            raise ValueError("padding entries must gather the agent's own row")
+        if np.any(valid[:, 1:] & ~valid[:, :-1]):
+            raise ValueError("valid entries must form a per-row prefix")
+        d = np.diff(np.where(valid, idx, idx.shape[0] + idx[:, :1]), axis=1)
+        if np.any((d <= 0) & valid[:, 1:]):
+            raise ValueError("valid neighbor indices must be strictly ascending")
+        if not np.all(valid.sum(axis=1) == deg + 1):
+            raise ValueError("valid counts must equal degree + 1 (self included)")
+
+    @property
+    def m(self) -> int:
+        return self.idx.shape[0]
+
+    @property
+    def k_max(self) -> int:
+        return self.idx.shape[1]
+
+    @property
+    def max_degree(self) -> int:
+        """Delta := max_i |Omega_i| + 1, as on :class:`Topology`."""
+        return int(self.degrees.max()) + 1
+
+
+def neighbor_list(topo: Topology, k_max: int | None = None) -> NeighborList:
+    """Export ``topo``'s adjacency as a padded static :class:`NeighborList`.
+
+    ``k_max`` defaults to the tightest fit (max closed-neighborhood size);
+    passing a larger value pads every row further — useful to hold k_max
+    static across a topology sweep.
+    """
+    m = topo.m
+    deg = topo.degrees.astype(np.int32)
+    need = int(deg.max()) + 1
+    if k_max is None:
+        k_max = need
+    if k_max < need:
+        raise ValueError(f"k_max={k_max} < max closed neighborhood {need}")
+    idx = np.tile(np.arange(m, dtype=np.int32)[:, None], (1, k_max))
+    valid = np.zeros((m, k_max), bool)
+    for i in range(m):
+        nbrs = np.sort(np.append(np.nonzero(topo.adj[i])[0], i)).astype(np.int32)
+        idx[i, : nbrs.size] = nbrs
+        valid[i, : nbrs.size] = True
+    return NeighborList(f"nl[{topo.name}]", idx, valid, deg)
+
+
+def knn_ring_neighbors(m: int, k: int) -> NeighborList:
+    """Analytic k-NN ring neighbor list — never materialises (m, m) storage.
+
+    The 10k-agent scale path: builds the padded ``(m, k+1)`` layout directly
+    (every row is full, so there is no padding) in O(m*k) memory.
+    """
+    if k % 2 or k < 2 or k >= m:
+        raise ValueError(f"knn ring needs even k with 2 <= k < m, got k={k}, m={m}")
+    half = k // 2
+    offsets = np.r_[np.arange(-half, 0), 0, np.arange(1, half + 1)]
+    idx = np.sort((np.arange(m)[:, None] + offsets[None, :]) % m, axis=1)
+    return NeighborList(
+        f"nl[knn_ring({m},k={k})]",
+        idx.astype(np.int32),
+        np.ones((m, k + 1), bool),
+        np.full(m, k, np.int32),
+    )
+
+
+def mu2_knn_ring(m: int, k: int) -> float:
+    """Closed-form algebraic connectivity of the k-NN ring (circulant La).
+
+    The Laplacian eigenvalues are ``k - 2 * sum_{s=1..k/2} cos(2*pi*j*s/m)``
+    for j = 0..m-1; mu2 is the smallest over j >= 1. O(m*k) — no eigensolve,
+    so it works at the 10k scale where ``mu2`` (dense eigvalsh) cannot.
+    """
+    if k % 2 or k < 2 or k >= m:
+        raise ValueError(f"knn ring needs even k with 2 <= k < m, got k={k}, m={m}")
+    j = np.arange(1, m, dtype=np.float64)
+    s = np.arange(1, k // 2 + 1, dtype=np.float64)
+    lam = k - 2.0 * np.cos(2.0 * np.pi * np.outer(j, s) / m).sum(axis=1)
+    return float(lam.min())
+
+
+def neighbor_weights(nl: NeighborList, eps):
+    """Traced ``(m, k_max)`` gossip weight table: ``(I - eps*La)`` gathered.
+
+    Self slots get ``1 - eps*deg_i``, neighbor slots ``eps``, padding exactly
+    ``0.0``. Computed with jnp so a traced ``eps`` (the sweep engine's eps
+    axis) flows through; elementwise ops match the dense traced rebuild
+    ``eye(m) - eps * La`` bit-for-bit entry-by-entry in fp32.
+    """
+    import jax.numpy as jnp
+
+    idx = jnp.asarray(nl.idx)
+    valid = jnp.asarray(nl.valid)
+    is_self = (idx == jnp.arange(nl.m, dtype=idx.dtype)[:, None]) & valid
+    deg = jnp.asarray(nl.degrees, jnp.float32)[:, None]
+    eps32 = jnp.asarray(eps, jnp.float32)
+    w = jnp.where(is_self, 1.0 - eps32 * deg, eps32)
+    return jnp.where(valid, w, 0.0).astype(jnp.float32)
+
+
+def neighbor_weights_from_matrix(nl: NeighborList, p: np.ndarray) -> np.ndarray:
+    """Gather an ``(m, k_max)`` weight table out of a dense mixing matrix.
+
+    Used by the strategy layer so the sparse path's weights are *the same
+    float64 entries* as the dense ``mixing_matrix`` cast to fp32 — the
+    bitwise dense/sparse parity contract needs identical weights, not just
+    close ones. Padding is forced to exactly 0.0.
+    """
+    p = np.asarray(p)
+    if p.shape != (nl.m, nl.m):
+        raise ValueError(f"mixing must be ({nl.m}, {nl.m}), got {p.shape}")
+    w = p[np.arange(nl.m)[:, None], nl.idx] * nl.valid
+    return np.ascontiguousarray(w, dtype=np.float32)
+
+
 # ----------------------------------------------------------------------------
 # Graph families
 # ----------------------------------------------------------------------------
@@ -142,14 +300,53 @@ def torus2d(rows: int, cols: int) -> Topology:
     return Topology(f"torus({rows}x{cols})", adj)
 
 
+def knn_ring(m: int, k: int) -> Topology:
+    """k-NN ring: each agent wired to its k/2 nearest on each side (k even).
+
+    The canonical sparse family — connected for any even 2 <= k < m, constant
+    degree k, and its circulant mu2 has the closed form ``mu2_knn_ring``.
+    """
+    if k % 2 or k < 2 or k >= m:
+        raise ValueError(f"knn ring needs even k with 2 <= k < m, got k={k}, m={m}")
+    adj = np.zeros((m, m), int)
+    for s in range(1, k // 2 + 1):
+        for i in range(m):
+            j = (i + s) % m
+            adj[i, j] = adj[j, i] = 1
+    return Topology(f"knn_ring({m},k={k})", adj)
+
+
+def _draw_connected(family: str, m: int, seed: int, draw, max_retries: int = 1000):
+    """Shared bounded reseed-retry for the random families.
+
+    ``draw(seed)`` must return a freshly drawn :class:`Topology`; disconnected
+    draws bump the seed and retry (so the successful topology's name records
+    the seed that actually produced it). A4 needs a connected graph — after
+    ``max_retries`` failures we raise with enough context to fix the density.
+    """
+    first = seed
+    for _attempt in range(max_retries):
+        topo = draw(seed)
+        if topo.is_connected():
+            return topo
+        seed += 1
+    raise RuntimeError(
+        f"{family}: no connected draw for m={m} in {max_retries} reseed "
+        f"retries (seeds {first}..{seed - 1}). A4 requires a connected graph "
+        f"— increase the edge density (k / p) or the retry budget."
+    )
+
+
 def random_regularish(m: int, k_lo: int, k_hi: int, seed: int = 0) -> Topology:
     """Random graph with each node wired to ~k in [k_lo, k_hi] others.
 
     Mirrors the paper's 'constructed by 3~4 (or 4~6) random connections from
-    each learning agent to others' (Fig. 6). Re-draws until connected.
+    each learning agent to others' (Fig. 6). Re-draws until connected
+    (bounded; see ``_draw_connected``).
     """
-    rng = np.random.default_rng(seed)
-    for _attempt in range(1000):
+
+    def draw(s: int) -> Topology:
+        rng = np.random.default_rng(s)
         adj = np.zeros((m, m), int)
         for i in range(m):
             k = int(rng.integers(k_lo, k_hi + 1))
@@ -158,12 +355,56 @@ def random_regularish(m: int, k_lo: int, k_hi: int, seed: int = 0) -> Topology:
             rng.shuffle(cand)
             for j in cand[:need]:
                 adj[i, j] = adj[j, i] = 1
-        topo = Topology(f"rand{k_lo}-{k_hi}(m={m},seed={seed})", adj)
-        if topo.is_connected():
-            return topo
-        seed += 1
-        rng = np.random.default_rng(seed)
-    raise RuntimeError("failed to draw a connected graph")
+        return Topology(f"rand{k_lo}-{k_hi}(m={m},seed={s})", adj)
+
+    return _draw_connected(f"rand{k_lo}-{k_hi}", m, seed, draw)
+
+
+def watts_strogatz(m: int, k: int, beta: float, seed: int = 0) -> Topology:
+    """Small-world graph: k-NN ring with each edge rewired with prob beta.
+
+    beta=0 is the k-NN ring (high clustering, small mu2); beta→1 approaches a
+    random graph (mu2 grows at the same degree budget) — the interesting
+    middle of the lambda_2 sweep axis. Re-draws until connected (large beta
+    can disconnect a rewired node).
+    """
+    if not (0.0 <= beta <= 1.0):
+        raise ValueError(f"rewiring probability beta={beta} must be in [0, 1]")
+    base = knn_ring(m, k)  # validates m/k once, outside the retry loop
+
+    def draw(s: int) -> Topology:
+        rng = np.random.default_rng(s)
+        adj = base.adj.copy()
+        for step in range(1, k // 2 + 1):
+            for i in range(m):
+                j = (i + step) % m
+                if adj[i, j] and rng.random() < beta:
+                    cand = np.nonzero((adj[i] == 0) & (np.arange(m) != i))[0]
+                    if cand.size:
+                        t = int(rng.choice(cand))
+                        adj[i, j] = adj[j, i] = 0
+                        adj[i, t] = adj[t, i] = 1
+        return Topology(f"ws({m},k={k},beta={beta:g},seed={s})", adj)
+
+    return _draw_connected(f"ws(k={k},beta={beta:g})", m, seed, draw)
+
+
+def erdos_renyi(m: int, p: float, seed: int = 0) -> Topology:
+    """G(m, p): each pair wired independently with prob p.
+
+    Re-draws until connected (bounded) — below the ln(m)/m connectivity
+    threshold the retry budget runs out with a clear error rather than
+    silently handing a disconnected graph to the consensus layer.
+    """
+    if not (0.0 < p <= 1.0):
+        raise ValueError(f"edge probability p={p} must be in (0, 1]")
+
+    def draw(s: int) -> Topology:
+        rng = np.random.default_rng(s)
+        upper = np.triu(rng.random((m, m)) < p, k=1).astype(int)
+        return Topology(f"er({m},p={p:g},seed={s})", upper + upper.T)
+
+    return _draw_connected(f"er(p={p:g})", m, seed, draw)
 
 
 REGISTRY = {
@@ -171,4 +412,17 @@ REGISTRY = {
     "chain": chain,
     "full": fully_connected,
     "star": star,
+}
+
+# Sparse graph families for the lambda_2 (algebraic-connectivity) sweep axis:
+# label -> builder(m, seed) at fixed m. Ordered roughly by increasing mu2 so
+# sweep figures read left-to-right along the connectivity axis.
+GRAPH_FAMILIES = {
+    "chain": lambda m, seed=0: chain(m),
+    "ring": lambda m, seed=0: ring(m),
+    "knn4": lambda m, seed=0: knn_ring(m, 4),
+    "ws4": lambda m, seed=0: watts_strogatz(m, 4, 0.3, seed),
+    "knn8": lambda m, seed=0: knn_ring(m, 8),
+    "er25": lambda m, seed=0: erdos_renyi(m, 0.25, seed),
+    "full": lambda m, seed=0: fully_connected(m),
 }

@@ -1,0 +1,106 @@
+"""Pallas TPU kernel: sparse neighbor-list gossip step (O(m*k), not O(m^2)).
+
+One consensus round on a sparse topology: ``out[i] = sum_k w[i,k] * g[idx[i,k]]``
+over agent i's padded closed neighborhood (``repro.core.topology.NeighborList``
+layout — self included, padding gathers the agent's own row with weight exactly
+0.0). The neighbor indices arrive via scalar prefetch so the BlockSpec index
+map can gather arbitrary *rows* of ``g`` straight from HBM: the grid is
+``(m, n_blocks, k_max)`` with k innermost, each step DMAs one ``(1, block_n)``
+neighbor slice into VMEM and accumulates it fp32 into a VMEM scratch row, and
+the accumulated row is flushed to the output on the last k step (output
+revisiting across the innermost grid dim keeps the store cheap).
+
+Per gossip round this reads ``m * (k_max+?) * block`` rows instead of running
+an ``(m,m) x (m,n)`` matmul — at m=10k, k=8 that is ~1000x less work, and the
+cost scales ~O(m*k*n) (the scale bench fits the exponent).
+
+Accumulation order matches the jnp reference in ``dispatch.consensus_gather``
+(ascending neighbor index, sequential adds), so interpret-mode parity against
+the eager jnp path is bitwise; see DESIGN.md §14 for the parity contract.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+
+def _gather_kernel(idx_ref, g_ref, w_ref, o_ref, acc_ref):
+    k = pl.program_id(2)
+    k_max = pl.num_programs(2)
+    # (1, block_n) neighbor slice, weighted; fp32 accumulation throughout.
+    row = g_ref[...].astype(jnp.float32) * w_ref[0, 0]
+
+    @pl.when(k == 0)
+    def _init():
+        acc_ref[...] = row
+
+    @pl.when(k > 0)
+    def _accum():
+        acc_ref[...] += row
+
+    @pl.when(k == k_max - 1)
+    def _flush():
+        o_ref[...] = acc_ref[...].astype(o_ref.dtype)
+
+
+@functools.partial(jax.jit, static_argnames=("block_n", "interpret"))
+def consensus_gather_pallas(
+    g, idx, w, *, block_n: int = 2048, interpret: bool = False
+):
+    """g: (m, n) flat grads; idx/w: (m, k_max) neighbor ids / edge weights.
+
+    Returns the (m, n) post-gossip buffer in ``g.dtype``. ``idx`` must hold
+    in-range row ids with padding pointing at the agent's own row, and ``w``
+    must be exactly 0.0 on padding (the NeighborList weight contract) — the
+    kernel gathers every slot unconditionally and relies on the zero weight.
+    """
+    if g.ndim != 2:
+        raise ValueError(f"consensus_gather_pallas: g must be (m, n), got {g.shape}")
+    m, n = g.shape
+    if idx.ndim != 2 or idx.shape[0] != m:
+        raise ValueError(
+            f"consensus_gather_pallas: idx must be ({m}, k_max) for g {g.shape}, "
+            f"got {idx.shape}"
+        )
+    if w.shape != idx.shape:
+        raise ValueError(
+            f"consensus_gather_pallas: w must match idx {idx.shape}, got {w.shape}"
+        )
+    if not jnp.issubdtype(idx.dtype, jnp.integer):
+        raise ValueError(
+            f"consensus_gather_pallas: idx must be integer, got {idx.dtype}"
+        )
+    if block_n < 1:
+        raise ValueError(
+            f"consensus_gather_pallas: block_n must be >= 1, got {block_n}"
+        )
+    if n == 0:
+        return g
+    k_max = idx.shape[1]
+    block_n = min(block_n, n)
+    pad = (-n) % block_n
+    gp = jnp.pad(g, ((0, 0), (0, pad))) if pad else g
+    np_ = gp.shape[1]
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=1,
+        grid=(m, np_ // block_n, k_max),
+        in_specs=[
+            # neighbor row slice: the scalar-prefetched idx picks the g row
+            pl.BlockSpec((1, block_n), lambda i, j, k, idx_ref: (idx_ref[i, k], j)),
+            # matching edge weight as a (1, 1) block
+            pl.BlockSpec((1, 1), lambda i, j, k, idx_ref: (i, k)),
+        ],
+        out_specs=pl.BlockSpec((1, block_n), lambda i, j, k, idx_ref: (i, j)),
+        scratch_shapes=[pltpu.VMEM((1, block_n), jnp.float32)],
+    )
+    out = pl.pallas_call(
+        _gather_kernel,
+        grid_spec=grid_spec,
+        out_shape=jax.ShapeDtypeStruct((m, np_), g.dtype),
+        interpret=interpret,
+    )(jnp.asarray(idx, jnp.int32), gp, jnp.asarray(w, jnp.float32))
+    return out[:, :n] if pad else out

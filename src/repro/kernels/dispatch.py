@@ -8,9 +8,10 @@ that decides how they execute:
   * ``jnp``       — pure-jnp reference path (tree ops / matmul). Always
                     available; the allclose target for everything else.
   * ``pallas``    — compiled Pallas TPU kernels (``decay_accum_pallas``,
-                    ``consensus_step_pallas``, ``row_mean_pallas``,
-                    ``momentum_update_pallas`` / ``adam_update_pallas``): one
-                    fused bandwidth-bound pass over flat parameter buffers.
+                    ``consensus_step_pallas``, ``consensus_gather_pallas``,
+                    ``row_mean_pallas``, ``momentum_update_pallas`` /
+                    ``adam_update_pallas``): one fused bandwidth-bound pass
+                    over flat parameter buffers.
   * ``interpret`` — the same Pallas kernels in interpret mode. Runs the
                     kernel bodies as traced jax on CPU; used for parity tests
                     and CPU debugging of the kernel path.
@@ -374,6 +375,70 @@ def consensus_mix(g, mixing, *, backend: str = "auto", block_n: int = 2048):
     )
 
 
+def consensus_gather(g, idx, w, *, backend: str = "auto", block_n: int = 2048):
+    """One sparse neighbor-list gossip round: ``out[i] = sum_k w[i,k]*g[idx[i,k]]``.
+
+    The O(m*k) twin of :func:`consensus_mix` for sparse topologies. ``g``:
+    ``(m, n)`` flat grads (or ``(S, m, n)`` with a leading sweep axis);
+    ``idx``: static ``(m, k_max)`` integer neighbor ids in the
+    ``repro.core.topology.NeighborList`` layout (ascending valid prefix, self
+    included, padding = own row); ``w``: ``(m, k_max)`` edge weights with
+    padding slots exactly 0.0 (or ``(S, m, k_max)`` per-run weights — the eps
+    sweep axis rebuilds them traced via ``neighbor_weights``).
+
+    Numerics contract: fp32 accumulation on every backend, result cast back
+    to ``g.dtype``. The jnp path states the sum as a *sequential* FMA chain
+    in ascending-k order — in eager mode this is bit-identical to evaluating
+    the dense ``P @ g`` row sum in index order with zero weights on the
+    non-edges (adding ``0.0 * row`` is exact), which is the dense/sparse
+    bitwise-parity contract pinned by the tests; under jit, XLA fusion may
+    re-associate within 1 ulp (same caveat as every dispatched primitive).
+    """
+    b = resolve_backend(backend)
+    idx = jnp.asarray(idx)
+    if idx.ndim != 2 or not jnp.issubdtype(idx.dtype, jnp.integer):
+        raise ValueError(
+            f"consensus_gather: idx must be an (m, k_max) integer array, got "
+            f"shape {idx.shape} dtype {idx.dtype}"
+        )
+    if g.ndim == 3:
+        w_arr = jnp.asarray(w, jnp.float32)
+        if w_arr.ndim == 3:  # (S, m, k_max) per-run edge weights
+            return jax.vmap(
+                lambda gi, wi: consensus_gather(
+                    gi, idx, wi, backend=b, block_n=block_n
+                )
+            )(g, w_arr)
+        return jax.vmap(
+            lambda gi: consensus_gather(gi, idx, w_arr, backend=b, block_n=block_n)
+        )(g)
+    if g.ndim != 2:
+        raise ValueError(f"consensus_gather: g must be (m, n), got {g.shape}")
+    m = g.shape[0]
+    if idx.shape[0] != m:
+        raise ValueError(
+            f"consensus_gather: idx must be ({m}, k_max) for g {g.shape}, "
+            f"got {idx.shape}"
+        )
+    w_arr = jnp.asarray(w, jnp.float32)
+    if w_arr.shape != idx.shape:
+        raise ValueError(
+            f"consensus_gather: w must match idx {idx.shape}, got {w_arr.shape}"
+        )
+    if b == "jnp":
+        g32 = g.astype(jnp.float32)
+        k_max = idx.shape[1]
+        out = w_arr[:, 0, None] * jnp.take(g32, idx[:, 0], axis=0)
+        for k in range(1, k_max):
+            out = out + w_arr[:, k, None] * jnp.take(g32, idx[:, k], axis=0)
+        return out.astype(g.dtype)
+    from repro.kernels.consensus_gather import consensus_gather_pallas
+
+    return consensus_gather_pallas(
+        g, idx, w_arr, block_n=block_n, interpret=(b == "interpret")
+    )
+
+
 def row_mean(g, *, backend: str = "auto", block_n: int = 4096):
     """Server averaging (eq. 11) on the flat carry: mean over the agent axis.
 
@@ -616,6 +681,16 @@ def _primitive_hot_path(prim: str, backend: str) -> Callable[[], HotPathEntry]:
                 fn=lambda g, mix: consensus_mix(g, mix, backend=backend),
                 args=(buf(m, n), buf(m, m)),
             )
+        if prim == "consensus_gather":
+            k_max = 3
+            return HotPathEntry(
+                fn=lambda g, idx, w: consensus_gather(g, idx, w, backend=backend),
+                args=(
+                    buf(m, n),
+                    jax.ShapeDtypeStruct((m, k_max), jnp.int32),
+                    buf(m, k_max),
+                ),
+            )
         if prim == "row_mean":
             return HotPathEntry(
                 fn=lambda g: row_mean(g, backend=backend),
@@ -632,7 +707,8 @@ def _primitive_hot_path(prim: str, backend: str) -> Callable[[], HotPathEntry]:
 
 
 DISPATCH_PRIMITIVES = (
-    "decay_accum", "scale_rows", "consensus_mix", "row_mean", "topk_scatter",
+    "decay_accum", "scale_rows", "consensus_mix", "consensus_gather",
+    "row_mean", "topk_scatter",
 )
 
 # The pallas backend proper needs a TPU to lower; jnp + interpret cover both

@@ -54,7 +54,7 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.core.strategies import ConsensusStrategy, DecayStrategy
-from repro.core.topology import laplacian
+from repro.core.topology import laplacian, neighbor_weights
 from repro.core.variation import mask_from_taus, validate_a2
 
 
@@ -103,12 +103,21 @@ def override_eps(cfg, eps):
 
     The topology (and hence every shape) stays static; only the matrix
     *values* trace. ``rounds`` is a static int, so the fused power unrolls.
+    On a sparse-path strategy the only eps-dependent table is the ``(m,
+    k_max)`` edge-weight array, retabulated traced via ``neighbor_weights``
+    (same elementwise fp32 ops as the dense ``I - eps*La`` rebuild, gathered)
+    — no dense matrix ever materialises.
     """
     strat = cfg.strategy
     if not isinstance(strat, ConsensusStrategy):
         raise TypeError(
             f"'eps' axis needs a ConsensusStrategy base, got {type(strat).__name__}"
         )
+    if strat.sparse:
+        strat = _strategy_copy(
+            strat, nl_w=neighbor_weights(strat.nl, eps), eps=eps
+        )
+        return dataclasses.replace(cfg, strategy=strat)
     lap = jnp.asarray(laplacian(strat.topo), jnp.float32)
     p = jnp.eye(strat.m, dtype=jnp.float32) - jnp.asarray(eps, jnp.float32) * lap
     p_e = p
@@ -247,6 +256,73 @@ def compression_axis(points, name: str = "compression"):
 
         labelled.append((label, swap))
     return StaticAxis(name, tuple(labelled))
+
+
+def algebraic_connectivity_axis(
+    m: int,
+    families=None,
+    seed: int = 0,
+    eps_frac: float = 0.5,
+    name: str = "algebraic_connectivity",
+    sparse=None,
+):
+    """Static sweep axis over graph families at fixed m: the lambda_2 figure.
+
+    Each point builds one ``repro.core.topology.GRAPH_FAMILIES`` member
+    (``families`` optionally restricts/orders the labels), labels it with its
+    exact algebraic connectivity ``mu2``, and swaps the base config's
+    ConsensusStrategy for one on that topology with ``eps = eps_frac / Delta``
+    (the per-family step size that keeps the paper's 0 < eps < 1/Delta bound
+    valid as the degree changes). Static, not vmapped: the neighbor-list
+    shapes, mixing tables and even the dense/sparse path selection differ per
+    family, so the runner compiles once per point. ``sparse`` forces the path
+    (None = the strategy's density auto-rule per family).
+    """
+    from repro.core.topology import GRAPH_FAMILIES, mu2
+    from repro.sweep.spec import StaticAxis
+
+    if not (0.0 < eps_frac < 1.0):
+        raise ValueError(f"eps_frac={eps_frac} must be in (0, 1)")
+    labels = list(families) if families is not None else list(GRAPH_FAMILIES)
+    points = []
+    for label in labels:
+        try:
+            build = GRAPH_FAMILIES[label]
+        except KeyError:
+            raise KeyError(
+                f"unknown graph family {label!r}; have {sorted(GRAPH_FAMILIES)}"
+            ) from None
+        topo = build(m, seed)
+        lam2 = mu2(topo)
+
+        def swap(cfg, _topo=topo, _sparse=sparse):
+            strat = cfg.strategy
+            if not isinstance(strat, ConsensusStrategy):
+                raise TypeError(
+                    "'algebraic_connectivity' axis needs a ConsensusStrategy "
+                    f"base, got {type(strat).__name__}"
+                )
+            if strat.m != _topo.m:
+                raise ValueError(
+                    f"axis topology has m={_topo.m} but the base strategy "
+                    f"has m={strat.m}"
+                )
+            new = ConsensusStrategy(
+                tau=strat.tau,
+                topo=_topo,
+                eps=eps_frac / _topo.max_degree,
+                rounds=strat.rounds,
+                taus=strat.taus,
+                fused=strat.fused,
+                backend=strat.backend,
+                sparse=_sparse,
+            )
+            if strat.comm.enabled:
+                new = new.with_comm(strat.comm)
+            return dataclasses.replace(cfg, strategy=new)
+
+        points.append((f"{label}(mu2={lam2:.3f})", swap))
+    return StaticAxis(name, tuple(points))
 
 
 def apply_overrides(cfg, names, values):

@@ -557,3 +557,100 @@ def test_dispatch_decay_accum_rejects_bad_d_rank():
 def test_dispatch_consensus_mix_rejects_bad_shapes():
     with pytest.raises(ValueError):
         dispatch.consensus_mix(jnp.zeros((4, 8)), jnp.eye(6), backend="jnp")
+
+
+# --- consensus_gather (sparse neighbor-list gossip) ---------------------------
+
+
+def _knn_inputs(m=12, k=4, n=101, eps_frac=0.5, seed=4):
+    topo = T.knn_ring(m, k)
+    nl = T.neighbor_list(topo)
+    p = T.mixing_matrix(topo, eps_frac / topo.max_degree)
+    w = T.neighbor_weights_from_matrix(nl, p)
+    g = jax.random.normal(jax.random.key(seed), (m, n))
+    return topo, nl, p, w, g
+
+
+def test_consensus_gather_interpret_matches_jnp():
+    _, nl, _, w, g = _knn_inputs(n=101)  # non-multiple of block_n
+    a = dispatch.consensus_gather(g, nl.idx, w, backend="jnp")
+    b = dispatch.consensus_gather(g, nl.idx, w, backend="interpret", block_n=32)
+    np.testing.assert_allclose(a, b, atol=1e-6)
+
+
+def test_consensus_gather_bitwise_vs_full_list_reference():
+    """The parity contract: the k-sparse sequential FMA chain is bit-identical
+    (eager) to evaluating the full (k_max = m) list in index order — padding
+    adds 0.0 * row, a floating-point no-op."""
+    topo, nl, p, w, g = _knn_inputs()
+    full = T.neighbor_list(topo, k_max=topo.m)
+    w_full = T.neighbor_weights_from_matrix(full, p)
+    with jax.disable_jit():
+        sparse = dispatch.consensus_gather(g, nl.idx, w, backend="jnp")
+        ref = dispatch.consensus_gather(g, full.idx, w_full, backend="jnp")
+    np.testing.assert_array_equal(np.asarray(sparse), np.asarray(ref))
+
+
+def test_consensus_gather_matches_dense_mix():
+    topo, nl, p, w, g = _knn_inputs()
+    sparse = dispatch.consensus_gather(g, nl.idx, w, backend="jnp")
+    dense = dispatch.consensus_mix(g, jnp.asarray(p, jnp.float32), backend="jnp")
+    np.testing.assert_allclose(sparse, dense, atol=1e-6)
+
+
+@pytest.mark.parametrize("dtype", [jnp.bfloat16, jnp.float16])
+def test_consensus_gather_low_precision_accumulates_fp32(dtype):
+    _, nl, _, w, g = _knn_inputs(n=64)
+    g = g.astype(dtype)
+    a = dispatch.consensus_gather(g, nl.idx, w, backend="jnp")
+    b = dispatch.consensus_gather(g, nl.idx, w, backend="interpret", block_n=32)
+    assert a.dtype == dtype
+    np.testing.assert_array_equal(
+        np.asarray(a, np.float32), np.asarray(b, np.float32)
+    )
+
+
+def test_consensus_gather_vmaps_shared_and_per_run_weights():
+    _, nl, p, w, g = _knn_inputs(n=33)
+    gs = jnp.stack([g, 2.0 * g, -g])
+    shared = dispatch.consensus_gather(gs, nl.idx, w, backend="jnp")
+    for s in range(3):
+        np.testing.assert_array_equal(
+            np.asarray(shared[s]),
+            np.asarray(dispatch.consensus_gather(gs[s], nl.idx, w, backend="jnp")),
+        )
+    ws = jnp.stack([w, 0.5 * w, jnp.zeros_like(w)])
+    per_run = dispatch.consensus_gather(gs, nl.idx, ws, backend="jnp")
+    for s in range(3):
+        np.testing.assert_array_equal(
+            np.asarray(per_run[s]),
+            np.asarray(
+                dispatch.consensus_gather(gs[s], nl.idx, ws[s], backend="jnp")
+            ),
+        )
+
+
+def test_consensus_gather_padded_rows_contribute_nothing():
+    topo, nl, p, w, g = _knn_inputs()
+    wide = T.neighbor_list(topo, k_max=nl.k_max + 3)
+    w_wide = T.neighbor_weights_from_matrix(wide, p)
+    with jax.disable_jit():
+        tight = dispatch.consensus_gather(g, nl.idx, w, backend="jnp")
+        padded = dispatch.consensus_gather(g, wide.idx, w_wide, backend="jnp")
+    np.testing.assert_array_equal(np.asarray(tight), np.asarray(padded))
+
+
+def test_consensus_gather_rejects_bad_shapes():
+    _, nl, _, w, g = _knn_inputs()
+    with pytest.raises(ValueError):
+        dispatch.consensus_gather(g, nl.idx[:-1], w[:-1], backend="jnp")
+    with pytest.raises(ValueError):
+        dispatch.consensus_gather(g, nl.idx, w[:, :-1], backend="jnp")
+    with pytest.raises(ValueError):
+        dispatch.consensus_gather(g, nl.idx.astype(jnp.float32), w, backend="jnp")
+    with pytest.raises(ValueError):
+        dispatch.consensus_gather(g[0], nl.idx, w, backend="jnp")
+    from repro.kernels.consensus_gather import consensus_gather_pallas
+
+    with pytest.raises(ValueError):
+        consensus_gather_pallas(g, jnp.asarray(nl.idx), jnp.asarray(w), block_n=0)

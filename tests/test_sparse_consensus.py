@@ -1,0 +1,353 @@
+"""Sparse neighbor-list consensus path: parity, selection rule, power cache.
+
+Pins the DESIGN.md §14 contracts at strategy level: the sparse O(m*k) gossip
+realisation is bit-identical (eager jnp) to the full-list sequential
+reference and ulp-close to the fused dense tables; the density auto-rule
+never flips existing small-m configs; the mixing-power cache returns
+identical arrays (no retrace fodder) and stays lazy about P^E on the sparse
+path. The hypothesis section re-states the parity/padding contracts as
+properties over every registered graph family (skips when hypothesis is
+absent — the pinned 0.4.37 CI leg and the container).
+"""
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import topology as T
+from repro.core.strategies import (
+    _POWER_CACHE,
+    SPARSE_DENSITY_THRESHOLD,
+    SPARSE_MIN_AGENTS,
+    ConsensusStrategy,
+    _topology_digest,
+    clear_power_cache,
+    make_strategy,
+    mixing_powers,
+)
+from repro.kernels import dispatch
+
+try:
+    import hypothesis  # noqa: F401
+
+    HAVE_HYPOTHESIS = True
+except ImportError:
+    HAVE_HYPOTHESIS = False
+
+needs_hypothesis = pytest.mark.skipif(
+    not HAVE_HYPOTHESIS, reason="hypothesis not installed"
+)
+
+
+def _pair(topo, *, tau=3, eps_frac=0.5, rounds=1):
+    """The same consensus config realised dense and sparse."""
+    eps = eps_frac / topo.max_degree
+    dense = ConsensusStrategy(tau=tau, topo=topo, eps=eps, rounds=rounds,
+                              sparse=False)
+    sp = ConsensusStrategy(tau=tau, topo=topo, eps=eps, rounds=rounds,
+                           sparse=True)
+    return dense, sp
+
+
+def _g(m, n=37, seed=0):
+    return jax.random.normal(jax.random.key(seed), (m, n))
+
+
+# --- dense/sparse parity ------------------------------------------------------
+
+
+@pytest.mark.parametrize("rounds", [1, 2, 3])
+def test_sparse_flat_transform_close_to_dense(rounds):
+    topo = T.knn_ring(16, 4)
+    dense, sp = _pair(topo, rounds=rounds)
+    g = _g(16)
+    for offset in (0, 2):
+        a = dense.flat_transform(g, offset, backend="jnp")
+        b = sp.flat_transform(g, offset, backend="jnp")
+        np.testing.assert_allclose(a, b, atol=1e-5)
+
+
+def test_sparse_flat_transform_bitwise_vs_full_list_reference():
+    """Eager contract: mask then E full-list sequential gossip rounds is the
+    'dense P @ x evaluated in index order' reference — the sparse path must
+    reproduce it bit-for-bit, not just closely."""
+    topo = T.knn_ring(16, 4)
+    _, sp = _pair(topo, rounds=2)
+    full = T.neighbor_list(topo, k_max=topo.m)
+    p64, _, _ = mixing_powers(topo, sp.eps, 2, need_power=False)
+    w_full = T.neighbor_weights_from_matrix(full, p64)
+    g = _g(16)
+    with jax.disable_jit():
+        got = sp.flat_transform(g, 1, backend="jnp")
+        ref = dispatch.scale_rows(g, sp.weight(1), backend="jnp")
+        for _ in range(2):
+            ref = dispatch.consensus_gather(
+                ref, full.idx, w_full, backend="jnp"
+            )
+    np.testing.assert_array_equal(np.asarray(got), np.asarray(ref))
+
+
+def test_sparse_interpret_leg_matches_eager_jnp():
+    topo = T.knn_ring(16, 4)
+    _, sp = _pair(topo, rounds=2)
+    g = _g(16)
+    with jax.disable_jit():
+        eager = sp.flat_transform(g, 0, backend="jnp")
+    kern = sp.flat_transform(g, 0, backend="interpret")
+    np.testing.assert_allclose(
+        np.asarray(eager), np.asarray(kern), atol=1e-6
+    )
+
+
+def test_sparse_with_mask_matches_dense_masked():
+    topo = T.knn_ring(16, 4)
+    dense, sp = _pair(topo, tau=4)
+    mask = np.ones((16, 4), bool)
+    mask[3, 1:] = False  # agent 3 goes quiet after offset 0
+    mask[8, 2:] = False
+    g = _g(16)
+    dm, sm = dense.with_mask(mask), sp.with_mask(mask)
+    assert sm.sparse
+    for offset in range(4):
+        np.testing.assert_allclose(
+            dm.flat_transform(g, offset, backend="jnp"),
+            sm.flat_transform(g, offset, backend="jnp"),
+            atol=1e-5,
+        )
+
+
+def test_sparse_tree_transform_matches_flat():
+    topo = T.knn_ring(16, 4)
+    _, sp = _pair(topo)
+    g = _g(16, n=12)
+    tree = {"w": g.reshape(16, 3, 4)}
+    out = sp.transform(tree, 0)
+    flat = sp.flat_transform(g, 0, backend="jnp")
+    np.testing.assert_allclose(
+        np.asarray(out["w"]).reshape(16, 12), np.asarray(flat), atol=1e-6
+    )
+
+
+def test_sparse_preserves_mean():
+    """P doubly stochastic: the sparse realisation keeps the fleet mean too."""
+    topo = T.knn_ring(16, 4)
+    _, sp = _pair(topo, rounds=3)
+    g = _g(16)
+    out = sp.flat_transform(g, 0, backend="jnp")
+    np.testing.assert_allclose(
+        np.asarray(out).mean(0), np.asarray(g).mean(0), atol=1e-5
+    )
+
+
+# --- auto-selection rule ------------------------------------------------------
+
+
+def test_sparse_auto_selection_rule():
+    eps = 0.1
+    # sparse: low density AND m >= floor
+    big_sparse = ConsensusStrategy(tau=2, topo=T.knn_ring(64, 4), eps=eps)
+    assert big_sparse.sparse and "sparse" in big_sparse.name
+    # small fleets stay dense regardless of density (existing configs)
+    small = ConsensusStrategy(tau=2, topo=T.knn_ring(48, 4), eps=eps)
+    assert not small.sparse
+    # dense graphs stay dense regardless of m
+    full = ConsensusStrategy(tau=2, topo=T.fully_connected(70), eps=1e-3)
+    assert not full.sparse
+    # explicit override beats the rule both ways
+    assert ConsensusStrategy(tau=2, topo=T.knn_ring(48, 4), eps=eps,
+                             sparse=True).sparse
+    assert not ConsensusStrategy(tau=2, topo=T.knn_ring(64, 4), eps=eps,
+                                 sparse=False).sparse
+    assert T.density(T.knn_ring(64, 4)) <= SPARSE_DENSITY_THRESHOLD
+    assert 48 < SPARSE_MIN_AGENTS <= 64
+
+
+def test_make_strategy_passes_sparse_through():
+    s = make_strategy("consensus", tau=2, topo=T.knn_ring(12, 4), eps=0.1,
+                      rounds=1, m=12, sparse=True)
+    assert s.sparse
+    assert s.nl is not None and s.nl_w is not None
+    assert s.p_e_masked is None  # dense folded tables never built
+
+
+# --- mixing-power cache -------------------------------------------------------
+
+
+def test_power_cache_returns_identical_arrays():
+    clear_power_cache()
+    topo = T.knn_ring(16, 4)
+    p64_a, p_a, pe_a = mixing_powers(topo, 0.1, 2)
+    p64_b, p_b, pe_b = mixing_powers(topo, 0.1, 2)
+    assert p64_a is p64_b and p_a is p_b and pe_a is pe_b
+    # a different eps or round count is a different entry
+    p64_c, _, _ = mixing_powers(topo, 0.05, 2)
+    assert p64_c is not p64_a
+    _, _, pe_d = mixing_powers(topo, 0.1, 3)
+    assert pe_d is not pe_a
+
+
+def test_power_cache_lazy_p_e_on_sparse_path():
+    clear_power_cache()
+    topo = T.knn_ring(64, 4)
+    sp = ConsensusStrategy(tau=2, topo=topo, eps=0.1, rounds=2)
+    assert sp.sparse
+    key = (_topology_digest(topo), topo.m, 0.1, 2)
+    assert _POWER_CACHE[key]["p_e"] is None  # never powered for sparse
+    # a dense request on the same key fills it in place
+    _, _, pe = mixing_powers(topo, 0.1, 2)
+    assert pe is not None and _POWER_CACHE[key]["p_e"] is pe
+
+
+def test_power_cache_is_bounded_lru():
+    clear_power_cache()
+    topo = T.ring(6)
+    for i in range(40):
+        mixing_powers(topo, 0.01 + 0.002 * i, 1, need_power=False)
+    from repro.core.strategies import _POWER_CACHE_MAXSIZE
+
+    assert len(_POWER_CACHE) == _POWER_CACHE_MAXSIZE
+
+
+def test_power_cache_no_retrace_across_strategy_rebuilds():
+    """Rebuilding the same consensus config must not retrace the jitted step:
+    the cache hands back the *same* weight arrays each time."""
+    from repro.analysis.retrace import assert_max_compiles, warmup_jax
+
+    clear_power_cache()
+    topo = T.knn_ring(64, 4)
+    g = _g(64, n=16)
+    warmup_jax(g)
+
+    @jax.jit
+    def step(g_, idx, w):
+        return dispatch.consensus_gather(g_, idx, w, backend="jnp")
+
+    def run_twice():
+        outs = []
+        for _ in range(2):
+            s = ConsensusStrategy(tau=2, topo=topo, eps=0.1, rounds=1,
+                                  sparse=True)
+            outs.append(step(g_=g, idx=jnp.asarray(s.nl.idx),
+                             w=jnp.asarray(s.nl_w)))
+        return outs
+
+    outs, n = assert_max_compiles(1, run_twice)
+    np.testing.assert_array_equal(np.asarray(outs[0]), np.asarray(outs[1]))
+
+
+# --- sweep integration --------------------------------------------------------
+
+
+@dataclasses.dataclass(frozen=True)
+class _Cfg:
+    strategy: object
+
+
+def test_override_eps_sparse_rebuilds_only_weights():
+    from repro.sweep.overrides import override_eps
+
+    topo = T.knn_ring(64, 4)
+    _, sp = _pair(topo)
+    cfg = override_eps(_Cfg(sp), jnp.float32(0.08))
+    new = cfg.strategy
+    assert new.sparse and new.nl is sp.nl
+    ref = np.asarray(T.neighbor_weights(sp.nl, 0.08))
+    np.testing.assert_array_equal(np.asarray(new.nl_w), ref)
+    g = _g(64, n=8)
+    out = new.flat_transform(g, 0, backend="jnp")
+    dense_eq = ConsensusStrategy(tau=3, topo=topo, eps=0.08, rounds=1,
+                                 sparse=False)
+    np.testing.assert_allclose(
+        np.asarray(out), np.asarray(dense_eq.flat_transform(g, 0, backend="jnp")),
+        atol=1e-5,
+    )
+
+
+def test_algebraic_connectivity_axis_swaps_topology():
+    from repro.sweep.overrides import algebraic_connectivity_axis
+
+    axis = algebraic_connectivity_axis(12, families=("chain", "knn4", "full"))
+    assert [lbl.split("(")[0] for lbl, _ in axis.points] == [
+        "chain", "knn4", "full"
+    ]
+    base = _Cfg(ConsensusStrategy(tau=2, topo=T.ring(12), eps=0.1, rounds=2))
+    for (label, swap), family in zip(axis.points, ("chain", "knn4", "full")):
+        cfg = swap(base)
+        s = cfg.strategy
+        assert s.topo.name.startswith(family[:4]) or family == "knn4"
+        assert s.m == 12 and s.rounds == 2 and s.tau == 2
+        assert np.isclose(s.eps, 0.5 / s.topo.max_degree)
+        assert f"mu2={T.mu2(s.topo):.3f}" in label
+    with pytest.raises(KeyError):
+        algebraic_connectivity_axis(12, families=("nope",))
+    with pytest.raises(ValueError):
+        algebraic_connectivity_axis(12, eps_frac=1.5)
+
+
+def test_algebraic_connectivity_axis_mismatched_m_raises():
+    from repro.sweep.overrides import algebraic_connectivity_axis
+
+    axis = algebraic_connectivity_axis(12, families=("ring",))
+    base = _Cfg(ConsensusStrategy(tau=2, topo=T.ring(7), eps=0.1, rounds=1))
+    with pytest.raises(ValueError, match="m=12"):
+        axis.points[0][1](base)
+
+
+# --- hypothesis properties (skip-if-absent) -----------------------------------
+
+if HAVE_HYPOTHESIS:
+    from hypothesis import given, settings, strategies as st
+
+    SETTINGS = settings(max_examples=25, deadline=None)
+
+    @needs_hypothesis
+    @SETTINGS
+    @given(
+        family=st.sampled_from(sorted(T.GRAPH_FAMILIES)),
+        m=st.integers(10, 20),  # >= 10 so knn8 (k=8 < m) is always valid
+        seed=st.integers(0, 3),
+        eps_frac=st.floats(0.05, 0.95),
+    )
+    def test_property_sparse_bitwise_equals_full_list(family, m, seed, eps_frac):
+        """For every registered family: the k-sparse gossip step equals the
+        full-list (k_max = m) sequential evaluation of P @ x bit-for-bit on
+        the eager jnp path."""
+        topo = T.GRAPH_FAMILIES[family](m, seed)
+        eps = eps_frac / topo.max_degree
+        p = T.mixing_matrix(topo, eps)
+        nl = T.neighbor_list(topo)
+        full = T.neighbor_list(topo, k_max=m)
+        w = T.neighbor_weights_from_matrix(nl, p)
+        w_full = T.neighbor_weights_from_matrix(full, p)
+        g = jax.random.normal(jax.random.key(seed), (m, 23))
+        with jax.disable_jit():
+            sparse = dispatch.consensus_gather(g, nl.idx, w, backend="jnp")
+            ref = dispatch.consensus_gather(g, full.idx, w_full, backend="jnp")
+        np.testing.assert_array_equal(np.asarray(sparse), np.asarray(ref))
+
+    @needs_hypothesis
+    @SETTINGS
+    @given(
+        family=st.sampled_from(sorted(T.GRAPH_FAMILIES)),
+        m=st.integers(10, 20),  # >= 10 so knn8 (k=8 < m) is always valid
+        seed=st.integers(0, 3),
+        extra=st.integers(1, 5),
+    )
+    def test_property_padding_contributes_exactly_zero(family, m, seed, extra):
+        """Widening k_max with pure padding never changes a single bit."""
+        topo = T.GRAPH_FAMILIES[family](m, seed)
+        p = T.mixing_matrix(topo, 0.3 / topo.max_degree)
+        nl = T.neighbor_list(topo)
+        wide = T.neighbor_list(topo, k_max=nl.k_max + extra)
+        w = T.neighbor_weights_from_matrix(nl, p)
+        w_wide = T.neighbor_weights_from_matrix(wide, p)
+        assert np.all(w_wide[~wide.valid] == 0.0)
+        g = jax.random.normal(jax.random.key(seed + 100), (m, 17))
+        with jax.disable_jit():
+            tight = dispatch.consensus_gather(g, nl.idx, w, backend="jnp")
+            padded = dispatch.consensus_gather(
+                g, wide.idx, w_wide, backend="jnp"
+            )
+        np.testing.assert_array_equal(np.asarray(tight), np.asarray(padded))

@@ -55,3 +55,137 @@ def test_spectral_gap_factor_in_unit_interval():
     eps = 0.9 / topo.max_degree
     f = T.spectral_gap_factor(topo, eps, 2)
     assert 0.0 < f < 1.0
+
+
+# --- sparse graph families (lambda_2 axis) -----------------------------------
+
+
+def test_knn_ring_structure_and_closed_form_mu2():
+    topo = T.knn_ring(12, 4)
+    assert topo.is_connected()
+    assert np.all(topo.degrees == 4)
+    assert np.isclose(T.mu2_knn_ring(12, 4), T.mu2(topo), atol=1e-9)
+
+
+def test_knn_ring_rejects_bad_k():
+    for m, k in ((10, 3), (10, 0), (6, 6), (6, 8)):
+        with pytest.raises(ValueError):
+            T.knn_ring(m, k)
+        with pytest.raises(ValueError):
+            T.knn_ring_neighbors(m, k)
+
+
+def test_watts_strogatz_preserves_edge_budget():
+    topo = T.watts_strogatz(20, 4, 0.3, seed=1)
+    assert topo.is_connected()
+    # rewiring moves edges, never adds or removes them
+    assert topo.adj.sum() == T.knn_ring(20, 4).adj.sum()
+    with pytest.raises(ValueError):
+        T.watts_strogatz(20, 4, 1.5)
+
+
+def test_erdos_renyi_connected_and_p1_is_full():
+    topo = T.erdos_renyi(14, 0.5, seed=0)
+    assert topo.is_connected()
+    assert np.array_equal(
+        T.erdos_renyi(9, 1.0).adj, T.fully_connected(9).adj
+    )
+    with pytest.raises(ValueError):
+        T.erdos_renyi(9, 0.0)
+
+
+def test_random_families_exhaust_retries_with_clear_error():
+    """Satellite regression: bounded reseed-retry raises, never hangs or
+    silently hands a disconnected graph to the consensus layer (A4)."""
+    with pytest.raises(RuntimeError, match="connected"):
+        T.erdos_renyi(40, 0.01, seed=0)  # far below ln(m)/m threshold
+    try:
+        T.erdos_renyi(40, 0.01, seed=0)
+    except RuntimeError as e:
+        msg = str(e)
+        assert "reseed" in msg and "m=40" in msg and "A4" in msg
+
+
+def test_graph_families_registry_spans_connectivity():
+    m = 12
+    mu2s = {}
+    for label, build in T.GRAPH_FAMILIES.items():
+        topo = build(m, 0)
+        assert topo.is_connected(), label
+        assert topo.m == m, label
+        mu2s[label] = T.mu2(topo)
+    assert mu2s["chain"] < mu2s["knn4"] < mu2s["full"]
+    assert np.isclose(mu2s["full"], m, atol=1e-9)
+
+
+def test_density_extremes():
+    assert np.isclose(T.density(T.fully_connected(8)), 1.0)
+    assert T.density(T.chain(8)) == pytest.approx(2 * 7 / (8 * 7))
+
+
+# --- NeighborList layout contract --------------------------------------------
+
+
+def test_neighbor_list_reconstructs_mixing_matrix():
+    topo = T.random_regularish(10, 3, 4, seed=3)
+    eps = 0.9 / topo.max_degree
+    p = T.mixing_matrix(topo, eps)
+    nl = T.neighbor_list(topo)
+    w = T.neighbor_weights_from_matrix(nl, p)
+    dense = np.zeros((10, 10), np.float32)
+    np.add.at(dense, (np.arange(10)[:, None], nl.idx), w)
+    assert np.array_equal(dense, p.astype(np.float32))
+
+
+def test_neighbor_list_padding_contract():
+    nl = T.neighbor_list(T.chain(6), k_max=5)
+    assert nl.k_max == 5
+    rows = np.arange(6)[:, None]
+    # padding gathers the agent's own row...
+    assert np.all(nl.idx[~nl.valid] == np.broadcast_to(rows, nl.idx.shape)[~nl.valid])
+    # ...with weight exactly 0.0
+    p = T.mixing_matrix(T.chain(6), 0.3)
+    w = T.neighbor_weights_from_matrix(nl, p)
+    assert np.all(w[~nl.valid] == 0.0)
+    # valid prefix is strictly ascending and includes self
+    for i in range(6):
+        v = nl.idx[i, nl.valid[i]]
+        assert np.all(np.diff(v) > 0) and i in v
+    with pytest.raises(ValueError):
+        T.neighbor_list(T.chain(6), k_max=1)  # below max closed neighborhood
+
+
+def test_neighbor_list_invariants_enforced():
+    good = T.neighbor_list(T.chain(5), k_max=4)  # padded layout
+    bad_idx = good.idx.copy()
+    assert not good.valid[0, -1]
+    bad_idx[0, -1] = 2  # padding no longer points at own row
+    with pytest.raises(ValueError, match="own row"):
+        T.NeighborList("bad", bad_idx, good.valid, good.degrees)
+    bad_valid = good.valid.copy()
+    # idx[0] = [0, 1, 0, 0]: dropping slot 0 leaves a hole before slot 1
+    # while every invalid slot still points at row 0 (own row)
+    bad_valid[0] = [False, True, False, False]
+    with pytest.raises(ValueError, match="prefix"):
+        T.NeighborList("bad", good.idx, bad_valid, good.degrees)
+    with pytest.raises(ValueError, match="degree"):
+        T.NeighborList("bad", good.idx, good.valid, good.degrees + 1)
+
+
+def test_knn_ring_neighbors_matches_dense_export():
+    dense = T.neighbor_list(T.knn_ring(16, 4))
+    analytic = T.knn_ring_neighbors(16, 4)
+    assert np.array_equal(dense.idx, analytic.idx)
+    assert np.array_equal(dense.valid, analytic.valid)
+    assert np.array_equal(dense.degrees, analytic.degrees)
+
+
+def test_neighbor_weights_traced_matches_matrix_gather():
+    import jax.numpy as jnp
+
+    topo = T.knn_ring(9, 4)
+    eps = 0.5 / topo.max_degree
+    nl = T.neighbor_list(topo)
+    from_matrix = T.neighbor_weights_from_matrix(nl, T.mixing_matrix(topo, eps))
+    traced = np.asarray(T.neighbor_weights(nl, jnp.float32(eps)))
+    assert np.array_equal(traced, from_matrix)
