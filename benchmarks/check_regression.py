@@ -3,11 +3,11 @@
 
   PYTHONPATH=src python -m benchmarks.check_regression \
       [--baseline benchmarks/baselines/bench_baseline.json] \
-      [--bench-dir experiments/bench] [--update]
+      [--bench-dir experiments/bench] [--select FILE ...] [--update]
 
 The baseline file lists tracked metrics, each addressed by a bench JSON file
 plus a '/'-separated path into it (integer segments index lists, negative
-indices allowed). Three check kinds:
+indices allowed). Check kinds:
 
 * ``value`` + ``rtol`` (+ optional ``atol``) — numeric equivalence band for
   statistics that should be stable across runs (seed-averaged grad norms).
@@ -15,10 +15,17 @@ indices allowed). Three check kinds:
   sweep's speedup over the Python seed-loop; the flat-carry speedup). Kept
   loose: CI machines are noisy, the gate is for regressions, not records.
 * ``max`` — upper bound (e.g. vmapped-vs-loop numeric deviation).
+* ``probe`` — a hardware-dependent probe's status string: ``measured``
+  passes, ``skipped`` is a WARNING (printed, and appended to the GitHub job
+  summary when ``GITHUB_STEP_SUMMARY`` is set) rather than a silent pass or
+  a failure — anything else fails.
 
-Exit status 1 if any tracked metric is missing or out of band — this is what
-fails the ``bench-smoke`` CI job. ``--update`` rewrites the baseline's
-``value`` fields from the current bench output (bounds are left alone).
+``--select`` restricts the run to entries of the named bench file(s) — how
+the second CI matrix leg gates only the benches it ran. Exit status 1 if any
+tracked metric is missing or out of band — this is what fails the
+``bench-smoke`` CI job. ``--update`` rewrites the baseline's ``value``
+fields from the current bench output (bounds are left alone; incompatible
+with ``--select`` — a partial refresh would mix stale and fresh values).
 """
 from __future__ import annotations
 
@@ -61,32 +68,84 @@ def check_metric(entry: dict, cur: float):
     return False, "baseline entry has no value/min/max"
 
 
+def check_probe(status: str):
+    """Probe entries: (ok, warn, detail) from the recorded status string."""
+    if status == "measured":
+        return True, False, "probe measured"
+    if status == "skipped":
+        return True, True, "probe skipped on this runner"
+    return False, False, f"unexpected probe status {status!r}"
+
+
+def append_job_summary(lines) -> None:
+    """Surface warnings in the GitHub Actions job summary, when available."""
+    path = os.environ.get("GITHUB_STEP_SUMMARY")
+    if not path or not lines:
+        return
+    with open(path, "a") as f:
+        f.write("### bench probe warnings\n\n")
+        for line in lines:
+            f.write(f"- {line}\n")
+
+
 def main() -> int:
     ap = argparse.ArgumentParser()
     ap.add_argument("--baseline", default=DEFAULT_BASELINE)
     ap.add_argument("--bench-dir", default="experiments/bench")
+    ap.add_argument("--select", action="append", default=None,
+                    metavar="FILE",
+                    help="only check entries of this bench JSON file "
+                         "(repeatable); default: every tracked entry")
     ap.add_argument("--update", action="store_true",
                     help="rewrite baseline 'value' fields from current output")
     args = ap.parse_args()
 
+    if args.update and args.select:
+        print("# --update is incompatible with --select: a partial refresh "
+              "would mix stale and fresh baseline values")
+        return 1
+
     with open(args.baseline) as f:
         baseline = json.load(f)
+
+    entries = baseline["metrics"]
+    if args.select:
+        known = {e["file"] for e in entries}
+        unknown = [f for f in args.select if f not in known]
+        if unknown:
+            print(f"# --select names no tracked entries: {unknown} "
+                  f"(have {sorted(known)})")
+            return 1
+        entries = [e for e in entries if e["file"] in set(args.select)]
 
     docs = {}
     failures = 0
     missing = 0
+    checked = 0
+    warnings = []
     print(f"{'status':8s} {'metric':60s} {'current':>12s}  constraint")
-    for entry in baseline["metrics"]:
+    for entry in entries:
         name = f"{entry['file']}:{entry['path']}"
+        is_probe = bool(entry.get("probe"))
         try:
             if entry["file"] not in docs:
                 with open(os.path.join(args.bench_dir, entry["file"])) as f:
                     docs[entry["file"]] = json.load(f)
-            cur = float(resolve(docs[entry["file"]], entry["path"]))
+            raw = resolve(docs[entry["file"]], entry["path"])
+            cur = str(raw) if is_probe else float(raw)
         except (OSError, KeyError, IndexError, ValueError, TypeError) as e:
             print(f"{'MISSING':8s} {name:60s} {'-':>12s}  ({e!r})")
             failures += 1
             missing += 1
+            continue
+        checked += 1
+        if is_probe:
+            ok, warn, detail = check_probe(cur)
+            status = "SKIP" if warn else ("ok" if ok else "FAIL")
+            print(f"{status:8s} {name:60s} {cur:>12s}  {detail}")
+            if warn:
+                warnings.append(f"{name}: {detail}")
+            failures += 0 if ok else 1
             continue
         if args.update and "value" in entry:
             entry["value"] = cur
@@ -94,6 +153,10 @@ def main() -> int:
         status = "ok" if ok else "FAIL"
         print(f"{status:8s} {name:60s} {cur:12.6g}  {detail}")
         failures += 0 if ok else 1
+
+    for line in warnings:
+        print(f"# WARNING {line}")
+    append_job_summary(warnings)
 
     if args.update:
         if missing:
@@ -110,7 +173,8 @@ def main() -> int:
     if failures:
         print(f"# {failures} tracked metric(s) out of band vs {args.baseline}")
         return 1
-    print(f"# all {len(baseline['metrics'])} tracked metrics within tolerance")
+    print(f"# all {checked} tracked metrics within tolerance"
+          + (f" ({len(warnings)} probe warning(s))" if warnings else ""))
     return 0
 
 

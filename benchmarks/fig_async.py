@@ -1,0 +1,181 @@
+"""Async federation bench: utility-vs-bytes, sync VPA vs async FedBuff.
+
+Runs the fig4 geometry (m=7, tau=15) under the ``repro.core.async_fed``
+staleness layer: one vmapped ``delay`` axis sweeps the arrival-delay
+distributions (zero-delay / deterministic lag / geometric / heavy-tail) in a
+single compile, against the synchronous VPA baseline. Every async point's
+wire bytes come from the arrival-aware ledger — only arrived replicas
+uplink — so the figure reads "how much convergence does each byte buy once
+the server stops waiting for stragglers".
+
+Tracked by the CI bench-regression gate (both JAX legs):
+
+* ``total_bytes`` / ``arrivals`` per point — exact host-side ledger
+  arithmetic (rtol 0), independent of device numerics;
+* ``async/zero_delay_bitwise_dev`` — the sync-equivalence contract, pinned
+  at exactly 0.0: the zero-delay ``AsyncStrategy`` must execute the
+  synchronous driver bit-for-bit on the eager jnp path (same contract as
+  fig4's traced-mask gate, see DESIGN.md §15);
+* ``expected_grad_norm_mean`` per point — loose utility ceilings, catching
+  a convergence collapse without gating timing or cross-version noise.
+"""
+from __future__ import annotations
+
+import dataclasses
+
+import jax
+import numpy as np
+
+from benchmarks.common import (
+    emit,
+    seed_tuple,
+    sweep_config_rows,
+    write_bench_json,
+    write_csv,
+)
+from benchmarks.fmarl_bench import make_cfg
+from repro.core import make_strategy
+from repro.core.async_fed import (
+    DELAY_DISTRIBUTIONS,
+    AsyncStrategy,
+    make_schedule,
+)
+from repro.rl.fedrl import fedrl_bytes_curve, fedrl_ledger, policy_payload_elems
+from repro.sweep import SweepAxis, SweepSpec, mean_ci, run_sweep
+
+M = 7
+TAU = 15
+# (label, distribution, param): the delay families of the vmapped axis.
+# det0 is the zero-delay anchor (arrivals == sync), det1 a one-period lag,
+# geom0.5 a mean-one-period geometric, heavy1.5 an infinite-variance tail.
+DELAY_POINTS = (
+    ("det0", "deterministic", 0.0),
+    ("det1", "deterministic", 1.0),
+    ("geom0.5", "geometric", 0.5),
+    ("heavy1.5", "heavytail", 1.5),
+)
+
+
+def _zero_delay_bitwise() -> float:
+    """Bit-identity of the zero-delay async path vs the synchronous driver.
+
+    A deliberately tiny run (2 epochs, tau=3 so boundaries actually fire)
+    executed op-by-op: at zero delay every weight is exactly 1.0 and the
+    masked mean's ``m / sum(w)`` correction exactly 1.0, so the async flat
+    carry executes the same ops on the same values as the synchronous
+    driver — the deviation must be exactly 0.0, the record the CI gate pins
+    at max 0.0.
+    """
+    from repro.rl import run_fedrl
+
+    tau, epochs = 3, 2
+    cfg_sync = make_cfg(make_strategy("periodic", tau=tau, m=M), epochs=epochs)
+    n_periods = (epochs * (cfg_sync.epoch_len // cfg_sync.minibatch)) // tau
+    sched = make_schedule("deterministic", 0.0, M, n_periods,
+                          seed=cfg_sync.eval_seed)
+    cfg_async = dataclasses.replace(
+        cfg_sync, strategy=make_strategy("async", tau=tau, schedule=sched)
+    )
+    _, m_s, _ = run_fedrl(cfg_sync, jax.random.key(0))
+    _, m_a, _ = run_fedrl(cfg_async, jax.random.key(0))
+    return max(float(np.max(np.abs(m_a[k] - m_s[k]))) for k in m_s)
+
+
+def run(quick: bool = False, seeds=None) -> list[dict]:
+    seeds = seed_tuple(seeds)
+    epochs = 8 if quick else None
+    n = policy_payload_elems()
+
+    sync_cfg = make_cfg(make_strategy("periodic", tau=TAU, m=M), epochs=epochs)
+    n_updates = sync_cfg.n_epochs * (sync_cfg.epoch_len // sync_cfg.minibatch)
+    n_periods = n_updates // TAU
+
+    # The async base carries the zero-delay schedule; the delay axis redraws
+    # arrivals per point inside the trace from the same eval_seed stream, so
+    # the concrete per-point schedules rebuilt below for the ledger see the
+    # axis's exact arrival counts.
+    base_sched = make_schedule("deterministic", 0.0, M, n_periods,
+                               seed=sync_cfg.eval_seed)
+    async_cfg = dataclasses.replace(
+        sync_cfg, strategy=make_strategy("async", tau=TAU, schedule=base_sched)
+    )
+
+    res_sync = run_sweep(SweepSpec(name="fig_async_sync", base=sync_cfg,
+                                   seeds=seeds))
+    res_async = run_sweep(SweepSpec(
+        name="fig_async", base=async_cfg, seeds=seeds,
+        vmapped=(SweepAxis(
+            name="delay",
+            values=tuple(
+                (float(DELAY_DISTRIBUTIONS[dist]), float(param))
+                for _, dist, param in DELAY_POINTS
+            ),
+        ),),
+    ))
+
+    out = {
+        "schema_version": 1,
+        "quick": bool(quick),
+        "seeds": list(seeds),
+        "n_seeds": len(seeds),
+        "m": M,
+        "tau": TAU,
+        "n_periods": n_periods,
+        "payload_elems": n,
+        "points": {},
+        "curves": {},
+    }
+    rows = []
+
+    def add_point(label, cfg, metrics, idx=None):
+        entry, rws = sweep_config_rows(label, metrics, len(seeds), idx=idx)
+        bytes_curve = fedrl_bytes_curve(cfg)
+        entry["bytes"] = bytes_curve.tolist()
+        for ep, row in enumerate(rws):
+            row["bytes"] = float(bytes_curve[ep])
+        out["curves"][label] = entry
+        rows.extend(rws)
+
+        sel = metrics["server_grad_sq_norm"]
+        if idx is not None:
+            sel = sel[idx]
+        egn_m, egn_h = mean_ci(sel.mean(-1), 0)
+        ledger = fedrl_ledger(cfg)
+        total = ledger.total_bytes()
+        point = {
+            "expected_grad_norm_mean": float(egn_m),
+            "expected_grad_norm_ci_hw": float(egn_h),
+            "total_bytes": float(total),
+            "arrivals": int(ledger.c1_events),
+            # lower = fewer wire bytes per unit of achieved 1/grad-norm
+            "bytes_per_utility": float(total * egn_m),
+        }
+        out["points"][label] = point
+        emit(f"fig_async/{label}", 0.0,
+             f"grad_norm={egn_m:.4f}+-{egn_h:.4f} bytes={total:.0f} "
+             f"arrivals={ledger.c1_events}")
+        return point
+
+    sync_point = add_point("sync", sync_cfg, res_sync.metrics["base"])
+    for d, (label, dist, param) in enumerate(DELAY_POINTS):
+        sched = make_schedule(dist, param, M, n_periods,
+                              seed=sync_cfg.eval_seed)
+        cfg_pt = dataclasses.replace(
+            async_cfg,
+            strategy=AsyncStrategy(tau=TAU, schedule=sched),
+        )
+        point = add_point(label, cfg_pt, res_async.metrics["base"], idx=d)
+        point["bytes_vs_sync"] = point["total_bytes"] / sync_point["total_bytes"]
+
+    dev = _zero_delay_bitwise()
+    out["async"] = {"zero_delay_bitwise_dev": dev}
+    emit("fig_async/zero_delay_bitwise", 0.0, f"dev={dev:.2g}")
+
+    write_bench_json("fig_async", out)
+    res_async.save("experiments/sweeps")
+    write_csv("fig_async", rows)
+    return rows
+
+
+if __name__ == "__main__":
+    run()

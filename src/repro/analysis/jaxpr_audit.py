@@ -46,6 +46,7 @@ ENTRY_MODULES = (
     "repro.comm.transforms",
     "repro.rl.fedrl",
     "repro.core.fmarl",
+    "repro.core.async_fed",
     "repro.sweep.runner",
 )
 

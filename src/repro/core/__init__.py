@@ -57,13 +57,21 @@ from repro.core.strategies import (
 )
 from repro.core.fmarl import FmarlConfig, FmarlState, run_fmarl
 from repro.core.accounting import CostLedger
+from repro.core.async_fed import (
+    AsyncStrategy,
+    DelaySchedule,
+    kofm_schedule,
+    make_schedule,
+)
 
 __all__ = [
     "AggregationStrategy",
+    "AsyncStrategy",
     "ConsensusStrategy",
     "CostLedger",
     "DecayFn",
     "DecayStrategy",
+    "DelaySchedule",
     "FmarlConfig",
     "FmarlState",
     "GRAPH_FAMILIES",
@@ -83,8 +91,10 @@ __all__ = [
     "indicator_mask",
     "knn_ring",
     "knn_ring_neighbors",
+    "kofm_schedule",
     "laplacian",
     "linear_decay",
+    "make_schedule",
     "make_strategy",
     "mixing_matrix",
     "mu2",

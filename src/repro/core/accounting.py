@@ -27,31 +27,14 @@ class CostLedger:
     w2_events: int = 0
     c1_bytes: int = 0
     w1_bytes: int = 0
+    # Period boundaries billed so far. Uniform strategies never need it, but
+    # non-uniform (async/buffered) arrival schedules must know *which*
+    # periods a call covers — billing "n more periods" by multiplying a
+    # per-period average would mis-count their arrivals.
+    periods_billed: int = 0
 
-    def add_periods(self, strategy, n_periods: int,
-                    payload_elems: int | None = None) -> None:
-        per = strategy.comm_events_per_period()
-        self.c1_events += per["c1"] * n_periods
-        self.c2_events += per["c2"] * n_periods
-        self.w1_events += per["w1"] * n_periods
-        self.w2_events += per["w2"] * n_periods
-        if payload_elems is not None:
-            per_b = strategy.comm_bytes_per_event(payload_elems)
-            self.c1_bytes += per["c1"] * n_periods * per_b["c1"]
-            self.w1_bytes += per["w1"] * n_periods * per_b["w1"]
-
-    def add_partial_period(self, strategy, n_offsets: int,
-                           payload_elems: int | None = None) -> None:
-        """Bill a trailing partial period of ``n_offsets`` local steps.
-
-        Runs whose total update count is not a multiple of tau still pay for
-        the local updates (and gossip) of the unfinished period plus the
-        final aggregation read — in events and, when ``payload_elems`` is
-        given, in bytes; a no-op when ``n_offsets`` is 0.
-        """
-        if n_offsets == 0:
-            return
-        per = strategy.comm_events_partial_period(n_offsets)
+    def _add_events(self, per: dict, strategy,
+                    payload_elems: int | None) -> None:
         self.c1_events += per["c1"]
         self.c2_events += per["c2"]
         self.w1_events += per["w1"]
@@ -60,6 +43,42 @@ class CostLedger:
             per_b = strategy.comm_bytes_per_event(payload_elems)
             self.c1_bytes += per["c1"] * per_b["c1"]
             self.w1_bytes += per["w1"] * per_b["w1"]
+
+    def add_periods(self, strategy, n_periods: int,
+                    payload_elems: int | None = None) -> None:
+        """Bill ``n_periods`` further full periods.
+
+        Uniform strategies (every agent syncs each boundary) bill by the
+        closed-form per-period counts; strategies with non-uniform arrivals
+        (``uniform_sync = False``, i.e. the async path) are billed over the
+        concrete span ``[periods_billed, periods_billed + n_periods)`` of
+        their schedule, so sequential calls cover disjoint spans and sum to
+        exactly the schedule's arrival total.
+        """
+        if getattr(strategy, "uniform_sync", True):
+            per = strategy.comm_events_per_period()
+            per = {k: v * n_periods for k, v in per.items()}
+        else:
+            per = strategy.comm_events_span(self.periods_billed, n_periods)
+        self._add_events(per, strategy, payload_elems)
+        self.periods_billed += n_periods
+
+    def add_partial_period(self, strategy, n_offsets: int,
+                           payload_elems: int | None = None) -> None:
+        """Bill a trailing partial period of ``n_offsets`` local steps.
+
+        Runs whose total update count is not a multiple of tau still pay for
+        the local updates (and gossip) of the unfinished period — plus, on
+        the uniform strategies, the final every-replica aggregation read.
+        Non-uniform strategies supply their own counts: a buffered schedule
+        reaches no boundary mid-period, so its partial tail carries no
+        uplinks (the old uniform assumption billed ``m`` here regardless of
+        how many replicas actually synced). A no-op when ``n_offsets`` is 0.
+        """
+        if n_offsets == 0:
+            return
+        per = strategy.comm_events_partial_period(n_offsets)
+        self._add_events(per, strategy, payload_elems)
 
     def total_bytes(self) -> int:
         """Total wire bytes across the federated links (uplink + gossip)."""

@@ -1,0 +1,538 @@
+"""Asynchronous, staleness-aware federation: FedBuff-style buffered averaging.
+
+The paper's motivating scenario is *asynchronous* MDPs across heterogeneous
+agents, yet the base strategies sync every replica in lockstep. This module
+relaxes that: arrival delays are modelled as a traced per-agent staleness
+schedule — a ``(m, T)`` operand over the T period boundaries, same trick as
+the PR-5 tau masks, with no Python loop in any scan body — and the server
+performs buffered (FedBuff-style) aggregation over whichever replicas have
+"arrived" at each boundary.
+
+Pieces:
+
+* :func:`delay_draws` — per-(agent, period) delay draws for three pluggable
+  distribution families (deterministic lag / geometric / heavy-tail discrete
+  Pareto), selected by a *traced* distribution id so a ``(dist_id, param)``
+  2-vector sweeps as a value-only axis (``repro.sweep`` ``delay`` axis).
+* :func:`renewal_arrivals` — turns the delay draws into the ``(m, T)``
+  arrival mask and integer staleness ages via a renewal scan: an agent whose
+  last sync was ``s`` periods ago arrives once ``s`` exceeds its current
+  draw, and its contribution carries age ``s - 1`` (0 = fresh).
+* :func:`kofm_schedule` — the buffered FedBuff variant: every period exactly
+  the K *freshest* replicas (smallest effective staleness, ties by agent
+  index) are admitted; host-side generator for static schedules.
+* :func:`masked_server_step` — the masked ``row_mean``: the staleness-
+  weighted mean over the arrived replicas, built from the existing
+  ``scale_rows`` / ``row_mean`` dispatch primitives so every backend and the
+  fp32-accumulation contract carry over.
+* :class:`AsyncStrategy` — the strategy seam: at period boundary ``t`` the
+  server averages the arrivals of schedule column ``t`` weighted by a
+  staleness-decay table (the ``DecayStrategy`` weight machinery over ages
+  instead of period offsets), arrived replicas rebase onto the new server
+  reference, and non-arrivals keep training locally against their last-seen
+  reference (the ``ref`` accumulator the comm layer already threads through
+  the drivers' scan carry).
+
+Bitwise sync-equivalence contract (CI-gated at exactly 0.0): a zero-delay
+schedule makes every weight exactly 1.0 and the correction factor
+``m / sum(w)`` exactly 1.0, so the async server step executes the synchronous
+``row_mean`` bit-for-bit on the eager jnp path — see DESIGN.md §15.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.decay import DecayFn, no_decay
+from repro.core.strategies import AggregationStrategy
+from repro.core.variation import masked_update_counts, validate_a2
+from repro.kernels import dispatch
+
+# Distribution ids are part of the sweep-axis encoding: a `delay` axis point
+# is the float 2-vector (dist_id, param) — float32 carries these small ints
+# exactly, so the id can be a *traced* value selected by arithmetic.
+DELAY_DISTRIBUTIONS = {"deterministic": 0, "geometric": 1, "heavytail": 2}
+
+# fold_in tag decorrelating the delay-process uniforms from the training and
+# hetero_scale streams (which use 2026); shared by the traced sweep axis and
+# the concrete constructor so host accounting sees the axis's exact arrivals.
+_DELAY_STREAM = 2027
+
+
+def delay_axis_key(eval_seed: int):
+    """The PRNG key fixing the delay-process randomness of one config."""
+    return jax.random.fold_in(jax.random.key(eval_seed), _DELAY_STREAM)
+
+
+def delay_draws(dist_id, param, m: int, n_periods: int, key):
+    """Per-(agent, period) delay draws: ``(m, T)`` float32, values >= 0.
+
+    ``dist_id`` selects the family (may be traced — the three candidates are
+    computed from one shared uniform draw and combined with ``jnp.where``,
+    so there is no control flow to retrace):
+
+    * ``0`` deterministic — every draw is ``round(param)`` periods of lag;
+    * ``1`` geometric — failures before first success at rate ``param``
+      (``floor(log(1-u)/log(1-param))``, mean ``(1-p)/p``);
+    * ``2`` heavy-tail — discrete Pareto ``floor(u**(-1/param)) - 1`` with
+      tail index ``param`` (infinite variance for ``param <= 2``).
+
+    Draws are clipped to ``n_periods``: a delay beyond the horizon never
+    arrives within the run, so larger values are indistinguishable.
+    """
+    dist_id = jnp.asarray(dist_id)
+    param = jnp.asarray(param, jnp.float32)
+    u = jax.random.uniform(
+        key, (m, n_periods), jnp.float32, minval=1e-6, maxval=1.0 - 1e-6
+    )
+    det = jnp.floor(param + 0.5) * jnp.ones_like(u)
+    p = jnp.clip(param, 1e-4, 1.0 - 1e-4)
+    geom = jnp.floor(jnp.log1p(-u) / jnp.log1p(-p))
+    alpha = jnp.maximum(param, 1e-2)
+    heavy = jnp.floor(jnp.power(u, -1.0 / alpha)) - 1.0
+    out = jnp.where(
+        jnp.equal(dist_id, DELAY_DISTRIBUTIONS["geometric"]), geom, det
+    )
+    out = jnp.where(
+        jnp.equal(dist_id, DELAY_DISTRIBUTIONS["heavytail"]), heavy, out
+    )
+    return jnp.clip(out, 0.0, float(n_periods))
+
+
+def renewal_arrivals(delays):
+    """Delay draws -> ``(arrive, age)``, both ``(m, T)`` float32.
+
+    Renewal process per agent: ``since`` counts period boundaries since the
+    agent's last sync (every replica starts freshly broadcast). At boundary
+    ``t`` the agent arrives iff ``since > delays[:, t]`` — a zero draw means
+    it arrives every period, a draw of ``d`` makes it skip ``d`` boundaries.
+    ``age[:, t] = since - 1`` is the staleness its contribution would carry
+    (0 = fresh, i.e. it also arrived at the previous boundary). The scan is
+    over the *precomputed* schedule, never inside the drivers' step bodies,
+    and works on traced draws (the ``delay`` sweep axis).
+    """
+    delays = jnp.asarray(delays, jnp.float32)
+    m = delays.shape[0]
+
+    def step(c, d):
+        since = c + 1.0
+        arrive = (since > d).astype(jnp.float32)
+        age = since - 1.0
+        c = jnp.where(arrive > 0.0, 0.0, since)
+        return c, (arrive, age)
+
+    _, (arrive, age) = jax.lax.scan(step, jnp.zeros(m, jnp.float32), delays.T)
+    return arrive.T, age.T
+
+
+@dataclasses.dataclass(frozen=True)
+class DelaySchedule:
+    """A precomputed arrival schedule over ``n_periods`` boundaries.
+
+    ``arrive``/``age`` are ``(m, n_periods)`` float32 arrays (numpy when
+    constructed concretely; tracers on a ``delay`` sweep-axis copy — the hot
+    path reads them through ``jnp.asarray``). ``k`` records the FedBuff
+    buffer size for K-of-m schedules (None for renewal schedules).
+    """
+
+    arrive: object
+    age: object
+    n_periods: int
+    label: str
+    k: Optional[int] = None
+
+    @property
+    def m(self) -> int:
+        return int(np.shape(self.arrive)[0])
+
+    def arrivals_per_period(self) -> np.ndarray:
+        """(n_periods,) int arrival counts — host accounting, concrete only."""
+        try:
+            arrive = np.asarray(self.arrive)
+        except jax.errors.TracerArrayConversionError:
+            raise ValueError(
+                "arrival accounting needs a concrete schedule; traced "
+                "delay-axis copies are billed from the equivalent "
+                "make_schedule(..., seed=cfg.eval_seed) schedule"
+            ) from None
+        return arrive.sum(axis=0).astype(int)
+
+    def total_arrivals(self, start: int = 0, n: Optional[int] = None) -> int:
+        counts = self.arrivals_per_period()
+        n = len(counts) - start if n is None else n
+        return int(counts[start:start + n].sum())
+
+
+def make_schedule(
+    dist: str, param: float, m: int, n_periods: int, *, seed: int = 0
+) -> DelaySchedule:
+    """Concrete (host-side) schedule for one named delay distribution.
+
+    ``seed`` should be the run config's ``eval_seed`` when the schedule must
+    mirror a traced ``delay``-axis cell (both derive their uniforms from
+    :func:`delay_axis_key`). ``dist='deterministic', param=0`` is the
+    zero-delay schedule: every agent arrives at every boundary with age 0 —
+    the synchronous-equivalence anchor.
+    """
+    try:
+        dist_id = DELAY_DISTRIBUTIONS[dist]
+    except KeyError:
+        raise KeyError(
+            f"unknown delay distribution {dist!r}; "
+            f"have {sorted(DELAY_DISTRIBUTIONS)}"
+        ) from None
+    delays = delay_draws(
+        dist_id, param, m, n_periods, delay_axis_key(seed)
+    )
+    arrive, age = renewal_arrivals(delays)
+    return DelaySchedule(
+        arrive=np.asarray(jax.device_get(arrive), np.float32),
+        age=np.asarray(jax.device_get(age), np.float32),
+        n_periods=int(n_periods),
+        label=f"{dist}({param:g})",
+    )
+
+
+def kofm_schedule(
+    m: int,
+    n_periods: int,
+    k: int,
+    *,
+    dist: str = "geometric",
+    param: float = 0.5,
+    seed: int = 0,
+) -> DelaySchedule:
+    """FedBuff buffered schedule: the K freshest replicas arrive each period.
+
+    Each agent carries an effective staleness ``eff = since - 1 + lag`` at
+    every boundary — periods since its last sync plus this period's delay
+    draw (its slowness). The server admits exactly the ``k`` agents with the
+    smallest ``eff`` (ties broken by agent index — a stable lexsort), resets
+    their renewal clocks, and everyone else keeps training locally. With
+    ``k = m`` and zero lag this degenerates to the synchronous schedule.
+    The recorded ``age`` is ``eff`` itself, so the staleness-decay weights
+    and the K-freshest selection agree — the hypothesis property suite pins
+    ``max(age[arrived]) <= min(age[not arrived])`` per period.
+    """
+    if not 1 <= k <= m:
+        raise ValueError(f"need 1 <= k <= m, got k={k} m={m}")
+    lag = np.asarray(
+        jax.device_get(
+            delay_draws(
+                DELAY_DISTRIBUTIONS[dist], param, m, n_periods,
+                delay_axis_key(seed),
+            )
+        ),
+        np.float32,
+    )
+    c = np.zeros(m, np.float32)
+    arrive = np.zeros((m, n_periods), np.float32)
+    age = np.zeros((m, n_periods), np.float32)
+    for t in range(n_periods):
+        since = c + 1.0
+        eff = since - 1.0 + lag[:, t]
+        sel = np.lexsort((np.arange(m), eff))[:k]
+        arrive[sel, t] = 1.0
+        age[:, t] = eff
+        c = since
+        c[sel] = 0.0
+    return DelaySchedule(
+        arrive=arrive,
+        age=age,
+        n_periods=int(n_periods),
+        label=f"fedbuff(k={k},{dist}({param:g}))",
+        k=int(k),
+    )
+
+
+def stale_weight_table(decay: Optional[DecayFn], n_periods: int) -> np.ndarray:
+    """Staleness-decay lookup table ``D(age)`` for ages ``0..n_periods``.
+
+    Reuses the ``DecayStrategy`` weight families (``repro.core.decay``) over
+    *ages* instead of period offsets, under the same A3-style contract:
+    ``D(0) = 1`` (a fresh arrival is never down-weighted — this is what makes
+    the zero-delay schedule bitwise-synchronous), non-increasing, >= 0.
+    """
+    decay = decay or no_decay()
+    w = np.asarray(
+        jax.device_get(decay(jnp.arange(n_periods + 1))), np.float32
+    )
+    if w[0] != 1.0 or np.any(np.diff(w) > 1e-7) or np.any(w < -1e-7):
+        raise ValueError(
+            "staleness decay must satisfy D(0)=1, non-increasing, >= 0 "
+            "over the schedule horizon (A3 over ages)"
+        )
+    return w
+
+
+def sync_weight_table(arrive, age, table):
+    """Per-boundary server weights: ``arrive * D(age)``, shape ``(m, T)``.
+
+    Traced-safe (the ``delay`` axis regenerates this inside the trace); on
+    concrete inputs the result is concrete. The zero-delay schedule yields
+    exactly 1.0 everywhere — ``1.0 * D(0)`` with ``D(0) == 1.0`` — keeping
+    the bitwise sync-equivalence contract independent of the decay choice.
+    """
+    table = jnp.asarray(table, jnp.float32)
+    idx = jnp.clip(
+        jnp.asarray(age).astype(jnp.int32), 0, table.shape[0] - 1
+    )
+    return jnp.asarray(arrive, jnp.float32) * table[idx]
+
+
+def masked_server_step(flat, w, *, backend: str = "auto"):
+    """FedBuff server row: staleness-weighted mean over the arrived replicas.
+
+    ``flat`` is the ``(m, n)`` carry, ``w`` the ``(m,)`` weights (zero for
+    non-arrivals). Computed as ``row_mean(scale_rows(flat, w)) * m/sum(w)``
+    — i.e. ``sum_i w_i x_i / sum_i w_i`` — on the dispatched primitives, so
+    fp32 accumulation and every backend carry over. The zero-delay case is
+    *bitwise* the synchronous ``row_mean``: scaling by 1.0 is exact and the
+    correction factor ``m / m`` is exactly 1.0.
+
+    Returns ``(row, denom)``. When nothing arrived (``denom == 0``) the row
+    is non-finite; the caller keeps its previous server reference instead.
+    """
+    m = flat.shape[0]
+    w = jnp.asarray(w, jnp.float32)
+    scaled = dispatch.scale_rows(flat, w, backend=backend)
+    mean = dispatch.row_mean(scaled, backend=backend)
+    denom = jnp.sum(w)
+    row = (mean.astype(jnp.float32) * (m / denom)).astype(flat.dtype)
+    return row, denom
+
+
+@dataclasses.dataclass(frozen=True)
+class AsyncStrategy(AggregationStrategy):
+    """Asynchronous staleness-aware federation (FedBuff-style buffering).
+
+    At period boundary ``t`` the server averages the replicas of schedule
+    column ``t`` (:func:`masked_server_step`) with staleness-decay weights,
+    arrived replicas rebase onto the new server reference, and non-arrivals
+    keep training locally against their last-seen reference (``ref`` in the
+    comm state — the same carry slot the compressed-uplink path uses).
+    Within periods the per-agent tau_i variation masks compose unchanged.
+
+    Server *reads* (the drivers' epoch evals and final readout) poll every
+    replica exactly like the synchronous driver — that keeps the zero-delay
+    run bitwise-identical end to end and the utility metric comparable
+    across sync/async configs; the ledger bills those reads identically too.
+    Optimizer moments stay local across boundaries (no cross-replica moment
+    averaging: only the arrived subset synchronizes, and FedBuff keeps no
+    server momentum), so the bitwise contract is pinned on the plain-SGD
+    path. Compressed uplinks are not supported yet.
+    """
+
+    schedule: DelaySchedule = None
+    stale_table: np.ndarray = None   # (n_periods + 1,) D(age) lookup
+    sync_weights: object = None      # (m, n_periods) arrive * D(age)
+
+    is_async = True
+    uniform_sync = False
+
+    def __init__(
+        self,
+        tau: int,
+        schedule: DelaySchedule,
+        taus=None,
+        m: Optional[int] = None,
+        stale_decay: Optional[DecayFn] = None,
+        backend: str = "auto",
+    ):
+        if not isinstance(schedule, DelaySchedule):
+            raise TypeError(
+                f"AsyncStrategy needs a DelaySchedule, got "
+                f"{type(schedule).__name__}"
+            )
+        m_s = schedule.m
+        if m is not None and int(m) != m_s:
+            raise ValueError(f"m={m} but the schedule carries m={m_s} agents")
+        if taus is None:
+            taus = np.full(m_s, tau, int)
+        taus = np.asarray(taus, int)
+        if len(taus) != m_s:
+            raise ValueError(
+                f"taus carries {len(taus)} agents, schedule m={m_s}"
+            )
+        validate_a2(taus, tau)
+        table = stale_weight_table(stale_decay, schedule.n_periods)
+        weights = np.asarray(
+            jax.device_get(
+                sync_weight_table(schedule.arrive, schedule.age, table)
+            ),
+            np.float32,
+        )
+        AggregationStrategy.__init__(
+            self,
+            name=f"async({schedule.label},tau={tau})",
+            tau=tau,
+            taus=taus,
+            mask=self._build_mask(taus, tau),
+            backend=backend,
+        )
+        object.__setattr__(self, "schedule", schedule)
+        object.__setattr__(self, "stale_table", table)
+        object.__setattr__(self, "sync_weights", weights)
+
+    # --- driver seams ----------------------------------------------------------
+    def validate_horizon(self, n_periods: int) -> None:
+        """Fail fast (host-side) when a run outlives the schedule."""
+        if self.schedule.n_periods < n_periods:
+            raise ValueError(
+                f"delay schedule covers {self.schedule.n_periods} periods "
+                f"but the run has {n_periods}"
+            )
+
+    def with_comm(self, comm) -> "AsyncStrategy":
+        if getattr(comm, "enabled", False):
+            raise NotImplementedError(
+                "compressed uplinks are not supported on the async path yet"
+            )
+        return super().with_comm(comm)
+
+    def init_comm_state(self, flat) -> dict:
+        """The fp32 server reference non-arrivals keep training against.
+
+        Same ``ref`` carry slot the compressed-uplink path threads through
+        the drivers (all replicas start broadcast, so row 0 is the server).
+        """
+        return {"ref": flat[0].astype(jnp.float32)}
+
+    def flat_sync(self, flat, comm_state, *, period=None,
+                  backend: Optional[str] = None):
+        """Buffered aggregation at boundary ``period`` (traced index).
+
+        Reads column ``period`` of the precomputed ``(m, T)`` schedule — a
+        dynamic slice, no Python loop — weights the arrivals by staleness
+        decay, and rebases *only* the arrived replicas onto the new server
+        reference. If nothing arrived the reference is kept as-is.
+        """
+        if period is None:
+            raise ValueError(
+                "AsyncStrategy.flat_sync needs the period index; the flat "
+                "drivers pass it from their period scans"
+            )
+        b = backend if backend is not None else self.backend
+        w = jnp.asarray(self.sync_weights)[:, period]
+        arrive = jnp.asarray(self.schedule.arrive)[:, period]
+        row, denom = masked_server_step(flat, w, backend=b)
+        ref = jnp.where(denom > 0.0, row.astype(jnp.float32),
+                        comm_state["ref"])
+        flat = jnp.where(
+            arrive[:, None] > 0.0, ref[None, :].astype(flat.dtype), flat
+        )
+        return flat, dict(comm_state, ref=ref)
+
+    def server_row(self, flat, comm_state, *, backend: Optional[str] = None):
+        """The buffered server reference (replicas are not re-broadcast)."""
+        del backend
+        return comm_state["ref"].astype(flat.dtype)
+
+    # --- accounting ------------------------------------------------------------
+    def comm_events_per_period(self) -> dict:
+        raise NotImplementedError(
+            "async arrivals are non-uniform across periods; the ledger "
+            "bills them via comm_events_span"
+        )
+
+    def comm_events_span(self, start: int, n_periods: int) -> dict:
+        """Totals over boundaries ``[start, start + n_periods)``.
+
+        C1 uplinks are the *arrivals* of those boundaries — only an arrived
+        replica puts its payload on the wire — while every agent keeps
+        training locally, so C2 stays ``sum(tau_i)`` per period.
+        """
+        if start < 0 or start + n_periods > self.schedule.n_periods:
+            raise ValueError(
+                f"period span [{start}, {start + n_periods}) outside the "
+                f"schedule horizon {self.schedule.n_periods}"
+            )
+        return {
+            "c1": self.schedule.total_arrivals(start, n_periods),
+            "c2": int(np.sum(self.taus)) * n_periods,
+            "w1": 0,
+            "w2": 0,
+        }
+
+    def comm_events_partial_period(self, n_offsets: int) -> dict:
+        """A trailing partial period reaches no boundary: zero uplinks.
+
+        Under buffered aggregation no server event fires mid-period, so the
+        partial tail bills only its local updates — total async wire bytes
+        are exactly ``total arrivals x payload_bytes`` (pinned by the
+        hypothesis ledger property). The uniform base class instead bills a
+        final every-replica poll here; that assumption is what the
+        arrival-aware ledger path fixes for async strategies.
+        """
+        n_offsets = int(n_offsets)
+        if not 0 <= n_offsets < self.tau:
+            raise ValueError(
+                f"partial period must satisfy 0 <= n_offsets < tau="
+                f"{self.tau}, got {n_offsets}"
+            )
+        return {
+            "c1": 0,
+            "c2": int(masked_update_counts(self.taus, n_offsets).sum()),
+            "w1": 0,
+            "w2": 0,
+        }
+
+
+# --- trace-safety audit registration (repro.analysis.jaxpr_audit) -------------
+
+def _audit_masked_server(backend: str):
+    """masked_server_step on one CPU-executable backend, for the jaxpr audit."""
+
+    def factory() -> dispatch.HotPathEntry:
+        m, n = 7, 512
+        return dispatch.HotPathEntry(
+            fn=lambda flat, w: masked_server_step(flat, w, backend=backend),
+            args=(
+                jax.ShapeDtypeStruct((m, n), jnp.float32),
+                jax.ShapeDtypeStruct((m,), jnp.float32),
+            ),
+        )
+
+    return factory
+
+
+def _audit_delay_axis() -> dispatch.HotPathEntry:
+    """The ``delay``-axis static-point fn, exactly as ``run_sweep`` jits it.
+
+    A tiny async FedRL sweep over two (dist_id, param) points x one seed:
+    the schedule-regenerating override, the renewal scan, the masked server
+    step and both driver scans all land in the audited jaxpr. One static
+    point == one compile (the retrace guard pins this in the test suite).
+    """
+    from repro.rl.env import FIGURE_EIGHT
+    from repro.rl.fedrl import FedRLConfig
+    from repro.sweep.runner import audit_batched_fn
+    from repro.sweep.spec import SweepAxis, SweepSpec
+
+    sched = make_schedule("deterministic", 0.0, 7, 1, seed=1234)
+    base = FedRLConfig(
+        env=FIGURE_EIGHT,
+        strategy=AsyncStrategy(tau=2, schedule=sched, backend="jnp"),
+        n_epochs=1,
+        epoch_len=4,
+        minibatch=2,
+    )
+    spec = SweepSpec(
+        name="audit-delay",
+        base=base,
+        seeds=(0,),
+        vmapped=(SweepAxis(name="delay", values=((0.0, 1.0), (1.0, 0.5))),),
+    )
+    batched, args = audit_batched_fn(spec)
+    return dispatch.HotPathEntry(fn=batched, args=args)
+
+
+for _b in ("jnp", "interpret"):
+    dispatch.register_hot_path(
+        f"async_fed.masked_server_step[{_b}]", _audit_masked_server(_b)
+    )
+dispatch.register_hot_path("async_fed.delay_axis_fn", _audit_delay_axis)

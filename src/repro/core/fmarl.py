@@ -89,6 +89,7 @@ def _use_flat_carry(cfg) -> bool:
         or cfg.optimizer is not None
         or cfg.buffer_dtype is not None
         or cfg.strategy.comm.enabled
+        or cfg.strategy.is_async
     )
 
 
@@ -184,6 +185,8 @@ def _run_fmarl_flat(cfg, init_params, local_grad_fn, key, eval_grad_fn):
     at period-boundary evals."""
     strat = cfg.strategy
     m, tau = strat.m, strat.tau
+    if strat.is_async:
+        strat.validate_horizon(cfg.n_periods)
     opt = cfg.optimizer
     dtype = jnp.dtype(cfg.buffer_dtype) if cfg.buffer_dtype is not None else None
     flat, spec = dispatch.stacked_ravel_spec(_broadcast(init_params, m))
@@ -214,13 +217,18 @@ def _run_fmarl_flat(cfg, init_params, local_grad_fn, key, eval_grad_fn):
         )
         return (flat, opt_state, comm_state, step + 1, key), aux
 
-    def period(carry, _):
+    def period(carry, p):
         (flat, opt_state, comm_state, step, key), aux = jax.lax.scan(
             local_step, carry, jnp.arange(tau)
         )
-        flat, comm_state = strat.flat_sync(flat, comm_state)
-        row = flat[0]  # flat_sync re-broadcast: row 0 is the server row
-        if opt is not None:
+        flat, comm_state = strat.flat_sync(flat, comm_state, period=p)
+        # Sync strategies re-broadcast (row 0 is the server row); the async
+        # path keeps non-arrived replicas divergent and reads the buffered
+        # reference out of comm_state instead.
+        row = strat.server_row(flat, comm_state)
+        if opt is not None and not strat.is_async:
+            # Async boundaries sync only the arrived subset; moments stay
+            # local (FedBuff keeps no server momentum).
             opt_state = server_average_state(strat, opt_state)
 
         metrics = {"mean_aux": jax.tree.map(jnp.mean, aux)}
@@ -232,13 +240,16 @@ def _run_fmarl_flat(cfg, init_params, local_grad_fn, key, eval_grad_fn):
 
     carry = (flat, opt_state, comm_state, jnp.zeros((), jnp.int32), key)
     (flat, opt_state, comm_state, step, key), metrics = jax.lax.scan(
-        period, carry, None, length=cfg.n_periods
+        period, carry, jnp.arange(cfg.n_periods)
     )
 
     flat32 = dispatch.compute_view(flat, dtype)
+    server_row = dispatch.compute_view(
+        strat.server_row(flat, comm_state), dtype
+    )
     final_state = FmarlState(
         params_m=spec.unravel(flat32),
-        server_params=spec.unravel_one(flat32[0]),
+        server_params=spec.unravel_one(server_row),
         step=step,
         key=key,
     )

@@ -138,6 +138,13 @@ class AggregationStrategy:
     backend: str = "auto"
     comm: PayloadTransform = IDENTITY
 
+    # Class-level flags (not dataclass fields): the synchronous strategies
+    # sync every replica at every period boundary, so the ledger may bill
+    # periods by closed-form multiplication. AsyncStrategy flips both — its
+    # arrivals vary per boundary and its flat_sync needs the period index.
+    is_async = False
+    uniform_sync = True
+
     def __post_init__(self):
         if self.backend not in dispatch.BACKENDS:
             raise ValueError(
@@ -314,7 +321,8 @@ class AggregationStrategy:
             )
         return flat, opt_state, comm_state
 
-    def flat_sync(self, flat, comm_state, *, backend: Optional[str] = None):
+    def flat_sync(self, flat, comm_state, *, period=None,
+                  backend: Optional[str] = None):
         """Period-boundary server sync on the flat carry, compression-aware.
 
         Dense (identity comm): eq. (11) exactly as before — ``row_mean`` and
@@ -325,7 +333,12 @@ class AggregationStrategy:
         reference by the mean payload, and the unsent remainder becomes the
         next error-feedback residual. Returns ``(flat, comm_state)`` with
         ``flat`` already re-broadcast (``flat[0]`` is the server row).
+
+        ``period`` is the (possibly traced) index of the boundary being
+        synced; the synchronous strategies behave identically at every
+        boundary and ignore it, AsyncStrategy requires it.
         """
+        del period
         b = backend if backend is not None else self.backend
         if not self.comm.enabled:
             row = self.flat_server_average(flat, backend=b)
@@ -341,6 +354,17 @@ class AggregationStrategy:
             new_state["err_up"] = residual
         flat = jnp.broadcast_to(row[None, :].astype(flat.dtype), flat.shape)
         return flat, new_state
+
+    def server_row(self, flat, comm_state, *, backend: Optional[str] = None):
+        """The server's current parameter row after a ``flat_sync``.
+
+        The synchronous strategies re-broadcast at every sync, so any row is
+        the server row — ``flat[0]`` by convention (what the drivers always
+        read). AsyncStrategy keeps replicas divergent and overrides this to
+        read the buffered reference out of ``comm_state``.
+        """
+        del comm_state, backend
+        return flat[0]
 
     # --- accounting ------------------------------------------------------------
     def comm_bytes_per_event(self, payload_elems: int) -> dict:
@@ -733,6 +757,18 @@ def make_strategy(kind: str, **kw) -> AggregationStrategy:
             fused=kw.get("fused", True),
             backend=backend,
             sparse=kw.get("sparse"),
+        )
+    elif kind == "async":
+        # Lazy import: repro.core.async_fed imports this module.
+        from repro.core.async_fed import AsyncStrategy
+
+        strat = AsyncStrategy(
+            tau=kw["tau"],
+            schedule=kw["schedule"],
+            taus=kw.get("taus"),
+            m=kw.get("m"),
+            stale_decay=kw.get("stale_decay"),
+            backend=backend,
         )
     else:
         raise ValueError(f"unknown strategy kind: {kind}")

@@ -403,6 +403,8 @@ def _run_fedrl_flat(cfg: FedRLConfig, key) -> tuple[Any, dict]:
     opt = cfg.optimizer
     dtype = jnp.dtype(cfg.buffer_dtype) if cfg.buffer_dtype is not None else None
     updates_per_epoch = cfg.epoch_len // cfg.minibatch
+    if strat.is_async:
+        strat.validate_horizon((cfg.n_epochs * updates_per_epoch) // tau)
     env_params = _fleet_params(cfg) if cfg.fleet else None
 
     key, pk = jax.random.split(key)
@@ -436,10 +438,19 @@ def _run_fedrl_flat(cfg: FedRLConfig, key) -> tuple[Any, dict]:
         )
         k = k + 1
 
+        # Boundary index of the sync `k` just completed (k is
+        # post-increment, so update tau-1 closes period 0, etc.); only the
+        # async schedule lookup consumes it.
+        period = jnp.floor_divide(k, tau) - 1
+
         def do_sync(args):
             f, s, cs = args
-            f, cs = strat.flat_sync(f, cs)
-            return f, server_average_state(strat, s), cs
+            f, cs = strat.flat_sync(f, cs, period=period)
+            if not strat.is_async:
+                # Async boundaries sync only the arrived subset; optimizer
+                # moments stay local (FedBuff keeps no server momentum).
+                s = server_average_state(strat, s)
+            return f, s, cs
 
         synced = jnp.equal(jnp.mod(k, tau), 0)
         flat, opt_state, comm_state = jax.lax.cond(
@@ -450,6 +461,10 @@ def _run_fedrl_flat(cfg: FedRLConfig, key) -> tuple[Any, dict]:
         }
 
     def server_view(f):
+        # Epoch evals land mid-period, where replicas are divergent even on
+        # the synchronous path — the metric has always been the all-replica
+        # poll (row_mean). Async keeps the same poll so utilities stay
+        # comparable and the zero-delay run stays bitwise-identical.
         row = strat.flat_server_average(f)
         return spec.unravel_one(dispatch.compute_view(row, dtype))
 

@@ -28,6 +28,13 @@ Built-in axes:
   mixing tables) via ``AggregationStrategy.with_mask``. tau itself stays
   static — it fixes the mask shape and the inner scan length — so the
   variation axis is value-only and vmaps.
+* ``delay`` — asynchronous-arrival axis: each point is a
+  ``(dist_id, param)`` 2-vector (``repro.core.async_fed.DELAY_DISTRIBUTIONS``
+  ids — float32 carries them exactly) and the override regenerates the
+  ``AsyncStrategy``'s arrival/age schedule and staleness weights *inside the
+  trace* from the traced draws. Shapes (m, n_periods, tau) stay static, so
+  every delay distribution of the axis shares one trace; requires an
+  ``AsyncStrategy`` base whose schedule fixes the horizon.
 * ``hetero_scale`` — fleet-heterogeneity magnitude: rebuilds the per-agent
   ``EnvParams`` with perturbation directions fixed by a PRNG key and the
   traced scale multiplying them (the asynchronous-MDP knob as a value-only
@@ -207,11 +214,56 @@ def override_hetero_scale(cfg, point):
     return dataclasses.replace(cfg, env_params=params)
 
 
+def override_delay(cfg, point):
+    """Asynchronous-arrival axis: regenerate the delay schedule traced.
+
+    ``point`` is a ``(dist_id, param)`` 2-vector. The override redraws the
+    per-(agent, period) delays from :func:`repro.core.async_fed.delay_draws`
+    (distribution selected by the *traced* id — pure arithmetic, no control
+    flow), reruns the renewal-arrival scan, and refolds the staleness-decay
+    weights, all on the existing schedule's static shape. The strategy's
+    host-side accounting keeps the base schedule; benches rebuild the
+    matching concrete schedule via ``make_schedule(..., seed=cfg.eval_seed)``
+    (both sides draw from ``delay_axis_key``, so arrivals agree exactly).
+    """
+    from repro.core.async_fed import (
+        AsyncStrategy,
+        delay_axis_key,
+        delay_draws,
+        renewal_arrivals,
+        sync_weight_table,
+    )
+
+    strat = cfg.strategy
+    if not isinstance(strat, AsyncStrategy):
+        raise TypeError(
+            f"'delay' axis needs an AsyncStrategy base, got "
+            f"{type(strat).__name__}"
+        )
+    point = jnp.asarray(point, jnp.float32)
+    if point.shape != (2,):
+        raise ValueError(
+            "'delay' axis points must be (dist_id, param) 2-vectors, got "
+            f"shape {point.shape}"
+        )
+    sched = strat.schedule
+    delays = delay_draws(
+        point[0], point[1], sched.m, sched.n_periods,
+        delay_axis_key(getattr(cfg, "eval_seed", 0)),
+    )
+    arrive, age = renewal_arrivals(delays)
+    weights = sync_weight_table(arrive, age, strat.stale_table)
+    sched = dataclasses.replace(sched, arrive=arrive, age=age)
+    strat = _strategy_copy(strat, schedule=sched, sync_weights=weights)
+    return dataclasses.replace(cfg, strategy=strat)
+
+
 OVERRIDES: Dict[str, Callable] = {
     "eta": override_eta,
     "lam": override_lam,
     "eps": override_eps,
     "taus": override_taus,
+    "delay": override_delay,
     "hetero_scale": override_hetero_scale,
 }
 

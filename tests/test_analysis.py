@@ -347,6 +347,11 @@ def test_audit_registry_covers_the_whole_hot_path():
             assert f"comm.{kind}_reduce[{backend}]" in names
     assert {"rl.run_fedrl_core", "core.run_fmarl_core",
             "sweep.static_point_fn"} <= names
+    # async federation layer: the masked FedBuff server step on both
+    # CPU-executable backends, plus the delay sweep axis's static-point fn
+    for backend in ("jnp", "interpret"):
+        assert f"async_fed.masked_server_step[{backend}]" in names
+    assert "async_fed.delay_axis_fn" in names
 
 
 @pytest.mark.slow

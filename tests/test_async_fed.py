@@ -1,0 +1,484 @@
+"""Unit tests for the async federation layer (repro.core.async_fed).
+
+Covers the delay-schedule generators, the masked FedBuff server step, the
+AsyncStrategy driver seams on both flat drivers, the arrival-aware ledger
+accounting (including the partial-period undercount fix), the ``delay``
+sweep axis with its one-compile retrace pin, and the zero-delay bitwise
+sync-equivalence contract (DESIGN.md §15).
+"""
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core.accounting import CostLedger
+from repro.core.async_fed import (
+    DELAY_DISTRIBUTIONS,
+    AsyncStrategy,
+    DelaySchedule,
+    delay_axis_key,
+    delay_draws,
+    kofm_schedule,
+    make_schedule,
+    masked_server_step,
+    renewal_arrivals,
+    stale_weight_table,
+    sync_weight_table,
+)
+from repro.core.decay import exponential_decay
+from repro.core.fmarl import FmarlConfig, run_fmarl
+from repro.core.strategies import PeriodicStrategy, make_strategy
+from repro.kernels import dispatch
+from repro.rl.env import FIGURE_EIGHT
+from repro.rl.fedrl import FedRLConfig, fedrl_ledger, run_fedrl_core
+from repro.utils.pytree import tree_l2_norm
+
+
+# --- delay schedules -----------------------------------------------------------
+
+def test_zero_delay_schedule_is_synchronous():
+    s = make_schedule("deterministic", 0.0, 5, 7, seed=3)
+    np.testing.assert_array_equal(s.arrive, np.ones((5, 7), np.float32))
+    np.testing.assert_array_equal(s.age, np.zeros((5, 7), np.float32))
+    assert s.total_arrivals() == 35
+
+
+def test_deterministic_lag_skips_exactly_d_boundaries():
+    s = make_schedule("deterministic", 2.0, 3, 9, seed=0)
+    # delay 2: arrive once `since > 2`, i.e. every third boundary (t=2,5,8)
+    expect = np.zeros((3, 9), np.float32)
+    expect[:, 2::3] = 1.0
+    np.testing.assert_array_equal(s.arrive, expect)
+    # the arriving column carries age since-1 = 2
+    assert np.all(s.age[:, 2::3] == 2.0)
+
+
+def test_renewal_arrivals_age_counts_boundaries_since_last_sync():
+    delays = np.array([[0.0, 2.0, 0.0, 0.0]], np.float32)
+    arrive, age = renewal_arrivals(delays)
+    np.testing.assert_array_equal(arrive, [[1.0, 0.0, 1.0, 1.0]])
+    np.testing.assert_array_equal(age, [[0.0, 0.0, 1.0, 0.0]])
+
+
+def test_delay_draws_distributions_differ_and_clip():
+    key = delay_axis_key(0)
+    for name, dist_id in DELAY_DISTRIBUTIONS.items():
+        d = np.asarray(delay_draws(dist_id, 1.5, 4, 6, key))
+        assert d.shape == (4, 6)
+        assert np.all(d >= 0) and np.all(d <= 6), name
+    det = np.asarray(delay_draws(0, 1.5, 4, 6, key))
+    assert np.all(det == 2.0)  # round(1.5 + eps)
+
+
+def test_make_schedule_unknown_distribution():
+    with pytest.raises(KeyError, match="unknown delay distribution"):
+        make_schedule("poisson", 1.0, 3, 4)
+
+
+def test_schedule_matches_delay_axis_stream():
+    """Host schedules and the traced delay axis share the same uniforms."""
+    seed, m, T = 1234, 5, 6
+    s = make_schedule("geometric", 0.5, m, T, seed=seed)
+    d = delay_draws(DELAY_DISTRIBUTIONS["geometric"], 0.5, m, T,
+                    delay_axis_key(seed))
+    arrive, age = renewal_arrivals(d)
+    np.testing.assert_array_equal(s.arrive, np.asarray(arrive))
+    np.testing.assert_array_equal(s.age, np.asarray(age))
+
+
+def test_kofm_schedule_exact_k_arrivals():
+    s = kofm_schedule(6, 8, 4, seed=2)
+    assert s.k == 4
+    np.testing.assert_array_equal(s.arrivals_per_period(),
+                                  np.full(8, 4, int))
+
+
+# --- weights -------------------------------------------------------------------
+
+def test_stale_weight_table_validates_a3_over_ages():
+    t = stale_weight_table(exponential_decay(0.9), 4)
+    assert t.shape == (5,)
+    assert t[0] == 1.0 and np.all(np.diff(t) <= 1e-7)
+    with pytest.raises(ValueError, match="staleness decay"):
+        stale_weight_table(lambda j: jnp.asarray(j, jnp.float32) + 2.0, 4)
+
+
+def test_sync_weight_table_zero_delay_is_exactly_one():
+    s = make_schedule("deterministic", 0.0, 4, 5, seed=0)
+    t = stale_weight_table(exponential_decay(0.7), 5)
+    w = np.asarray(sync_weight_table(s.arrive, s.age, t))
+    np.testing.assert_array_equal(w, np.ones((4, 5), np.float32))
+
+
+def test_sync_weight_table_decays_with_age():
+    arrive = np.ones((1, 3), np.float32)
+    age = np.array([[0.0, 1.0, 2.0]], np.float32)
+    t = stale_weight_table(exponential_decay(0.81), 3)
+    w = np.asarray(sync_weight_table(arrive, age, t))
+    np.testing.assert_allclose(w, t[None, :3])
+
+
+# --- masked server step --------------------------------------------------------
+
+def test_masked_server_step_is_the_weighted_mean():
+    flat = np.arange(12, dtype=np.float32).reshape(3, 4)
+    w = np.array([1.0, 0.0, 0.5], np.float32)
+    row, denom = masked_server_step(jnp.asarray(flat), jnp.asarray(w),
+                                    backend="jnp")
+    assert float(denom) == 1.5
+    np.testing.assert_allclose(
+        np.asarray(row), (flat * w[:, None]).sum(0) / 1.5, rtol=1e-6
+    )
+
+
+def test_masked_server_step_all_ones_bitwise_row_mean():
+    flat = jax.random.normal(jax.random.key(1), (7, 129), jnp.float32)
+    row, denom = masked_server_step(flat, jnp.ones(7), backend="jnp")
+    ref = dispatch.row_mean(flat, backend="jnp")
+    np.testing.assert_array_equal(np.asarray(row), np.asarray(ref))
+    assert float(denom) == 7.0
+
+
+def test_flat_sync_no_arrivals_keeps_reference_and_replicas():
+    sched = DelaySchedule(
+        arrive=np.zeros((3, 2), np.float32),
+        age=np.zeros((3, 2), np.float32),
+        n_periods=2, label="none",
+    )
+    strat = AsyncStrategy(tau=2, schedule=sched, backend="jnp")
+    flat = jax.random.normal(jax.random.key(0), (3, 8), jnp.float32)
+    cs = strat.init_comm_state(flat)
+    out, cs2 = strat.flat_sync(flat, cs, period=0)
+    np.testing.assert_array_equal(np.asarray(out), np.asarray(flat))
+    np.testing.assert_array_equal(np.asarray(cs2["ref"]),
+                                  np.asarray(cs["ref"]))
+
+
+def test_flat_sync_rebases_only_arrivals():
+    arrive = np.array([[1.0], [0.0]], np.float32)
+    sched = DelaySchedule(arrive=arrive, age=np.zeros((2, 1), np.float32),
+                          n_periods=1, label="half")
+    strat = AsyncStrategy(tau=1, schedule=sched, backend="jnp")
+    flat = jnp.asarray([[2.0, 4.0], [10.0, 20.0]], jnp.float32)
+    cs = strat.init_comm_state(flat)
+    out, cs2 = strat.flat_sync(flat, cs, period=0)
+    # only agent 0 arrived: the server row is its contribution alone
+    np.testing.assert_allclose(np.asarray(cs2["ref"]), [2.0, 4.0])
+    np.testing.assert_allclose(np.asarray(out)[0], [2.0, 4.0])
+    np.testing.assert_allclose(np.asarray(out)[1], [10.0, 20.0])
+    # server reads come from the reference, not the divergent replicas
+    np.testing.assert_allclose(np.asarray(strat.server_row(out, cs2)),
+                               [2.0, 4.0])
+
+
+def test_flat_sync_requires_period_index():
+    sched = make_schedule("deterministic", 0.0, 3, 2, seed=0)
+    strat = AsyncStrategy(tau=2, schedule=sched, backend="jnp")
+    flat = jnp.zeros((3, 4))
+    with pytest.raises(ValueError, match="period index"):
+        strat.flat_sync(flat, strat.init_comm_state(flat))
+
+
+# --- strategy construction / validation ----------------------------------------
+
+def test_async_strategy_validation():
+    sched = make_schedule("geometric", 0.5, 4, 3, seed=0)
+    with pytest.raises(TypeError, match="DelaySchedule"):
+        AsyncStrategy(tau=2, schedule="nope")
+    with pytest.raises(ValueError, match="m=7"):
+        AsyncStrategy(tau=2, schedule=sched, m=7)
+    with pytest.raises(ValueError, match="taus carries"):
+        AsyncStrategy(tau=2, schedule=sched, taus=np.ones(3, int))
+    strat = AsyncStrategy(tau=2, schedule=sched)
+    assert strat.is_async and not strat.uniform_sync
+    assert strat.m == 4
+    with pytest.raises(NotImplementedError, match="per_period|span"):
+        strat.comm_events_per_period()
+    with pytest.raises(ValueError, match="schedule covers"):
+        strat.validate_horizon(4)
+
+
+def test_async_strategy_rejects_compressed_comm():
+    from repro.comm import identity, topk
+
+    sched = make_schedule("deterministic", 0.0, 3, 2, seed=0)
+    strat = AsyncStrategy(tau=2, schedule=sched)
+    strat.with_comm(identity())  # dense pass-through is fine
+    with pytest.raises(NotImplementedError, match="compressed"):
+        strat.with_comm(topk(4))
+
+
+def test_make_strategy_async_kind():
+    sched = make_schedule("heavytail", 1.5, 5, 4, seed=0)
+    strat = make_strategy("async", tau=3, schedule=sched,
+                          stale_decay=exponential_decay(0.9), backend="jnp")
+    assert isinstance(strat, AsyncStrategy)
+    assert strat.name.startswith("async(heavytail(1.5)")
+    assert strat.sync_weights.shape == (5, 4)
+
+
+# --- ledger accounting (the partial-period undercount fix) ---------------------
+
+def _payload(n=10):
+    return n
+
+
+def test_async_ledger_bills_exact_arrivals():
+    sched = make_schedule("geometric", 0.5, 5, 6, seed=11)
+    strat = AsyncStrategy(tau=3, schedule=sched)
+    ledger = CostLedger()
+    ledger.add_periods(strat, 6, _payload())
+    assert ledger.c1_events == sched.total_arrivals()
+    assert ledger.c1_bytes == sched.total_arrivals() * 10 * 4
+    assert ledger.c2_events == 5 * 3 * 6
+
+
+def test_async_ledger_sequential_spans_are_disjoint():
+    sched = make_schedule("heavytail", 1.5, 4, 8, seed=5)
+    strat = AsyncStrategy(tau=2, schedule=sched)
+    split = CostLedger()
+    split.add_periods(strat, 3, _payload())
+    split.add_periods(strat, 5, _payload())
+    whole = CostLedger()
+    whole.add_periods(strat, 8, _payload())
+    assert split.c1_events == whole.c1_events == sched.total_arrivals()
+    assert split.c1_bytes == whole.c1_bytes
+    assert split.periods_billed == 8
+
+
+def test_async_partial_period_bills_no_uplinks():
+    """The undercount fix: a buffered partial tail reaches no boundary, so
+    it must bill zero C1 events — the uniform base class billed m here."""
+    sched = make_schedule("geometric", 0.5, 5, 4, seed=7)
+    strat = AsyncStrategy(tau=3, schedule=sched)
+    ledger = CostLedger()
+    ledger.add_periods(strat, 4, _payload())
+    before = ledger.c1_events
+    ledger.add_partial_period(strat, 2, _payload())
+    assert ledger.c1_events == before            # no uplinks mid-period
+    assert ledger.c2_events == 5 * 3 * 4 + 5 * 2  # local updates still billed
+    assert ledger.total_bytes() == sched.total_arrivals() * 10 * 4
+
+
+def test_async_span_outside_schedule_raises():
+    sched = make_schedule("deterministic", 1.0, 3, 4, seed=0)
+    strat = AsyncStrategy(tau=2, schedule=sched)
+    ledger = CostLedger()
+    ledger.add_periods(strat, 4, _payload())
+    with pytest.raises(ValueError, match="outside the schedule"):
+        ledger.add_periods(strat, 1, _payload())
+
+
+def test_uniform_strategy_accounting_unchanged():
+    """The cursor must not perturb the closed-form uniform arithmetic."""
+    strat = PeriodicStrategy(tau=4, m=6)
+    ledger = CostLedger()
+    ledger.add_periods(strat, 3, _payload())
+    ledger.add_periods(strat, 2, _payload())
+    assert ledger.c1_events == 6 * 5
+    assert ledger.c2_events == 6 * 4 * 5
+    assert ledger.periods_billed == 5
+    ledger.add_partial_period(strat, 2, _payload())
+    assert ledger.c1_events == 6 * 6  # uniform tail still polls every agent
+
+
+def test_fedrl_ledger_async_end_to_end():
+    tau, epochs, elen, mb = 3, 2, 12, 4
+    n_periods = (epochs * (elen // mb)) // tau
+    sched = make_schedule("geometric", 0.5, 7, n_periods, seed=1234)
+    cfg = FedRLConfig(
+        env=FIGURE_EIGHT,
+        strategy=AsyncStrategy(tau=tau, schedule=sched, backend="jnp"),
+        n_epochs=epochs, epoch_len=elen, minibatch=mb,
+    )
+    from repro.rl.fedrl import policy_payload_elems
+
+    ledger = fedrl_ledger(cfg)
+    assert ledger.c1_events == sched.total_arrivals(0, n_periods)
+    assert ledger.total_bytes() == (
+        sched.total_arrivals(0, n_periods) * policy_payload_elems() * 4
+    )
+
+
+# --- drivers -------------------------------------------------------------------
+
+def _toy_grad_fn(params, key, agent_idx, step):
+    g = jax.tree.map(
+        lambda leaf: leaf + 0.1 * jax.random.normal(
+            jax.random.fold_in(key, 0), leaf.shape
+        ),
+        params,
+    )
+    return g, {"loss": tree_l2_norm(params) ** 2}
+
+
+_TOY_INIT = {"w": jnp.ones((6,)), "b": jnp.ones((2,))}
+
+
+def test_fmarl_async_zero_delay_bitwise_vs_sync():
+    sched = make_schedule("deterministic", 0.0, 4, 3, seed=9)
+    cfg_a = FmarlConfig(
+        strategy=AsyncStrategy(tau=2, schedule=sched, backend="jnp"),
+        eta=0.05, n_periods=3,
+    )
+    cfg_s = FmarlConfig(
+        strategy=PeriodicStrategy(tau=2, m=4, backend="jnp"),
+        eta=0.05, n_periods=3,
+    )
+    key = jax.random.key(0)
+    st_a, m_a, _ = run_fmarl(cfg_a, _TOY_INIT, _toy_grad_fn, key,
+                             lambda p, k: p)
+    st_s, m_s, _ = run_fmarl(cfg_s, _TOY_INIT, _toy_grad_fn, key,
+                             lambda p, k: p)
+    for a, b in zip(jax.tree.leaves(st_a.server_params),
+                    jax.tree.leaves(st_s.server_params)):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+    np.testing.assert_array_equal(
+        np.asarray(m_a["server_grad_sq_norm"]),
+        np.asarray(m_s["server_grad_sq_norm"]),
+    )
+
+
+def test_fmarl_async_delayed_runs_and_diverges_replicas():
+    sched = make_schedule("geometric", 0.5, 4, 3, seed=9)
+    cfg = FmarlConfig(
+        strategy=AsyncStrategy(tau=2, schedule=sched, backend="jnp"),
+        eta=0.05, n_periods=3,
+    )
+    state, metrics, ledger = run_fmarl(cfg, _TOY_INIT, _toy_grad_fn,
+                                       jax.random.key(0), lambda p, k: p)
+    assert metrics["server_grad_sq_norm"].shape == (3,)
+    assert np.all(np.isfinite(np.asarray(metrics["server_grad_sq_norm"])))
+    assert ledger.c1_events == sched.total_arrivals()
+
+
+def test_fmarl_async_horizon_guard():
+    sched = make_schedule("deterministic", 0.0, 4, 2, seed=0)
+    cfg = FmarlConfig(
+        strategy=AsyncStrategy(tau=2, schedule=sched, backend="jnp"),
+        eta=0.05, n_periods=5,
+    )
+    with pytest.raises(ValueError, match="schedule covers 2"):
+        run_fmarl(cfg, _TOY_INIT, _toy_grad_fn, jax.random.key(0))
+
+
+def _tiny_fedrl_pair(tau=3, epochs=2, elen=12, mb=4):
+    n_periods = (epochs * (elen // mb)) // tau
+    sched = make_schedule("deterministic", 0.0, 7, n_periods, seed=1234)
+    cfg_a = FedRLConfig(
+        env=FIGURE_EIGHT,
+        strategy=AsyncStrategy(tau=tau, schedule=sched, backend="jnp"),
+        n_epochs=epochs, epoch_len=elen, minibatch=mb,
+    )
+    cfg_s = FedRLConfig(
+        env=FIGURE_EIGHT,
+        strategy=PeriodicStrategy(tau=tau, m=7, backend="jnp"),
+        n_epochs=epochs, epoch_len=elen, minibatch=mb,
+    )
+    return cfg_a, cfg_s
+
+
+def test_fedrl_async_zero_delay_bitwise_vs_sync_eager():
+    """The DESIGN.md §15 contract on the real driver: eager op-by-op, the
+    zero-delay async flat carry and the synchronous tree driver must agree
+    bit for bit (weights exactly 1.0, correction factor exactly 1.0)."""
+    cfg_a, cfg_s = _tiny_fedrl_pair()
+    key = jax.random.key(0)
+    sa, ma = run_fedrl_core(cfg_a, key)
+    ss, ms = run_fedrl_core(cfg_s, key)
+    for a, b in zip(jax.tree.leaves(sa), jax.tree.leaves(ss)):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+    np.testing.assert_array_equal(
+        np.asarray(ma["server_grad_sq_norm"]),
+        np.asarray(ms["server_grad_sq_norm"]),
+    )
+
+
+def test_fedrl_async_delayed_jits():
+    tau, epochs, elen, mb = 3, 2, 12, 4
+    n_periods = (epochs * (elen // mb)) // tau
+    sched = make_schedule("heavytail", 1.5, 7, n_periods, seed=1234)
+    cfg = FedRLConfig(
+        env=FIGURE_EIGHT,
+        strategy=AsyncStrategy(tau=tau, schedule=sched, backend="jnp"),
+        n_epochs=epochs, epoch_len=elen, minibatch=mb,
+    )
+    _, metrics = jax.jit(lambda k: run_fedrl_core(cfg, k))(jax.random.key(0))
+    assert np.all(np.isfinite(np.asarray(metrics["server_grad_sq_norm"])))
+
+
+# --- sweep axis ----------------------------------------------------------------
+
+def _delay_spec(points, seeds=(0,)):
+    from repro.sweep import SweepAxis, SweepSpec
+
+    tau, epochs, elen, mb = 3, 2, 12, 4
+    n_periods = (epochs * (elen // mb)) // tau
+    sched = make_schedule("deterministic", 0.0, 7, n_periods, seed=1234)
+    base = FedRLConfig(
+        env=FIGURE_EIGHT,
+        strategy=AsyncStrategy(tau=tau, schedule=sched, backend="jnp"),
+        n_epochs=epochs, epoch_len=elen, minibatch=mb,
+    )
+    return SweepSpec(
+        name="test-delay", base=base, seeds=seeds,
+        vmapped=(SweepAxis(name="delay", values=points),),
+    )
+
+
+def test_delay_axis_requires_async_strategy():
+    from repro.sweep.overrides import override_delay
+
+    cfg = FedRLConfig(env=FIGURE_EIGHT,
+                      strategy=PeriodicStrategy(tau=2, m=7),
+                      n_epochs=1, epoch_len=4, minibatch=2)
+    with pytest.raises(TypeError, match="AsyncStrategy"):
+        override_delay(cfg, jnp.asarray([0.0, 1.0]))
+    sched = make_schedule("deterministic", 0.0, 7, 1, seed=0)
+    acfg = dataclasses.replace(
+        cfg, strategy=AsyncStrategy(tau=2, schedule=sched)
+    )
+    with pytest.raises(ValueError, match="2-vector"):
+        override_delay(acfg, jnp.asarray(1.0))
+
+
+def test_delay_axis_matches_concrete_schedules():
+    """One vmapped sweep over three delay families reproduces each family's
+    standalone (concretely scheduled) run — arrivals and numerics agree."""
+    from repro.sweep import run_sweep
+
+    points = ((0.0, 1.0), (1.0, 0.5), (2.0, 1.5))
+    spec = _delay_spec(points)
+    res = run_sweep(spec)
+    swept = res.metrics["base"]["server_grad_sq_norm"]  # (3, 1, epochs)
+
+    names = {0: "deterministic", 1: "geometric", 2: "heavytail"}
+    base = spec.base
+    for d, (dist_id, param) in enumerate(points):
+        sched = make_schedule(names[int(dist_id)], param, 7,
+                              base.strategy.schedule.n_periods,
+                              seed=base.eval_seed)
+        cfg = dataclasses.replace(
+            base, strategy=AsyncStrategy(tau=base.strategy.tau,
+                                         schedule=sched, backend="jnp")
+        )
+        _, m = jax.jit(lambda k, c=cfg: run_fedrl_core(c, k))(
+            jax.random.key(0)
+        )
+        np.testing.assert_allclose(
+            np.asarray(swept[d, 0]),
+            np.asarray(m["server_grad_sq_norm"]),
+            rtol=1e-5, atol=1e-7,
+        )
+
+
+def test_delay_sweep_compiles_exactly_once(assert_max_compiles):
+    """Retrace pin: one compile per delay-distribution *static point* — the
+    whole distribution axis is value-traced, so three families share one."""
+    from repro.sweep import run_sweep
+
+    spec = _delay_spec(((0.0, 1.0), (1.0, 0.5), (2.0, 1.5)), seeds=(0, 1))
+    _, n = assert_max_compiles(1, run_sweep, spec)
+    assert n == 1

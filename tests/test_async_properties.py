@@ -1,0 +1,201 @@
+"""Hypothesis properties for the async federation layer (ISSUE PR-9 §4).
+
+Three contracts, randomised over schedule families, fleet sizes and run
+lengths:
+
+* K-of-m arrival masks always select exactly the K freshest replicas
+  (stable index tie-break), per period.
+* A zero-delay schedule is bitwise-identical to synchronous VPA on the
+  eager jnp path — the DESIGN.md §15 sync-equivalence contract.
+* Ledger bytes under async equal ``arrivals x payload_bytes(n)``: the
+  arrival-aware accounting never bills a replica that did not uplink.
+"""
+import pytest
+
+pytest.importorskip("hypothesis", reason="hypothesis not installed")
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from hypothesis import given, settings
+from hypothesis import strategies as st
+
+from repro.core.accounting import CostLedger
+from repro.core.async_fed import (
+    AsyncStrategy,
+    kofm_schedule,
+    make_schedule,
+    renewal_arrivals,
+)
+from repro.core.fmarl import FmarlConfig, run_fmarl
+from repro.core.strategies import PeriodicStrategy
+from repro.utils.pytree import tree_l2_norm
+
+SETTINGS = settings(max_examples=40, deadline=None)
+SETTINGS_SLOW = settings(max_examples=10, deadline=None)
+
+DISTS = st.sampled_from(
+    [("deterministic", st.floats(0.0, 3.0)),
+     ("geometric", st.floats(0.05, 0.95)),
+     ("heavytail", st.floats(0.5, 3.0))]
+).flatmap(lambda d: st.tuples(st.just(d[0]), d[1]))
+
+
+@SETTINGS
+@given(
+    dist_param=DISTS,
+    m=st.integers(2, 9),
+    n_periods=st.integers(1, 10),
+    k=st.data(),
+    seed=st.integers(0, 2**20),
+)
+def test_kofm_selects_exactly_k_freshest(dist_param, m, n_periods, k, seed):
+    dist, param = dist_param
+    k = k.draw(st.integers(1, m), label="k")
+    s = kofm_schedule(m, n_periods, k, dist=dist, param=param, seed=seed)
+    arrive = np.asarray(s.arrive)
+    age = np.asarray(s.age)
+    # exactly k arrivals every period, never more or fewer
+    np.testing.assert_array_equal(arrive.sum(axis=0), np.full(n_periods, k))
+    for t in range(n_periods):
+        sel = arrive[:, t] > 0
+        if sel.all():
+            continue
+        # the selected k are the freshest: every unselected replica's
+        # effective staleness is >= the worst selected one...
+        assert age[sel, t].max() <= age[~sel, t].min() + 1e-6
+        # ...and ties break by agent index (lexsort stability): among
+        # replicas at the boundary staleness, selected indices come first
+        boundary = age[sel, t].max()
+        sel_ties = np.flatnonzero(sel & np.isclose(age[:, t], boundary))
+        unsel_ties = np.flatnonzero(~sel & np.isclose(age[:, t], boundary))
+        if len(unsel_ties):
+            assert sel_ties.max() < unsel_ties.min()
+
+
+@SETTINGS
+@given(
+    dist_param=DISTS,
+    m=st.integers(1, 8),
+    n_periods=st.integers(1, 12),
+    seed=st.integers(0, 2**20),
+)
+def test_renewal_invariants(dist_param, m, n_periods, seed):
+    """Arrivals are a renewal process: every boundary's age counts boundaries
+    since the agent's last sync (pending staleness on non-arrivals — the sync
+    weights gate it by ``arrive``), and an age-a arrival at period t implies
+    silence over (t-a, t)."""
+    dist, param = dist_param
+    s = make_schedule(dist, param, m, n_periods, seed=seed)
+    arrive = np.asarray(s.arrive)
+    age = np.asarray(s.age)
+    assert set(np.unique(arrive)) <= {0.0, 1.0}
+    assert np.all(age >= 0) and np.all(age <= n_periods)
+    for i in range(m):
+        last = -1
+        for t in range(n_periods):
+            assert age[i, t] == t - last - 1  # boundaries since last sync
+            if arrive[i, t]:
+                last = t
+    assert s.total_arrivals() == int(arrive.sum())
+
+
+@SETTINGS_SLOW
+@given(
+    m=st.integers(2, 6),
+    tau=st.integers(1, 4),
+    n_periods=st.integers(1, 4),
+    seed=st.integers(0, 2**10),
+)
+def test_zero_delay_bitwise_equals_sync_vpa(m, tau, n_periods, seed):
+    """Zero delay => every replica arrives every boundary with weight exactly
+    1.0, so the masked FedBuff step IS vanilla periodic averaging, executed
+    op-for-op on the eager jnp path. Bitwise, not approximately."""
+
+    def grad_fn(params, key, agent_idx, step):
+        g = jax.tree.map(
+            lambda leaf: leaf
+            + 0.1 * jax.random.normal(jax.random.fold_in(key, 0), leaf.shape),
+            params,
+        )
+        return g, {"loss": tree_l2_norm(params) ** 2}
+
+    init = {"w": jnp.ones((5,)), "b": jnp.ones((2,))}
+    sched = make_schedule("deterministic", 0.0, m, n_periods, seed=seed)
+    cfg_a = FmarlConfig(
+        strategy=AsyncStrategy(tau=tau, schedule=sched, backend="jnp"),
+        eta=0.05, n_periods=n_periods,
+    )
+    cfg_s = FmarlConfig(
+        strategy=PeriodicStrategy(tau=tau, m=m, backend="jnp"),
+        eta=0.05, n_periods=n_periods,
+    )
+    key = jax.random.key(seed)
+    with jax.disable_jit():
+        st_a, m_a, _ = run_fmarl(cfg_a, init, grad_fn, key, lambda p, k: p)
+        st_s, m_s, _ = run_fmarl(cfg_s, init, grad_fn, key, lambda p, k: p)
+    for a, b in zip(jax.tree.leaves(st_a.server_params),
+                    jax.tree.leaves(st_s.server_params)):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+    np.testing.assert_array_equal(
+        np.asarray(m_a["server_grad_sq_norm"]),
+        np.asarray(m_s["server_grad_sq_norm"]),
+    )
+
+
+@SETTINGS
+@given(
+    dist_param=DISTS,
+    m=st.integers(1, 10),
+    tau=st.integers(1, 6),
+    n_periods=st.integers(1, 12),
+    payload=st.integers(1, 10_000),
+    split=st.data(),
+    seed=st.integers(0, 2**20),
+)
+def test_ledger_bytes_equal_arrivals_times_payload(
+    dist_param, m, tau, n_periods, payload, split, seed
+):
+    dist, param = dist_param
+    sched = make_schedule(dist, param, m, n_periods, seed=seed)
+    strat = AsyncStrategy(tau=tau, schedule=sched)
+    cut = split.draw(st.integers(0, n_periods), label="cut")
+    offsets = split.draw(st.integers(0, tau - 1), label="offsets")
+
+    ledger = CostLedger()
+    if cut:
+        ledger.add_periods(strat, cut, payload)
+    if n_periods - cut:
+        ledger.add_periods(strat, n_periods - cut, payload)
+    ledger.add_partial_period(strat, offsets, payload)
+
+    arrivals = sched.total_arrivals()
+    assert ledger.c1_events == arrivals
+    assert ledger.c1_bytes == arrivals * payload * 4
+    assert ledger.total_bytes() == arrivals * payload * 4
+    # local work is billed in full regardless of arrivals
+    assert ledger.c2_events == m * (tau * n_periods + offsets)
+
+
+@SETTINGS
+@given(
+    delays=st.lists(
+        st.lists(st.integers(0, 5), min_size=1, max_size=8),
+        min_size=1, max_size=6,
+    ).filter(lambda rows: len({len(r) for r in rows}) == 1),
+)
+def test_renewal_arrivals_matches_python_reference(delays):
+    """The scanned renewal recurrence agrees with a direct Python loop."""
+    d = np.asarray(delays, np.float32)
+    arrive, age = renewal_arrivals(d)
+    m, T = d.shape
+    for i in range(m):
+        since = 0
+        for t in range(T):
+            since += 1
+            assert age[i, t] == since - 1
+            if since > d[i, t]:
+                assert arrive[i, t] == 1.0
+                since = 0
+            else:
+                assert arrive[i, t] == 0.0
