@@ -21,7 +21,7 @@ def main() -> None:
     ap.add_argument("--only", default=None,
                     help="run a single bench: table2|fig4|fig5|fig6|fig789|"
                          "bounds|roofline|kernels|dispatch|rollout_fleet|comm|"
-                         "consensus_scale|lambda2|async")
+                         "consensus_scale|lambda2|async|serving")
     ap.add_argument("--seeds", type=int, default=None,
                     help="seed count for the sweep-based figure benches "
                          "(fig4/fig5/fig6; default 4)")
@@ -40,6 +40,7 @@ def main() -> None:
         kernel_bench,
         rollout_fleet_bench,
         roofline_bench,
+        serving_bench,
         strategy_dispatch_bench,
         table2,
     )
@@ -54,6 +55,7 @@ def main() -> None:
         "consensus_scale": consensus_scale_bench.run,  # sparse O(m*k) gossip
         "lambda2": fig_lambda2.run,          # beyond-paper mu2 tradeoff figure
         "async": fig_async.run,              # async FedBuff vs sync VPA
+        "serving": serving_bench.run,        # AOT policy serving under load
         "table2": table2.run,                # paper Table II
         "fig4": fig4_variation.run,          # paper Fig. 4
         "fig5": fig5_decay.run,              # paper Fig. 5

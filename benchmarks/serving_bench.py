@@ -1,0 +1,243 @@
+"""Serving benchmark: Poisson open-loop load over the AOT bucketed engine.
+
+Drives ``repro.serve`` exactly as a deployment would (DESIGN.md §16): a
+seeded fleet of open-loop Poisson clients pushes observation requests through
+the micro-batching queue into the engine's precompiled bucket executables.
+Two measurement phases per fleet size m ∈ {64, 1024, 10000}:
+
+* **throughput** — drain a full-fleet backlog (every agent has one pending
+  observation) and report sustained decisions/sec;
+* **latency** — an open-loop arrival schedule at ~50% of the measured
+  capacity, served on a virtual clock that advances by each engine call's
+  *measured* wall time: latency = (virtual) completion - arrival, reported
+  as p50/p99 ms. Open loop is the honest protocol — arrivals are drawn up
+  front and never slow down when the server lags.
+
+Correctness is pinned alongside the timings, same pattern as the other
+benches: the engine's decisions are *bitwise* eager ``policy_apply`` on the
+jnp path, interpret-mode (Pallas body) decisions match to fp32 tolerance,
+bucket padding never changes a real decision, and engine construction
+compiles exactly once per bucket with zero compiles on the serving hot path
+(retrace guard).
+
+Gated keys (stable across --quick/full, see bench_baseline.json):
+``compiles/per_bucket``, ``compiles/hot_path``, ``parity/jnp_bitwise_dev``,
+``parity/interpret_dev``, ``padding/max_abs_dev``,
+``fleets/<m>/decisions_per_sec`` (min), ``fleets/10000/p99_ms`` (max).
+"""
+from __future__ import annotations
+
+import time
+
+import numpy as np
+
+from benchmarks.common import emit, write_bench_json, write_csv
+from repro.analysis.retrace import count_compiles, warmup_jax
+from repro.serve import MicroBatchQueue, ObsNorm, ServeEngine, simulate_clients
+
+import jax
+import jax.numpy as jnp
+
+OBS_DIM, HIDDEN, ACT_DIM = 6, 64, 1
+BUCKETS = (8, 64, 256, 1024)
+FLEET_SIZES = (64, 1024, 10000)
+LOAD_FRACTION = 0.5       # latency phase offers 50% of measured capacity
+SEED = 0
+
+
+def _make_inputs():
+    from repro.rl.policy import init_policy
+
+    params = init_policy(jax.random.key(SEED), OBS_DIM, hidden=HIDDEN,
+                         act_dim=ACT_DIM)
+    norm = ObsNorm(np.linspace(-0.5, 0.5, OBS_DIM).astype(np.float32),
+                   np.full(OBS_DIM, 1.25, np.float32))
+    return params, norm
+
+
+def _compile_section() -> tuple[ServeEngine, dict]:
+    """Retrace pin: one AOT compile per bucket, zero on the hot path."""
+    params, norm = _make_inputs()   # init_policy's own compiles don't count
+    warmup_jax()
+    with count_compiles() as c:
+        eng = ServeEngine(params, norm=norm, buckets=BUCKETS, mode="mean",
+                          backend="jnp", seed=SEED)
+    build_compiles = c.count
+    with count_compiles() as c:
+        for n in (1, 8, 9, 64, 65, 256, 1024, 3, 100):
+            eng.decide(np.zeros((n, OBS_DIM), np.float32))
+    hot = c.count
+    per_bucket = build_compiles / len(BUCKETS)
+    emit("serving/compiles", 0.0,
+         f"per_bucket={per_bucket:g} hot_path={hot}")
+    return eng, {
+        "buckets": list(BUCKETS),
+        "build_compiles": build_compiles,
+        "per_bucket": per_bucket,
+        "hot_path": hot,
+    }
+
+
+def _parity_section(eng: ServeEngine) -> dict:
+    """Bitwise pin vs eager policy_apply + interpret-mode kernel parity.
+
+    ``jnp_bitwise_dev`` is the op-for-op identity of the kernel's jnp
+    reference path with eager ``policy_apply`` on normalized observations —
+    gated at exactly 0.0 (same pattern as the async zero-delay pin). The AOT
+    engine executable is additionally compared against the eager reference
+    (``engine_vs_eager_dev``): that one crosses an XLA compile boundary, so
+    the whole-graph dot emitter may differ from the eager op-by-op one at
+    large batch shapes — fp32-ulp tolerance, not bitwise.
+    """
+    from repro.kernels import dispatch
+    from repro.rl.policy import policy_apply
+
+    obs = np.random.default_rng(1).standard_normal(
+        (137, OBS_DIM)).astype(np.float32)
+    noise = np.random.default_rng(2).standard_normal(
+        (obs.shape[0], ACT_DIM)).astype(np.float32)
+    pi = {k: jnp.asarray(v) for k, v in eng._pi.items()}
+    with jax.disable_jit():
+        got = dispatch.policy_infer(
+            jnp.asarray(obs), pi, eng.norm.mean, eng.norm.std,
+            jnp.asarray(noise), sample=False, backend="jnp",
+        )
+        obsn = (jnp.asarray(obs, jnp.float32) - jnp.asarray(eng.norm.mean)) \
+            / jnp.asarray(eng.norm.std)
+        mean, _ = policy_apply({"pi": pi}, obsn)
+    jnp_dev = float(np.max(np.abs(np.asarray(got) - np.asarray(mean))))
+    engine_dev = float(np.max(np.abs(eng.decide(obs) - np.asarray(mean))))
+
+    a = dispatch.policy_infer(
+        jnp.asarray(obs), pi, eng.norm.mean, eng.norm.std,
+        jnp.asarray(noise), sample=True, backend="jnp",
+    )
+    b = dispatch.policy_infer(
+        jnp.asarray(obs), pi, eng.norm.mean, eng.norm.std,
+        jnp.asarray(noise), sample=True, backend="interpret", block_b=64,
+    )
+    interp_dev = float(jnp.max(jnp.abs(a - b)))
+    emit("serving/parity", 0.0,
+         f"jnp_bitwise_dev={jnp_dev:.1e} interpret_dev={interp_dev:.1e} "
+         f"engine_vs_eager_dev={engine_dev:.1e}")
+    return {"jnp_bitwise_dev": jnp_dev, "interpret_dev": interp_dev,
+            "engine_vs_eager_dev": engine_dev}
+
+
+def _padding_section(eng: ServeEngine) -> dict:
+    """Same bucket, different padding: real rows decide identically."""
+    obs5 = np.random.default_rng(3).standard_normal(
+        (5, OBS_DIM)).astype(np.float32)
+    extra = np.random.default_rng(4).standard_normal(
+        (3, OBS_DIM)).astype(np.float32)
+    alone = eng.decide(obs5)                              # padded 5 -> 8
+    together = eng.decide(np.concatenate([obs5, extra]))  # full bucket
+    dev = float(np.max(np.abs(alone - together[:5])))
+    emit("serving/padding", 0.0, f"max_abs_dev={dev:.1e}")
+    return {"bucket": BUCKETS[0], "real_rows": 5, "max_abs_dev": dev}
+
+
+def _drain_backlog(eng: ServeEngine, q: MicroBatchQueue) -> int:
+    n = 0
+    while (nxt := q.next_batch()) is not None:
+        obs, reqs = nxt
+        eng.decide(obs)
+        n += len(reqs)
+    return n
+
+
+def _throughput(eng: ServeEngine, m: int, repeats: int) -> float:
+    """Sustained decisions/sec draining a full-fleet backlog."""
+    best = 0.0
+    rng = np.random.default_rng(SEED + m)
+    for _ in range(repeats):
+        q = MicroBatchQueue(max_batch=eng.max_batch(), obs_dim=OBS_DIM)
+        from repro.serve import ObsRequest
+
+        obs = rng.standard_normal((m, OBS_DIM)).astype(np.float32)
+        q.push_all([ObsRequest(i, 0.0, obs[i]) for i in range(m)])
+        t0 = time.perf_counter()
+        n = _drain_backlog(eng, q)
+        dt = time.perf_counter() - t0
+        assert n == m
+        best = max(best, m / dt)
+    return best
+
+
+def _latency(eng: ServeEngine, m: int, rate_total: float,
+             horizon: float) -> tuple[np.ndarray, int]:
+    """Open-loop latency: virtual arrival clock + measured service times.
+
+    Requests arrive on the seeded Poisson schedule; the server coalesces
+    everything that has arrived by the current virtual clock (up to the
+    largest bucket), serves it with a real engine call, and advances the
+    clock by the call's measured wall time. Latency = completion - arrival.
+    """
+    reqs = simulate_clients(m, rate_total / m, horizon, obs_dim=OBS_DIM,
+                            seed=SEED + m)
+    lat = np.empty(len(reqs))
+    clock, i = 0.0, 0
+    while i < len(reqs):
+        clock = max(clock, reqs[i].t_arrival)
+        j = i
+        cap = i + eng.max_batch()
+        while j < len(reqs) and reqs[j].t_arrival <= clock and j < cap:
+            j += 1
+        obs = np.stack([r.obs for r in reqs[i:j]])
+        t0 = time.perf_counter()
+        eng.decide(obs)
+        clock += time.perf_counter() - t0
+        for r_i in range(i, j):
+            lat[r_i] = clock - reqs[r_i].t_arrival
+        i = j
+    return lat, len(reqs)
+
+
+def run(quick: bool = False, seeds=None) -> list[dict]:
+    del seeds
+    eng, compiles = _compile_section()
+    parity = _parity_section(eng)
+    padding = _padding_section(eng)
+
+    repeats = 2 if quick else 5
+    horizon = 0.25 if quick else 1.0
+    rows = []
+    fleets = {}
+    for m in FLEET_SIZES:
+        dps = _throughput(eng, m, repeats)
+        lat, n_reqs = _latency(eng, m, LOAD_FRACTION * dps, horizon)
+        p50 = float(np.percentile(lat, 50) * 1e3)
+        p99 = float(np.percentile(lat, 99) * 1e3)
+        emit(f"serving/fleet_m{m}", 1e6 / dps,
+             f"decisions_per_sec={dps:.0f} p50_ms={p50:.3f} "
+             f"p99_ms={p99:.3f} n_reqs={n_reqs}")
+        fleets[str(m)] = {
+            "decisions_per_sec": dps,
+            "p50_ms": p50,
+            "p99_ms": p99,
+            "offered_rate": LOAD_FRACTION * dps,
+            "n_requests": n_reqs,
+        }
+        rows.append({"m": m, "decisions_per_sec": dps, "p50_ms": p50,
+                     "p99_ms": p99, "n_requests": n_reqs})
+
+    out = {
+        "schema_version": 1,
+        "quick": bool(quick),
+        "obs_dim": OBS_DIM,
+        "hidden": HIDDEN,
+        "act_dim": ACT_DIM,
+        "buckets": list(BUCKETS),
+        "load_fraction": LOAD_FRACTION,
+        "compiles": compiles,
+        "parity": parity,
+        "padding": padding,
+        "fleets": fleets,
+    }
+    write_bench_json("serving", out)
+    write_csv("serving", rows)
+    return rows
+
+
+if __name__ == "__main__":
+    run()

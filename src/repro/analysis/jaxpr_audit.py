@@ -48,6 +48,7 @@ ENTRY_MODULES = (
     "repro.core.fmarl",
     "repro.core.async_fed",
     "repro.sweep.runner",
+    "repro.serve.engine",
 )
 
 _ACCUM_PRIMS = {"reduce_sum", "reduce_prod", "dot_general",

@@ -18,11 +18,34 @@ import numpy as np
 _SEP = "/"
 
 
+def _escape(key: str) -> str:
+    """Make a dict key safe for the flat namespace.
+
+    Keys are user data, the separator is structure: a literal ``/`` in a key
+    would read back as a nesting boundary and silently corrupt the round
+    trip. Percent-encode the two metacharacters (``%`` first, so unescaping
+    in the reverse order is exact); everything else passes through, keeping
+    existing checkpoints' flat keys byte-identical.
+    """
+    if not isinstance(key, str):
+        raise TypeError(
+            f"checkpoint: dict keys must be str, got {type(key).__name__}: "
+            f"{key!r}"
+        )
+    if not key:
+        raise ValueError("checkpoint: empty dict keys cannot round-trip")
+    return key.replace("%", "%25").replace(_SEP, "%2F")
+
+
+def _unescape(key: str) -> str:
+    return key.replace("%2F", _SEP).replace("%25", "%")
+
+
 def _flatten(tree, prefix=""):
     out = {}
     if isinstance(tree, dict):
         for k in sorted(tree):
-            out.update(_flatten(tree[k], f"{prefix}{_SEP}d:{k}"))
+            out.update(_flatten(tree[k], f"{prefix}{_SEP}d:{_escape(k)}"))
     elif isinstance(tree, (list, tuple)):
         tag = "l" if isinstance(tree, list) else "t"
         out[f"{prefix}{_SEP}#{tag}"] = np.asarray(len(tree))
@@ -41,12 +64,13 @@ def _unflatten(flat: dict, prefix=""):
         if key in flat:
             n = int(flat[key])
             return ctor(_unflatten(flat, f"{prefix}{_SEP}{tag}:{i}") for i in range(n))
-    # dict: find child keys
+    # dict: find child keys (still escaped — the recursion path needs the
+    # escaped form; only the reconstructed dict key is unescaped)
     pat = re.escape(prefix + _SEP) + r"d:([^/]+)"
     kids = sorted({m.group(1) for k in flat if (m := re.match(pat, k))})
     if not kids:
         raise ValueError(f"cannot reconstruct node at {prefix!r}")
-    return {k: _unflatten(flat, f"{prefix}{_SEP}d:{k}") for k in kids}
+    return {_unescape(k): _unflatten(flat, f"{prefix}{_SEP}d:{k}") for k in kids}
 
 
 def save(ckpt_dir: str, step: int, tree: Any, metadata: Optional[dict] = None) -> str:

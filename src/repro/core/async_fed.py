@@ -21,6 +21,9 @@ Pieces:
 * :func:`kofm_schedule` — the buffered FedBuff variant: every period exactly
   the K *freshest* replicas (smallest effective staleness, ties by agent
   index) are admitted; host-side generator for static schedules.
+* :func:`kofm_arrivals` — its traced twin (a rank comparison inside a scan),
+  where even K may be a traced scalar — the ``k`` sweep axis
+  (``repro.sweep`` ``override_k``) runs buffer-size sweeps in one compile.
 * :func:`masked_server_step` — the masked ``row_mean``: the staleness-
   weighted mean over the arrived replicas, built from the existing
   ``scale_rows`` / ``row_mean`` dispatch primitives so every backend and the
@@ -144,6 +147,12 @@ class DelaySchedule:
     n_periods: int
     label: str
     k: Optional[int] = None
+    # the lag process that generated this schedule, when known — the traced
+    # sweep axes (delay, k) redraw the identical lag inside the trace from
+    # (dist, param, delay_axis_key(eval_seed)), so host accounting and the
+    # vmapped cells see the same arrival process
+    dist: Optional[str] = None
+    param: Optional[float] = None
 
     @property
     def m(self) -> int:
@@ -194,7 +203,42 @@ def make_schedule(
         age=np.asarray(jax.device_get(age), np.float32),
         n_periods=int(n_periods),
         label=f"{dist}({param:g})",
+        dist=dist,
+        param=float(param),
     )
+
+
+def kofm_arrivals(lag, k):
+    """Traced twin of the :func:`kofm_schedule` selection loop.
+
+    ``lag`` is the ``(m, T)`` per-(agent, period) delay draws (traced on a
+    sweep axis); ``k`` the buffer size, which may itself be a *traced* scalar
+    — the selection is a rank comparison, not a shape change, so a ``k``
+    sweep axis is value-only and vmaps in one compile. Replays the host
+    loop's renewal recurrence exactly: per boundary, effective staleness
+    ``eff = since - 1 + lag``, the ``k`` smallest-``eff`` agents arrive (ties
+    by agent index — ``jnp.argsort`` is stable, matching the host lexsort),
+    their clocks reset, and the recorded age is ``eff`` for everyone. Returns
+    ``(arrive, age)``, both ``(m, T)`` float32, bitwise-equal to the numpy
+    constructor on concrete inputs (pinned by ``tests/test_async_fed.py``).
+    """
+    lag = jnp.asarray(lag, jnp.float32)
+    m = lag.shape[0]
+    k = jnp.asarray(k, jnp.float32)
+
+    def step(c, lag_t):
+        since = c + 1.0
+        eff = since - 1.0 + lag_t
+        order = jnp.argsort(eff)
+        ranks = jnp.zeros(m, jnp.float32).at[order].set(
+            jnp.arange(m, dtype=jnp.float32)
+        )
+        arrive = (ranks < k).astype(jnp.float32)
+        c = jnp.where(arrive > 0.0, 0.0, since)
+        return c, (arrive, eff)
+
+    _, (arrive, age) = jax.lax.scan(step, jnp.zeros(m, jnp.float32), lag.T)
+    return arrive.T, age.T
 
 
 def kofm_schedule(
@@ -246,6 +290,8 @@ def kofm_schedule(
         n_periods=int(n_periods),
         label=f"fedbuff(k={k},{dist}({param:g}))",
         k=int(k),
+        dist=dist,
+        param=float(param),
     )
 
 
@@ -531,8 +577,41 @@ def _audit_delay_axis() -> dispatch.HotPathEntry:
     return dispatch.HotPathEntry(fn=batched, args=args)
 
 
+def _audit_k_axis() -> dispatch.HotPathEntry:
+    """The ``k``-axis static-point fn, exactly as ``run_sweep`` jits it.
+
+    A tiny async FedRL sweep over two buffer sizes x one seed: the
+    lag-redrawing override, the traced K-of-m selection scan
+    (:func:`kofm_arrivals`), the masked server step and both driver scans
+    all land in the audited jaxpr. One static point == one compile (the
+    retrace guard pins this in the test suite).
+    """
+    from repro.rl.env import FIGURE_EIGHT
+    from repro.rl.fedrl import FedRLConfig
+    from repro.sweep.runner import audit_batched_fn
+    from repro.sweep.spec import SweepAxis, SweepSpec
+
+    sched = kofm_schedule(7, 1, 3, dist="geometric", param=0.5, seed=1234)
+    base = FedRLConfig(
+        env=FIGURE_EIGHT,
+        strategy=AsyncStrategy(tau=2, schedule=sched, backend="jnp"),
+        n_epochs=1,
+        epoch_len=4,
+        minibatch=2,
+    )
+    spec = SweepSpec(
+        name="audit-k",
+        base=base,
+        seeds=(0,),
+        vmapped=(SweepAxis(name="k", values=(2.0, 5.0)),),
+    )
+    batched, args = audit_batched_fn(spec)
+    return dispatch.HotPathEntry(fn=batched, args=args)
+
+
 for _b in ("jnp", "interpret"):
     dispatch.register_hot_path(
         f"async_fed.masked_server_step[{_b}]", _audit_masked_server(_b)
     )
 dispatch.register_hot_path("async_fed.delay_axis_fn", _audit_delay_axis)
+dispatch.register_hot_path("async_fed.k_axis_fn", _audit_k_axis)

@@ -508,6 +508,66 @@ def topk_scatter(x, thresh, *, backend: str = "auto", block_n: int = 4096):
     )
 
 
+def policy_infer(obs, pi, norm_mean, norm_std, noise, *, sample: bool = False,
+                 backend: str = "auto", block_b: int = 256):
+    """Fused serving inference: obs-normalize -> policy MLP -> sample/mean.
+
+    The serving-side primitive (DESIGN.md §16): ``obs`` is a ``(B, obs_dim)``
+    observation batch, ``pi`` the Gaussian policy head (the ``params["pi"]``
+    subtree of ``repro.rl.policy.init_policy`` — w1/b1/w2/b2/w3/b3/log_std),
+    ``norm_mean``/``norm_std`` the ``(obs_dim,)`` fp32 normalization stats and
+    ``noise`` a ``(B, act_dim)`` standard-normal operand. Returns the
+    ``(B, act_dim)`` actions: the tanh policy mean (``sample=False`` — the
+    deterministic decision, the density argmax of the squashed Gaussian) or
+    ``mean + exp(log_std) * noise`` (``sample=True``).
+
+    Bitwise contract: the jnp path *is* eager ``rl.policy.policy_apply`` on
+    the normalized batch — bit-identical to the training-side policy in eager
+    mode, pinned by the serving bench and tests. ``noise`` is an operand in
+    both modes so the serving engine can donate its buffer (it aliases the
+    action output; JXA004-verified on the ``serve.engine_step`` entry). No
+    leading sweep axis: serving batches are bucket-shaped, not swept.
+    """
+    b = resolve_backend(backend)
+    if obs.ndim != 2:
+        raise ValueError(f"policy_infer: obs must be (B, obs_dim), got {obs.shape}")
+    for name in ("w1", "b1", "w2", "b2", "w3", "b3", "log_std"):
+        if name not in pi:
+            raise ValueError(f"policy_infer: pi needs {name!r} (got {sorted(pi)})")
+    B, obs_dim = obs.shape
+    act_dim = pi["w3"].shape[1]
+    if pi["w1"].shape[0] != obs_dim:
+        raise ValueError(
+            f"policy_infer: w1 expects obs_dim {pi['w1'].shape[0]}, "
+            f"obs has {obs_dim}"
+        )
+    if noise.shape != (B, act_dim):
+        raise ValueError(
+            f"policy_infer: noise must be ({B}, {act_dim}), got {noise.shape}"
+        )
+    nm = jnp.asarray(norm_mean, jnp.float32)
+    ns = jnp.asarray(norm_std, jnp.float32)
+    if nm.shape != (obs_dim,) or ns.shape != (obs_dim,):
+        raise ValueError(
+            f"policy_infer: norm stats must be ({obs_dim},), got "
+            f"{nm.shape} / {ns.shape}"
+        )
+    if b == "jnp":
+        from repro.rl.policy import policy_apply
+
+        obsn = (obs.astype(jnp.float32) - nm) / ns
+        mean, log_std = policy_apply({"pi": pi}, obsn)
+        act = mean + jnp.exp(log_std) * noise.astype(jnp.float32) if sample else mean
+        return act.astype(obs.dtype)
+    from repro.kernels.policy_infer import policy_infer_pallas
+
+    return policy_infer_pallas(
+        obs, pi["w1"], pi["b1"], pi["w2"], pi["b2"], pi["w3"], pi["b3"],
+        pi["log_std"], nm, ns, noise,
+        sample=sample, block_b=block_b, interpret=(b == "interpret"),
+    )
+
+
 def _check_opt_state(state, required, params, kind):
     for name in required:
         buf = state.get(name)
@@ -701,6 +761,20 @@ def _primitive_hot_path(prim: str, backend: str) -> Callable[[], HotPathEntry]:
                 fn=lambda x, t: topk_scatter(x, t, backend=backend),
                 args=(buf(m, n), buf(m)),
             )
+        if prim == "policy_infer":
+            B, od, h, ad = 8, 6, 16, 2
+            pi = {
+                "w1": buf(od, h), "b1": buf(h),
+                "w2": buf(h, h), "b2": buf(h),
+                "w3": buf(h, ad), "b3": buf(ad),
+                "log_std": buf(ad),
+            }
+            return HotPathEntry(
+                fn=lambda obs, p, nm, ns, z: policy_infer(
+                    obs, p, nm, ns, z, sample=True, backend=backend
+                ),
+                args=(buf(B, od), pi, buf(od), buf(od), buf(B, ad)),
+            )
         raise ValueError(f"unknown dispatch primitive {prim!r}")
 
     return factory
@@ -708,7 +782,7 @@ def _primitive_hot_path(prim: str, backend: str) -> Callable[[], HotPathEntry]:
 
 DISPATCH_PRIMITIVES = (
     "decay_accum", "scale_rows", "consensus_mix", "consensus_gather",
-    "row_mean", "topk_scatter",
+    "row_mean", "topk_scatter", "policy_infer",
 )
 
 # The pallas backend proper needs a TPU to lower; jnp + interpret cover both

@@ -1,0 +1,135 @@
+"""Pallas TPU kernel: fused obs-normalize -> policy-MLP -> sample/mean inference.
+
+The serving twin of the training kernels (DESIGN.md §16): one pass over a
+bucket-shaped observation batch performs the whole decision — normalize the
+raw observations with the fleet's running stats, run the Gaussian policy's
+tanh MLP head (``repro.rl.policy.policy_apply``), and either emit the mode
+(``sample=False`` — the deterministic serving decision, the density argmax of
+the tanh-squashed Gaussian) or add ``exp(log_std) * noise`` for stochastic
+serving. Done eagerly that is five kernel launches and four ``(B, hidden)``
+temporaries; fused it is a single grid sweep over batch blocks with the
+(tiny) weight matrices resident in VMEM and every matmul accumulating fp32
+on the MXU (``preferred_element_type``), matching the dispatch fp32 contract.
+
+The noise operand exists in both modes so the serving engine can donate it:
+the ``(B, act_dim)`` buffer is dead after the decision and aliases the action
+output (verified by the jaxpr audit's JXA004 rule on the registered
+``serve.engine_step`` entry).
+
+Shapes here are serving-sized, not MXU-sized (obs_dim ~6, hidden 64,
+act_dim ~1): on a real TPU Mosaic pads the lanes to 128, so the kernel is
+bandwidth- not FLOP-bound — which is exactly the point: one HBM sweep over
+the observation batch instead of five.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _policy_infer_kernel(nm_ref, ns_ref, w1_ref, b1_ref, w2_ref, b2_ref,
+                         w3_ref, b3_ref, ls_ref, obs_ref, noise_ref, act_ref,
+                         *, sample: bool):
+    # fp32 throughout regardless of buffer dtypes; only the action output is
+    # cast back, matching the jnp reference path in dispatch.policy_infer.
+    x = (obs_ref[...].astype(jnp.float32) - nm_ref[...]) / ns_ref[...]
+    h = jnp.tanh(
+        jnp.dot(x, w1_ref[...].astype(jnp.float32),
+                preferred_element_type=jnp.float32) + b1_ref[...]
+    )
+    h = jnp.tanh(
+        jnp.dot(h, w2_ref[...].astype(jnp.float32),
+                preferred_element_type=jnp.float32) + b2_ref[...]
+    )
+    mean = jnp.tanh(
+        jnp.dot(h, w3_ref[...].astype(jnp.float32),
+                preferred_element_type=jnp.float32) + b3_ref[...]
+    )
+    if sample:
+        act = mean + jnp.exp(ls_ref[...]) * noise_ref[...].astype(jnp.float32)
+    else:
+        act = mean
+    act_ref[...] = act.astype(act_ref.dtype)
+
+
+@functools.partial(
+    jax.jit, static_argnames=("sample", "block_b", "interpret")
+)
+def policy_infer_pallas(obs, w1, b1, w2, b2, w3, b3, log_std,
+                        norm_mean, norm_std, noise, *,
+                        sample: bool = False, block_b: int = 256,
+                        interpret: bool = False):
+    """obs: (B, obs_dim) observations; weights: the ``params["pi"]`` head.
+
+    ``norm_mean``/``norm_std``: (obs_dim,) fp32 normalization stats;
+    ``noise``: (B, act_dim) standard-normal draws (ignored unless ``sample``
+    but always an operand — the serving engine donates it). Returns the
+    ``(B, act_dim)`` actions in ``obs.dtype``.
+    """
+    if obs.ndim != 2:
+        raise ValueError(f"policy_infer_pallas: obs must be (B, obs_dim), "
+                         f"got {obs.shape}")
+    B, obs_dim = obs.shape
+    hidden = w1.shape[1]
+    act_dim = w3.shape[1]
+    if w1.shape != (obs_dim, hidden):
+        raise ValueError(
+            f"policy_infer_pallas: w1 must be ({obs_dim}, hidden), "
+            f"got {w1.shape}"
+        )
+    if w2.shape != (hidden, hidden) or w3.shape[0] != hidden:
+        raise ValueError(
+            f"policy_infer_pallas: w2/w3 must chain from hidden={hidden}, "
+            f"got {w2.shape} / {w3.shape}"
+        )
+    if noise.shape != (B, act_dim):
+        raise ValueError(
+            f"policy_infer_pallas: noise must be ({B}, {act_dim}), "
+            f"got {noise.shape}"
+        )
+    for name, v, shape in (("b1", b1, (hidden,)), ("b2", b2, (hidden,)),
+                           ("b3", b3, (act_dim,)),
+                           ("log_std", log_std, (act_dim,)),
+                           ("norm_mean", norm_mean, (obs_dim,)),
+                           ("norm_std", norm_std, (obs_dim,))):
+        if v.shape != shape:
+            raise ValueError(
+                f"policy_infer_pallas: {name} must be {shape}, got {v.shape}"
+            )
+    if block_b < 1:
+        raise ValueError(
+            f"policy_infer_pallas: block_b must be >= 1, got {block_b}"
+        )
+    if B == 0:
+        return jnp.zeros((0, act_dim), obs.dtype)
+    block_b = min(block_b, B)
+    pad = (-B) % block_b
+    if pad:
+        # zero rows are decision-neutral: each batch row is independent, so
+        # padded rows only produce extra (discarded) actions.
+        obs = jnp.pad(obs, ((0, pad), (0, 0)))
+        noise = jnp.pad(noise, ((0, pad), (0, 0)))
+    Bp = obs.shape[0]
+    full = lambda *shape: pl.BlockSpec(shape, lambda i: (0,) * len(shape))
+    f32 = functools.partial(jnp.asarray, dtype=jnp.float32)
+    out = pl.pallas_call(
+        functools.partial(_policy_infer_kernel, sample=sample),
+        grid=(Bp // block_b,),
+        in_specs=[
+            full(obs_dim), full(obs_dim),                 # norm mean / std
+            full(obs_dim, hidden), full(hidden),          # w1 / b1
+            full(hidden, hidden), full(hidden),           # w2 / b2
+            full(hidden, act_dim), full(act_dim),         # w3 / b3
+            full(act_dim),                                # log_std
+            pl.BlockSpec((block_b, obs_dim), lambda i: (i, 0)),
+            pl.BlockSpec((block_b, act_dim), lambda i: (i, 0)),
+        ],
+        out_specs=pl.BlockSpec((block_b, act_dim), lambda i: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct((Bp, act_dim), obs.dtype),
+        interpret=interpret,
+    )(f32(norm_mean), f32(norm_std), w1, b1, w2, b2, w3, b3,
+      f32(log_std), obs, noise)
+    return out[:B] if pad else out

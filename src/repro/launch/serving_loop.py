@@ -87,18 +87,18 @@ class ServingLoop:
         self._reset_slot_state(slot_idx)
         s = self.slots[slot_idx]
         s.rid, s.pos, s.remaining, s.out = req.rid, 0, req.max_new_tokens, []
-        # feed the prompt token-by-token through the decode path (fills the
-        # slot's region of the shared cache); the last logits seed decoding
-        for t in req.prompt:
+        # feed all but the last prompt token through the decode path (fills
+        # the slot's region of the shared cache); the last prompt token stays
+        # in the token buffer so the next lockstep decode step consumes it —
+        # its first generated token comes out of the same batched argmax as
+        # everyone else's, with no per-request scalar sync at admit time
+        for t in req.prompt[:-1]:
             tok = self._tok.at[slot_idx, 0].set(int(t))
             pos = jnp.asarray([sl.pos for sl in self.slots], jnp.int32)
-            logits, self.state = self._prefill_tok(self.params, tok,
-                                                   self.state, pos)
+            _, self.state = self._prefill_tok(self.params, tok,
+                                              self.state, pos)
             s.pos += 1
-        nxt = int(jnp.argmax(logits[slot_idx, -1]))
-        s.out.append(nxt)
-        s.remaining -= 1
-        self._tok = self._tok.at[slot_idx, 0].set(nxt)
+        self._tok = self._tok.at[slot_idx, 0].set(int(req.prompt[-1]))
 
     def run(self, requests: Iterable[Request]) -> List[Completion]:
         queue = list(requests)

@@ -1,0 +1,37 @@
+"""Policy-serving engine: AOT bucketed batches + micro-batching queue.
+
+See DESIGN.md §16. The public surface:
+
+- :class:`~repro.serve.engine.ServeEngine` — bucketed AOT policy-forward
+  engine (one XLA compile per bucket, donated noise buffer on the hot path).
+- :class:`~repro.serve.engine.ObsNorm` / :func:`~repro.serve.engine.save_for_serving`
+  — observation-normalization stats and the checkpoint writer twin of
+  ``ServeEngine.from_checkpoint``.
+- :class:`~repro.serve.queue.MicroBatchQueue` / :class:`~repro.serve.queue.ObsRequest`
+  — arrival-order request coalescing into bucket-shaped batches.
+- :func:`~repro.serve.queue.poisson_arrivals` / :func:`~repro.serve.queue.simulate_clients`
+  — seeded open-loop client schedules (tests + serving bench).
+"""
+from repro.serve.engine import (
+    DEFAULT_BUCKETS,
+    ObsNorm,
+    ServeEngine,
+    save_for_serving,
+)
+from repro.serve.queue import (
+    MicroBatchQueue,
+    ObsRequest,
+    poisson_arrivals,
+    simulate_clients,
+)
+
+__all__ = [
+    "DEFAULT_BUCKETS",
+    "MicroBatchQueue",
+    "ObsNorm",
+    "ObsRequest",
+    "ServeEngine",
+    "poisson_arrivals",
+    "save_for_serving",
+    "simulate_clients",
+]

@@ -1,0 +1,292 @@
+"""AOT-compiled policy-serving engine: bucketed batches, zero retraces.
+
+The serving half of the ROADMAP north star (DESIGN.md §16): a trained fleet
+policy (``repro.rl.policy``) turned into a decision service. The engine
+AOT-compiles the fused inference step (``dispatch.policy_infer`` — obs
+normalize -> policy MLP -> sample/mean) at a small set of *bucketed* batch
+shapes via ``jax.jit(...).lower().compile()`` at construction time. Every
+request batch is padded up to the smallest covering bucket and dispatched to
+that bucket's precompiled executable — the hot path never traces, never
+compiles, and never consults the jit cache (one XLA compile per bucket,
+pinned by the retrace guard in tests and the serving bench).
+
+Hot-path buffer discipline: the ``(bucket, act_dim)`` noise operand is dead
+after the decision and is *donated* — it aliases the action output (the
+jaxpr audit's JXA004 rule verifies the lowering honors it on the registered
+``serve.engine_step`` entry). The padded observation buffer is built host-
+side with numpy (no device round-trip until the single executable call), and
+decisions come back as one host transfer per batch, never per request.
+
+Restore path: :meth:`ServeEngine.from_checkpoint` loads the policy pytree
+(and optional normalization stats) through ``repro.checkpoint.restore`` —
+the same escaped flat-key .npz format the trainer writes — and
+:func:`save_for_serving` is its writer twin. :meth:`load_params` hot-swaps
+weights into a live engine without recompiling (same shapes, same
+executables).
+"""
+from __future__ import annotations
+
+import bisect
+import dataclasses
+from typing import Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.kernels import dispatch
+
+DEFAULT_BUCKETS = (8, 64, 256, 1024)
+
+MODES = ("mean", "sample")
+
+
+@dataclasses.dataclass(frozen=True)
+class ObsNorm:
+    """Observation normalization stats: ``(obs - mean) / std``.
+
+    ``std`` entries must be strictly positive (enforced at construction; the
+    identity norm is mean 0 / std 1). Stored fp32 so serving normalizes
+    exactly like an fp32 training-side normalizer would.
+    """
+
+    mean: np.ndarray
+    std: np.ndarray
+
+    def __post_init__(self):
+        mean = np.asarray(self.mean, np.float32)
+        std = np.asarray(self.std, np.float32)
+        if mean.ndim != 1 or mean.shape != std.shape:
+            raise ValueError(
+                f"ObsNorm: mean/std must be matching (obs_dim,) vectors, "
+                f"got {mean.shape} vs {std.shape}"
+            )
+        if not np.all(std > 0.0):
+            raise ValueError("ObsNorm: std must be strictly positive")
+        object.__setattr__(self, "mean", mean)
+        object.__setattr__(self, "std", std)
+
+    @classmethod
+    def identity(cls, obs_dim: int) -> "ObsNorm":
+        return cls(np.zeros(obs_dim, np.float32), np.ones(obs_dim, np.float32))
+
+    @classmethod
+    def from_obs(cls, obs, eps: float = 1e-6) -> "ObsNorm":
+        """Fit stats from an ``(..., obs_dim)`` observation buffer (e.g. the
+        training rollouts' trajectory observations)."""
+        o = np.asarray(jax.device_get(obs), np.float32)
+        flat = o.reshape(-1, o.shape[-1])
+        return cls(flat.mean(axis=0), flat.std(axis=0) + eps)
+
+
+def _policy_dims(pi) -> Tuple[int, int]:
+    for name in ("w1", "w3"):
+        if name not in pi:
+            raise ValueError(
+                f"serve: params['pi'] needs {name!r} (got {sorted(pi)})"
+            )
+    return int(pi["w1"].shape[0]), int(pi["w3"].shape[1])
+
+
+class ServeEngine:
+    """Bucketed AOT policy-forward engine over a trained fleet policy.
+
+    ``params`` is the ``repro.rl.policy.init_policy`` pytree (or any tree
+    with a matching ``"pi"`` head). ``mode`` picks the decision rule:
+    ``"mean"`` (deterministic — the tanh policy mean) or ``"sample"``
+    (mean + exp(log_std) * noise, noise from a seeded host-side generator so
+    a replayed request schedule reproduces its decisions bit-for-bit).
+    """
+
+    def __init__(self, params, *, norm: Optional[ObsNorm] = None,
+                 buckets: Tuple[int, ...] = DEFAULT_BUCKETS,
+                 mode: str = "mean", backend: str = "auto", seed: int = 0):
+        if mode not in MODES:
+            raise ValueError(f"unknown serve mode {mode!r}; expected {MODES}")
+        if "pi" not in params:
+            raise ValueError(
+                f"serve: params must carry the policy head under 'pi', "
+                f"got keys {sorted(params)}"
+            )
+        buckets = tuple(sorted(set(int(b) for b in buckets)))
+        if not buckets or buckets[0] < 1:
+            raise ValueError(f"serve: buckets must be positive ints, got {buckets}")
+        self.mode = mode
+        self.backend = dispatch.resolve_backend(backend)
+        self.buckets = buckets
+        self.obs_dim, self.act_dim = _policy_dims(params["pi"])
+        self.norm = norm if norm is not None else ObsNorm.identity(self.obs_dim)
+        if self.norm.mean.shape != (self.obs_dim,):
+            raise ValueError(
+                f"serve: norm is for obs_dim {self.norm.mean.shape[0]}, "
+                f"policy expects {self.obs_dim}"
+            )
+        self._pi = {k: jnp.asarray(v) for k, v in params["pi"].items()}
+        self._nm = jnp.asarray(self.norm.mean, jnp.float32)
+        self._ns = jnp.asarray(self.norm.std, jnp.float32)
+        self._rng = np.random.default_rng(seed)
+        self.n_decisions = 0
+        self.n_padded = 0
+        self.bucket_calls: Dict[int, int] = {b: 0 for b in buckets}
+        # --- AOT compile: exactly one XLA compile per bucket, at init ------
+        sample = mode == "sample"
+        backend_r = self.backend
+
+        def step(pi, nm, ns, obs, noise):
+            return dispatch.policy_infer(
+                obs, pi, nm, ns, noise, sample=sample, backend=backend_r
+            )
+
+        self._step_fn = step
+        pi_struct = jax.tree.map(
+            lambda x: jax.ShapeDtypeStruct(x.shape, x.dtype), self._pi
+        )
+        vec = lambda n: jax.ShapeDtypeStruct((n,), jnp.float32)
+        self._compiled = {}
+        jitted = jax.jit(step, donate_argnums=(4,))
+        for b in buckets:
+            lowered = jitted.lower(
+                pi_struct, vec(self.obs_dim), vec(self.obs_dim),
+                jax.ShapeDtypeStruct((b, self.obs_dim), jnp.float32),
+                jax.ShapeDtypeStruct((b, self.act_dim), jnp.float32),
+            )
+            self._compiled[b] = lowered.compile()
+
+    # --- checkpoint seam -------------------------------------------------------
+    @classmethod
+    def from_checkpoint(cls, ckpt_dir: str, step: Optional[int] = None,
+                        **kwargs) -> "ServeEngine":
+        """Restore a serving engine through ``repro.checkpoint.restore``.
+
+        Accepts either a :func:`save_for_serving` checkpoint (``{"params":
+        ..., "obs_norm": {"mean", "std"}}``) or a bare policy pytree with a
+        ``"pi"`` head. An explicit ``norm=`` kwarg overrides the stored one.
+        """
+        from repro.checkpoint import restore
+
+        tree, _meta = restore(ckpt_dir, step)
+        if "params" in tree:
+            params = tree["params"]
+            if "norm" not in kwargs and "obs_norm" in tree:
+                kwargs["norm"] = ObsNorm(
+                    tree["obs_norm"]["mean"], tree["obs_norm"]["std"]
+                )
+        elif "pi" in tree:
+            params = tree
+        else:
+            raise ValueError(
+                f"serve: checkpoint carries neither 'params' nor 'pi' "
+                f"(got keys {sorted(tree)})"
+            )
+        return cls(params, **kwargs)
+
+    def load_params(self, params) -> None:
+        """Hot-swap policy weights without recompiling (same shapes)."""
+        if "pi" not in params:
+            raise ValueError("serve: params must carry the policy head under 'pi'")
+        new = {k: jnp.asarray(v) for k, v in params["pi"].items()}
+        for k, v in self._pi.items():
+            if k not in new or new[k].shape != v.shape or new[k].dtype != v.dtype:
+                raise ValueError(
+                    f"serve: hot-swap params differ in structure at 'pi.{k}' "
+                    f"— build a new engine instead"
+                )
+        self._pi = new
+
+    # --- hot path --------------------------------------------------------------
+    def bucket_for(self, n: int) -> int:
+        """Smallest bucket covering ``n`` (the largest bucket caps ``n``)."""
+        if n < 1:
+            raise ValueError(f"serve: batch must be >= 1, got {n}")
+        i = bisect.bisect_left(self.buckets, n)
+        return self.buckets[min(i, len(self.buckets) - 1)]
+
+    def max_batch(self) -> int:
+        return self.buckets[-1]
+
+    def decide(self, obs) -> np.ndarray:
+        """Decisions for an ``(n, obs_dim)`` observation batch, ``n`` <= the
+        largest bucket. Pads to the covering bucket, runs that bucket's
+        precompiled executable, and slices the padding back off — padded rows
+        never change a real row's decision (rows are independent; pinned by
+        tests). Returns host ``(n, act_dim)`` float32 actions."""
+        obs = np.asarray(obs, np.float32)
+        if obs.ndim != 2 or obs.shape[1] != self.obs_dim:
+            raise ValueError(
+                f"serve: obs must be (n, {self.obs_dim}), got {obs.shape}"
+            )
+        n = obs.shape[0]
+        if n > self.buckets[-1]:
+            raise ValueError(
+                f"serve: batch of {n} exceeds the largest bucket "
+                f"{self.buckets[-1]}; split it (the queue does this)"
+            )
+        b = self.bucket_for(n)
+        if n < b:
+            padded = np.zeros((b, self.obs_dim), np.float32)
+            padded[:n] = obs
+            obs = padded
+        if self.mode == "sample":
+            noise = self._rng.standard_normal(
+                (b, self.act_dim), dtype=np.float32
+            )
+        else:
+            noise = np.zeros((b, self.act_dim), np.float32)
+        act = self._compiled[b](self._pi, self._nm, self._ns, obs, noise)
+        self.n_decisions += n
+        self.n_padded += b - n
+        self.bucket_calls[b] += 1
+        return np.asarray(jax.device_get(act))[:n]
+
+
+def save_for_serving(ckpt_dir: str, step: int, params,
+                     norm: Optional[ObsNorm] = None,
+                     metadata: Optional[dict] = None) -> str:
+    """Write a serving checkpoint (``repro.checkpoint.save`` format).
+
+    The tree layout is what :meth:`ServeEngine.from_checkpoint` reads back:
+    ``{"params": <policy pytree>, "obs_norm": {"mean", "std"}}``.
+    """
+    from repro.checkpoint import save
+
+    if "pi" not in params:
+        raise ValueError("serve: params must carry the policy head under 'pi'")
+    obs_dim, _ = _policy_dims(params["pi"])
+    norm = norm if norm is not None else ObsNorm.identity(obs_dim)
+    tree = {
+        "params": params,
+        "obs_norm": {"mean": norm.mean, "std": norm.std},
+    }
+    meta = dict(metadata or {})
+    meta.setdefault("kind", "serve")
+    return save(ckpt_dir, step, tree, metadata=meta)
+
+
+# --- trace-safety audit registration (repro.analysis.jaxpr_audit) -------------
+
+def _audit_engine_step() -> dispatch.HotPathEntry:
+    """The per-bucket serving step exactly as the engine AOT-compiles it.
+
+    Registered with ``donate_argnums=(4,)`` (the noise buffer) so the jaxpr
+    audit's JXA004 rule verifies the lowering actually aliases the donated
+    ``(bucket, act_dim)`` noise input to the action output — the engine's
+    "donated buffers on the hot path" claim is checked, not asserted.
+    """
+    B, od, h, ad = 8, 6, 16, 2
+    buf = lambda *s: jax.ShapeDtypeStruct(s, jnp.float32)
+    pi = {
+        "w1": buf(od, h), "b1": buf(h),
+        "w2": buf(h, h), "b2": buf(h),
+        "w3": buf(h, ad), "b3": buf(ad),
+        "log_std": buf(ad),
+    }
+    return dispatch.HotPathEntry(
+        fn=lambda p, nm, ns, obs, noise: dispatch.policy_infer(
+            obs, p, nm, ns, noise, sample=True, backend="jnp"
+        ),
+        args=(pi, buf(od), buf(od), buf(B, od), buf(B, ad)),
+        donate_argnums=(4,),
+    )
+
+
+dispatch.register_hot_path("serve.engine_step", _audit_engine_step)

@@ -35,6 +35,11 @@ Built-in axes:
   trace* from the traced draws. Shapes (m, n_periods, tau) stay static, so
   every delay distribution of the axis shares one trace; requires an
   ``AsyncStrategy`` base whose schedule fixes the horizon.
+* ``k`` — FedBuff buffer-size axis: each point is a scalar K and the
+  override re-selects the K freshest arrivals inside the trace
+  (``repro.core.async_fed.kofm_arrivals`` — K enters only a rank
+  comparison, so buffer-size sweeps are value-only and share one compile);
+  requires an ``AsyncStrategy`` base on a ``kofm_schedule``.
 * ``hetero_scale`` — fleet-heterogeneity magnitude: rebuilds the per-agent
   ``EnvParams`` with perturbation directions fixed by a PRNG key and the
   traced scale multiplying them (the asynchronous-MDP knob as a value-only
@@ -258,12 +263,64 @@ def override_delay(cfg, point):
     return dataclasses.replace(cfg, strategy=strat)
 
 
+def override_k(cfg, k):
+    """FedBuff buffer-size axis: re-select the K freshest arrivals traced.
+
+    ``k`` is a scalar point (float32 carries buffer sizes exactly). The
+    override redraws the schedule's lag process inside the trace — same
+    ``(dist, param)`` recorded on the base K-of-m schedule, same
+    ``delay_axis_key(cfg.eval_seed)`` uniforms the host constructor used —
+    then reruns the selection as :func:`repro.core.async_fed.kofm_arrivals`,
+    where K enters only a rank *comparison*. All shapes stay static, so
+    every buffer size of the axis shares one trace (retrace-pinned); callers
+    keep points inside ``1 <= k <= m``, which cannot be checked on tracers.
+    The strategy's host-side accounting keeps the base-K schedule; benches
+    rebuild the matching concrete schedule via ``kofm_schedule(..., k=point,
+    seed=cfg.eval_seed)``.
+    """
+    from repro.core.async_fed import (
+        DELAY_DISTRIBUTIONS,
+        AsyncStrategy,
+        delay_axis_key,
+        delay_draws,
+        kofm_arrivals,
+        sync_weight_table,
+    )
+
+    strat = cfg.strategy
+    if not isinstance(strat, AsyncStrategy):
+        raise TypeError(
+            f"'k' axis needs an AsyncStrategy base, got {type(strat).__name__}"
+        )
+    sched = strat.schedule
+    if sched.k is None or sched.dist is None:
+        raise ValueError(
+            "'k' axis needs a K-of-m base schedule that records its lag "
+            "process — build it with kofm_schedule(...)"
+        )
+    k = jnp.asarray(k, jnp.float32)
+    if k.ndim != 0:
+        raise ValueError(
+            f"'k' axis points must be scalars, got shape {k.shape}"
+        )
+    lag = delay_draws(
+        DELAY_DISTRIBUTIONS[sched.dist], sched.param, sched.m,
+        sched.n_periods, delay_axis_key(getattr(cfg, "eval_seed", 0)),
+    )
+    arrive, age = kofm_arrivals(lag, k)
+    weights = sync_weight_table(arrive, age, strat.stale_table)
+    sched = dataclasses.replace(sched, arrive=arrive, age=age)
+    strat = _strategy_copy(strat, schedule=sched, sync_weights=weights)
+    return dataclasses.replace(cfg, strategy=strat)
+
+
 OVERRIDES: Dict[str, Callable] = {
     "eta": override_eta,
     "lam": override_lam,
     "eps": override_eps,
     "taus": override_taus,
     "delay": override_delay,
+    "k": override_k,
     "hetero_scale": override_hetero_scale,
 }
 

@@ -482,3 +482,113 @@ def test_delay_sweep_compiles_exactly_once(assert_max_compiles):
     spec = _delay_spec(((0.0, 1.0), (1.0, 0.5), (2.0, 1.5)), seeds=(0, 1))
     _, n = assert_max_compiles(1, run_sweep, spec)
     assert n == 1
+
+
+# --- K-of-m buffer-size axis ---------------------------------------------------
+
+def test_kofm_arrivals_matches_host_schedule_bitwise():
+    """The traced selection scan replays the numpy constructor exactly —
+    arrivals AND recorded ages, including index tie-breaks."""
+    from repro.core.async_fed import kofm_arrivals
+
+    for dist, param, m, T, k, seed in (
+        ("geometric", 0.5, 7, 9, 3, 0),
+        ("heavytail", 1.5, 11, 6, 5, 42),
+        ("deterministic", 2.0, 5, 8, 2, 7),
+        ("deterministic", 0.0, 4, 5, 4, 0),   # k = m, zero lag: synchronous
+    ):
+        host = kofm_schedule(m, T, k, dist=dist, param=param, seed=seed)
+        lag = delay_draws(
+            DELAY_DISTRIBUTIONS[dist], param, m, T, delay_axis_key(seed)
+        )
+        arrive, age = jax.jit(kofm_arrivals)(lag, float(k))
+        np.testing.assert_array_equal(np.asarray(arrive), host.arrive)
+        np.testing.assert_array_equal(np.asarray(age), host.age)
+
+
+def test_kofm_arrivals_traced_k_vmaps():
+    """K enters only a rank comparison: one trace serves every buffer size,
+    and each period admits exactly k agents."""
+    from repro.core.async_fed import kofm_arrivals
+
+    lag = delay_draws(1, 0.5, 7, 5, delay_axis_key(0))
+    arr = jax.jit(jax.vmap(lambda k: kofm_arrivals(lag, k)[0]))(
+        jnp.asarray([1.0, 3.0, 7.0])
+    )
+    np.testing.assert_array_equal(
+        np.asarray(arr).sum(axis=1), np.tile([[1.0], [3.0], [7.0]], (1, 5))
+    )
+
+
+def _k_spec(points, seeds=(0,)):
+    from repro.sweep import SweepAxis, SweepSpec
+
+    tau, epochs, elen, mb = 3, 2, 12, 4
+    n_periods = (epochs * (elen // mb)) // tau
+    sched = kofm_schedule(7, n_periods, 3, dist="geometric", param=0.5,
+                          seed=1234)
+    base = FedRLConfig(
+        env=FIGURE_EIGHT,
+        strategy=AsyncStrategy(tau=tau, schedule=sched, backend="jnp"),
+        n_epochs=epochs, epoch_len=elen, minibatch=mb,
+    )
+    return SweepSpec(
+        name="test-k", base=base, seeds=seeds,
+        vmapped=(SweepAxis(name="k", values=points),),
+    )
+
+
+def test_k_axis_requires_kofm_base():
+    from repro.sweep.overrides import override_k
+
+    cfg = FedRLConfig(env=FIGURE_EIGHT,
+                      strategy=PeriodicStrategy(tau=2, m=7),
+                      n_epochs=1, epoch_len=4, minibatch=2)
+    with pytest.raises(TypeError, match="AsyncStrategy"):
+        override_k(cfg, jnp.asarray(3.0))
+    # renewal schedules don't record a buffer size: reject
+    sched = make_schedule("geometric", 0.5, 7, 1, seed=0)
+    acfg = dataclasses.replace(
+        cfg, strategy=AsyncStrategy(tau=2, schedule=sched)
+    )
+    with pytest.raises(ValueError, match="K-of-m"):
+        override_k(acfg, jnp.asarray(3.0))
+
+
+def test_k_axis_matches_concrete_schedules():
+    """One vmapped sweep over three buffer sizes reproduces each size's
+    standalone (concretely scheduled) run — selection and numerics agree."""
+    from repro.sweep import run_sweep
+
+    points = (1.0, 3.0, 7.0)
+    spec = _k_spec(points)
+    res = run_sweep(spec)
+    swept = res.metrics["base"]["server_grad_sq_norm"]  # (3, 1, epochs)
+
+    base = spec.base
+    for d, k in enumerate(points):
+        sched = kofm_schedule(7, base.strategy.schedule.n_periods, int(k),
+                              dist="geometric", param=0.5,
+                              seed=base.eval_seed)
+        cfg = dataclasses.replace(
+            base, strategy=AsyncStrategy(tau=base.strategy.tau,
+                                         schedule=sched, backend="jnp")
+        )
+        _, m = jax.jit(lambda key, c=cfg: run_fedrl_core(c, key))(
+            jax.random.key(0)
+        )
+        np.testing.assert_allclose(
+            np.asarray(swept[d, 0]),
+            np.asarray(m["server_grad_sq_norm"]),
+            rtol=1e-5, atol=1e-7,
+        )
+
+
+def test_k_sweep_compiles_exactly_once(assert_max_compiles):
+    """Retrace pin: the buffer-size axis is value-only — every K (and every
+    seed) shares one compile."""
+    from repro.sweep import run_sweep
+
+    spec = _k_spec((1.0, 3.0, 7.0), seeds=(0, 1))
+    _, n = assert_max_compiles(1, run_sweep, spec)
+    assert n == 1

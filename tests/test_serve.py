@@ -1,0 +1,302 @@
+"""Serving engine + queue + fused inference kernel (repro.serve, policy_infer).
+
+Pins the serving contracts from DESIGN.md §16:
+
+* the fused kernel's jnp dispatch path is *bitwise* eager
+  ``rl.policy.policy_apply`` on normalized observations (and interpret mode
+  matches it to fp32 tolerance);
+* bucket padding never changes a real row's decision (bitwise, same bucket);
+* engine construction compiles exactly once per bucket and serving never
+  retraces (PR-6 retrace guard);
+* the micro-batching queue is deterministic under a seeded client schedule;
+* the restore path goes through ``checkpoint.restore`` and reproduces the
+  source engine's decisions exactly.
+"""
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.analysis.retrace import count_compiles
+from repro.kernels import dispatch
+from repro.rl.policy import init_policy, policy_apply
+from repro.serve import (
+    MicroBatchQueue,
+    ObsNorm,
+    ObsRequest,
+    ServeEngine,
+    poisson_arrivals,
+    save_for_serving,
+    simulate_clients,
+)
+
+OBS_DIM, HIDDEN, ACT_DIM = 6, 16, 2
+
+
+@pytest.fixture(scope="module")
+def params():
+    return init_policy(jax.random.key(0), OBS_DIM, hidden=HIDDEN,
+                       act_dim=ACT_DIM)
+
+
+@pytest.fixture(scope="module")
+def norm():
+    return ObsNorm(np.linspace(-1, 1, OBS_DIM).astype(np.float32),
+                   np.full(OBS_DIM, 1.5, np.float32))
+
+
+def _obs(n, seed=0):
+    return np.random.default_rng(seed).standard_normal(
+        (n, OBS_DIM)).astype(np.float32)
+
+
+def _eager_mean(params, norm, obs):
+    """The serving reference: eager policy_apply on normalized obs."""
+    with jax.disable_jit():
+        obsn = (jnp.asarray(obs, jnp.float32) - jnp.asarray(norm.mean)) \
+            / jnp.asarray(norm.std)
+        mean, _ = policy_apply({"pi": params["pi"]}, obsn)
+    return np.asarray(mean)
+
+
+# --- fused kernel parity -------------------------------------------------------
+
+def test_policy_infer_jnp_is_bitwise_eager_policy_apply(params, norm):
+    obs = _obs(37, seed=1)
+    noise = np.zeros((37, ACT_DIM), np.float32)
+    got = dispatch.policy_infer(
+        jnp.asarray(obs), params["pi"], norm.mean, norm.std,
+        jnp.asarray(noise), sample=False, backend="jnp",
+    )
+    np.testing.assert_array_equal(
+        np.asarray(got), _eager_mean(params, norm, obs)
+    )
+
+
+def test_policy_infer_interpret_matches_jnp(params, norm):
+    obs = _obs(37, seed=2)
+    noise = np.random.default_rng(3).standard_normal(
+        (37, ACT_DIM)).astype(np.float32)
+    for sample in (False, True):
+        a = dispatch.policy_infer(
+            jnp.asarray(obs), params["pi"], norm.mean, norm.std,
+            jnp.asarray(noise), sample=sample, backend="jnp",
+        )
+        # block_b 16 forces padding (37 -> 48) and a multi-block grid
+        b = dispatch.policy_infer(
+            jnp.asarray(obs), params["pi"], norm.mean, norm.std,
+            jnp.asarray(noise), sample=sample, backend="interpret",
+            block_b=16,
+        )
+        np.testing.assert_allclose(np.asarray(a), np.asarray(b), atol=1e-6)
+
+
+def test_policy_infer_sample_adds_scaled_noise(params, norm):
+    obs = _obs(8, seed=4)
+    noise = np.random.default_rng(5).standard_normal(
+        (8, ACT_DIM)).astype(np.float32)
+    mean = dispatch.policy_infer(
+        jnp.asarray(obs), params["pi"], norm.mean, norm.std,
+        jnp.zeros((8, ACT_DIM), jnp.float32), sample=False, backend="jnp",
+    )
+    sampled = dispatch.policy_infer(
+        jnp.asarray(obs), params["pi"], norm.mean, norm.std,
+        jnp.asarray(noise), sample=True, backend="jnp",
+    )
+    std = np.exp(np.asarray(params["pi"]["log_std"], np.float32))
+    np.testing.assert_allclose(
+        np.asarray(sampled), np.asarray(mean) + std * noise, rtol=1e-6
+    )
+
+
+def test_policy_infer_rejects_bad_shapes(params, norm):
+    with pytest.raises(ValueError):
+        dispatch.policy_infer(
+            jnp.zeros((4, OBS_DIM + 1)), params["pi"], norm.mean, norm.std,
+            jnp.zeros((4, ACT_DIM)), backend="jnp",
+        )
+    with pytest.raises(ValueError):
+        dispatch.policy_infer(
+            jnp.zeros((4, OBS_DIM)), params["pi"], norm.mean, norm.std,
+            jnp.zeros((3, ACT_DIM)), backend="jnp",  # noise batch mismatch
+        )
+
+
+# --- engine: buckets, padding, retrace pin -------------------------------------
+
+def test_engine_decide_matches_eager(params, norm):
+    eng = ServeEngine(params, norm=norm, buckets=(8, 32), backend="jnp")
+    obs = _obs(5, seed=6)
+    np.testing.assert_array_equal(
+        eng.decide(obs), _eager_mean(params, norm, obs)
+    )
+
+
+def test_bucket_padding_never_changes_a_decision(params, norm):
+    """Same bucket, different padding: 5 real rows padded 5->8 must decide
+    exactly like the same 5 rows arriving alongside 3 other real rows."""
+    eng = ServeEngine(params, norm=norm, buckets=(8,), backend="jnp")
+    obs5 = _obs(5, seed=7)
+    extra = _obs(3, seed=8)
+    alone = eng.decide(obs5)                                # padded 5 -> 8
+    together = eng.decide(np.concatenate([obs5, extra]))    # full bucket
+    np.testing.assert_array_equal(alone, together[:5])
+    # and across buckets of one engine the same row still decides the same
+    eng2 = ServeEngine(params, norm=norm, buckets=(8, 64), backend="jnp")
+    np.testing.assert_array_equal(eng2.decide(obs5), eng2.decide(obs5))
+
+
+def test_engine_compiles_exactly_once_per_bucket(params, norm):
+    from repro.analysis.retrace import warmup_jax
+
+    warmup_jax()
+    buckets = (8, 32, 128)
+    with count_compiles() as c:
+        eng = ServeEngine(params, norm=norm, buckets=buckets, backend="jnp")
+    assert c.count == len(buckets)
+    # the hot path itself never compiles: hit every bucket, including sizes
+    # that pad, twice
+    with count_compiles() as c:
+        for n in (1, 8, 9, 32, 33, 128, 1, 9, 33):
+            eng.decide(_obs(n, seed=n))
+    assert c.count == 0
+
+
+def test_engine_rejects_oversized_batch_and_bad_obs(params):
+    eng = ServeEngine(params, buckets=(8,))
+    with pytest.raises(ValueError, match="largest bucket"):
+        eng.decide(_obs(9))
+    with pytest.raises(ValueError, match="obs must be"):
+        eng.decide(np.zeros((4, OBS_DIM + 2), np.float32))
+
+
+def test_engine_sample_mode_is_seed_deterministic(params, norm):
+    obs = _obs(12, seed=9)
+    a = ServeEngine(params, norm=norm, buckets=(16,), mode="sample",
+                    seed=3).decide(obs)
+    b = ServeEngine(params, norm=norm, buckets=(16,), mode="sample",
+                    seed=3).decide(obs)
+    c = ServeEngine(params, norm=norm, buckets=(16,), mode="sample",
+                    seed=4).decide(obs)
+    np.testing.assert_array_equal(a, b)
+    assert not np.array_equal(a, c)
+
+
+def test_engine_load_params_hot_swaps_without_recompile(params, norm):
+    eng = ServeEngine(params, norm=norm, buckets=(8,), backend="jnp")
+    obs = _obs(4, seed=10)
+    before = eng.decide(obs)
+    new = init_policy(jax.random.key(1), OBS_DIM, hidden=HIDDEN,
+                      act_dim=ACT_DIM)
+    with count_compiles() as c:
+        eng.load_params(new)
+        after = eng.decide(obs)
+    assert c.count == 0
+    assert not np.array_equal(before, after)
+    np.testing.assert_array_equal(after, _eager_mean(new, norm, obs))
+    bad = {"pi": {k: v for k, v in new["pi"].items() if k != "w2"}}
+    with pytest.raises(ValueError, match="structure"):
+        eng.load_params(bad)
+
+
+# --- queue: coalescing determinism ---------------------------------------------
+
+def test_queue_coalesces_fifo_up_to_max_batch():
+    q = MicroBatchQueue(max_batch=4, obs_dim=OBS_DIM)
+    for i in range(6):
+        q.push(ObsRequest(client_id=i, t_arrival=float(i),
+                          obs=np.full(OBS_DIM, i, np.float32)))
+    obs, reqs = q.next_batch()
+    assert obs.shape == (4, OBS_DIM)
+    assert [r.client_id for r in reqs] == [0, 1, 2, 3]
+    obs, reqs = q.next_batch()
+    assert [r.client_id for r in reqs] == [4, 5]
+    assert q.next_batch() is None
+
+
+def test_queue_coalescing_deterministic_under_seeded_schedule():
+    """Same seeded client fleet -> identical arrival order, identical batch
+    compositions, identical decisions (with the engine's seeded noise)."""
+    def run():
+        reqs = simulate_clients(20, 3.0, 2.0, obs_dim=OBS_DIM, seed=11)
+        q = MicroBatchQueue(max_batch=8, obs_dim=OBS_DIM)
+        q.push_all(reqs)
+        batches = []
+        while (nxt := q.next_batch()) is not None:
+            obs, rs = nxt
+            batches.append((obs, [r.client_id for r in rs]))
+        return batches
+
+    a, b = run(), run()
+    assert len(a) == len(b) and len(a) > 1
+    for (obs_a, ids_a), (obs_b, ids_b) in zip(a, b):
+        assert ids_a == ids_b
+        np.testing.assert_array_equal(obs_a, obs_b)
+    # arrival order is (t_arrival, then enqueue seq): non-decreasing times
+    reqs = simulate_clients(20, 3.0, 2.0, obs_dim=OBS_DIM, seed=11)
+    times = [r.t_arrival for r in reqs]
+    assert times == sorted(times)
+
+
+def test_poisson_arrivals_seeded_and_bounded():
+    a = poisson_arrivals(5.0, 3.0, seed=2)
+    b = poisson_arrivals(5.0, 3.0, seed=2)
+    np.testing.assert_array_equal(a, b)
+    assert np.all(a >= 0.0) and np.all(a < 3.0)
+    assert np.all(np.diff(a) >= 0.0)
+    with pytest.raises(ValueError):
+        poisson_arrivals(0.0, 1.0)
+
+
+def test_queue_rejects_bad_obs():
+    q = MicroBatchQueue(max_batch=4, obs_dim=OBS_DIM)
+    with pytest.raises(ValueError):
+        q.push(ObsRequest(0, 0.0, np.zeros(OBS_DIM + 1, np.float32)))
+
+
+# --- checkpoint seam -----------------------------------------------------------
+
+def test_from_checkpoint_reproduces_decisions(params, norm, tmp_path):
+    save_for_serving(str(tmp_path), 7, params, norm=norm,
+                     metadata={"note": "test"})
+    eng = ServeEngine.from_checkpoint(str(tmp_path), buckets=(8,),
+                                      backend="jnp")
+    np.testing.assert_array_equal(eng.norm.mean, norm.mean)
+    np.testing.assert_array_equal(eng.norm.std, norm.std)
+    obs = _obs(6, seed=12)
+    src = ServeEngine(params, norm=norm, buckets=(8,), backend="jnp")
+    np.testing.assert_array_equal(eng.decide(obs), src.decide(obs))
+
+
+def test_from_checkpoint_accepts_bare_policy_tree(params, tmp_path):
+    from repro.checkpoint import save
+
+    save(str(tmp_path), 0, params)
+    eng = ServeEngine.from_checkpoint(str(tmp_path), buckets=(8,))
+    assert eng.obs_dim == OBS_DIM and eng.act_dim == ACT_DIM
+    np.testing.assert_array_equal(eng.norm.mean,
+                                  np.zeros(OBS_DIM, np.float32))
+
+
+# --- end-to-end: clients -> queue -> engine ------------------------------------
+
+def test_serving_pipeline_end_to_end_deterministic(params, norm):
+    def serve_run():
+        eng = ServeEngine(params, norm=norm, buckets=(8, 32),
+                          mode="sample", backend="jnp", seed=5)
+        q = MicroBatchQueue(max_batch=eng.max_batch(), obs_dim=OBS_DIM)
+        q.push_all(simulate_clients(16, 2.0, 2.0, obs_dim=OBS_DIM, seed=13))
+        out = {}
+        while (nxt := q.next_batch()) is not None:
+            obs, reqs = nxt
+            act = eng.decide(obs)
+            for r, a in zip(reqs, act):
+                out.setdefault(r.client_id, []).append(a)
+        return out
+
+    a, b = serve_run(), serve_run()
+    assert a.keys() == b.keys() and len(a) > 0
+    for cid in a:
+        np.testing.assert_array_equal(np.stack(a[cid]), np.stack(b[cid]))
